@@ -1,0 +1,107 @@
+"""Kernel microbenchmarks (CPU wall-time of the jnp reference path, plus a
+correctness cross-check of the Pallas body in interpret mode).
+
+On this CPU container the numbers measure the *reference* implementations
+(the compiled-Pallas path needs a real TPU); they exist to (a) track
+regressions in the oracle implementations the models actually run on CPU
+and (b) assert kernel/oracle agreement inside the bench harness too."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_prox(csv=print):
+    from repro.kernels.prox_update.ref import prox_sgd_ref
+
+    for n in (1 << 16, 1 << 20):
+        k = jax.random.PRNGKey(0)
+        theta, g, w = (jax.random.normal(kk, (n,))
+                       for kk in jax.random.split(k, 3))
+        f = jax.jit(lambda t, gg, ww: prox_sgd_ref(
+            t, gg, ww, alpha=0.01, lam=0.5))
+        us = _time(f, theta, g, w)
+        csv(f"kernels,prox_sgd,n={n},us_per_call,{us:.1f},"
+            f"gbps,{4 * n * 4 / us / 1e3:.2f}")
+
+
+def bench_attention(csv=print):
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    for s in (512, 2048):
+        k = jax.random.PRNGKey(1)
+        q = jax.random.normal(k, (1, s, 8, 64), jnp.bfloat16)
+        kv = jax.random.normal(k, (1, s, 2, 64), jnp.bfloat16)
+        f = jax.jit(lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=True))
+        us = _time(f, q, kv, kv, iters=3)
+        flops = 4 * s * s * 8 * 64 / 2  # causal
+        csv(f"kernels,attention,s={s},us_per_call,{us:.0f},"
+            f"gflops,{flops / us / 1e3:.1f}")
+
+
+def bench_wkv(csv=print):
+    from repro.kernels.rwkv6_scan.ref import wkv6_ref
+
+    k = jax.random.PRNGKey(2)
+    b, t, h, n = 1, 512, 4, 64
+    ks = jax.random.split(k, 5)
+    r, kk, v = (jax.random.normal(x, (b, t, h, n)) * 0.3 for x in ks[:3])
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, n)))
+    u = jax.random.normal(ks[4], (h, n)) * 0.1
+    f = jax.jit(lambda *a: wkv6_ref(*a)[0])
+    us = _time(f, r, kk, v, w, u, iters=3)
+    csv(f"kernels,wkv6,t={t},us_per_call,{us:.0f}")
+
+
+def bench_router(csv=print):
+    from repro.kernels.moe_router.ref import route_ref
+
+    logits = jax.random.normal(jax.random.PRNGKey(3), (4096, 64))
+    f = jax.jit(lambda l: route_ref(l, top_k=6)[0])
+    us = _time(f, logits)
+    csv(f"kernels,moe_router,t=4096xE64k6,us_per_call,{us:.1f}")
+
+
+def check_interpret_agreement(csv=print):
+    """Pallas kernel bodies (interpret) vs refs — the same check the test
+    suite sweeps, asserted once here so bench output records it."""
+    os.environ["FORCE_PALLAS_INTERPRET"] = "1"
+    try:
+        from repro.kernels.prox_update.ops import prox_sgd
+        from repro.kernels.prox_update.ref import prox_sgd_ref
+
+        k = jax.random.PRNGKey(4)
+        theta, g, w = (jax.random.normal(kk, (2048,))
+                       for kk in jax.random.split(k, 3))
+        a, _ = prox_sgd(theta, g, w, alpha=0.01, lam=0.5)
+        b, _ = prox_sgd_ref(theta, g, w, alpha=0.01, lam=0.5)
+        ok = bool(jnp.allclose(a, b, atol=1e-6))
+        csv(f"kernels,interpret_agreement,prox_sgd,allclose,{ok}")
+        return [] if ok else ["prox interpret mismatch"]
+    finally:
+        os.environ.pop("FORCE_PALLAS_INTERPRET", None)
+
+
+def main(quick=True, csv=print):
+    bench_prox(csv)
+    bench_attention(csv)
+    bench_wkv(csv)
+    bench_router(csv)
+    return check_interpret_agreement(csv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Serving throughput on CPU (reduced model): prefill tokens/s and decode
+steps/s for a dense arch and an SSM arch — exercises the same
+prefill/decode units the decode-shape dry-runs lower at scale."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+
+
+def bench_arch(arch: str, csv=print, batch=4, prompt=64, new=16):
+    cfg = get_reduced_config(arch).replace(vocab_size=256)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg=cfg, params=params, max_len=prompt + new)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt), 0, 256)
+    out = eng.generate({"tokens": toks}, max_new_tokens=2)  # warmup/compile
+    t0 = time.perf_counter()
+    out = eng.generate({"tokens": toks}, max_new_tokens=new)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    tput = batch * new / dt
+    csv(f"serving,{arch},batch={batch} prompt={prompt} new={new},"
+        f"decode_tok_per_s,{tput_fmt(tput)}")
+    return out
+
+
+def tput_fmt(x):
+    return f"{x:.1f}"
+
+
+def main(quick=True, csv=print):
+    for arch in ("phi3-mini-3.8b", "rwkv6-7b"):
+        bench_arch(arch, csv=csv)
+    return []
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Fig 2: convergence of PerMFL vs multi-tier SOTA (h-SGD, L2GD) — personal
+and global accuracy per global round, strongly convex + non-convex."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.train import fl_trainer as FT
+
+from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
+                                  make_fed_data, model_for, to_jax)
+
+
+def run(dataset="fmnist", convex=True, rounds=12, csv=print, quick=True):
+    small = quick and not convex
+    # CNN cells are CPU-heavy: shrink in quick mode (orderings are
+    # scale-stable); --full restores the paper's 4x10 / K=5 / L=10.
+    hp = dataclasses.replace(HP_DEFAULT, k_team=3, l_local=5) if small \
+        else HP_DEFAULT
+    cfg = model_for(dataset, convex)
+    fd = make_fed_data(dataset, seed=1, m=2 if small else 4,
+                       n=5 if small else 10,
+                       samples_per_device=24 if small else 48)
+    tr, va = to_jax(fd)
+    loss, met = fns_for(cfg)
+    p0 = init_model(cfg)
+    m, n = fd.m_teams, fd.n_devices
+    lr = 0.03 if convex else 0.01
+
+    curves = {}
+    r = FT.run_permfl(p0, tr, va, loss_fn=loss, metric_fn=met, hp=hp,
+                      rounds=rounds, m=m, n=n)
+    curves["permfl_pm"] = r.pm_acc
+    curves["permfl_gm"] = r.gm_acc
+    r = FT.run_hsgd(p0, tr, va, loss_fn=loss, metric_fn=met, lr=lr,
+                    k_team=hp.k_team, l_local=hp.l_local,
+                    rounds=rounds, m=m, n=n)
+    curves["hsgd_gm"] = r.gm_acc
+    r = FT.run_l2gd(p0, tr, va, loss_fn=loss, metric_fn=met, lr=lr,
+                    lam_c=0.5, lam_g=0.5, k_team=hp.k_team,
+                    l_local=hp.l_local, rounds=rounds, m=m, n=n)
+    curves["l2gd_pm"] = r.pm_acc
+
+    mdl = "mclr" if convex else "cnn"
+    for name, hist in curves.items():
+        for t, acc in enumerate(hist):
+            csv(f"fig2,{dataset},{mdl},{name},{t},{acc:.4f}")
+
+    # reproduction target ("the convergence of PerMFL(PM) is equivalent to
+    # DemLearn and faster than h-SGD and AL2GD", §4.1.2): PerMFL(PM)
+    # reaches 90% of its final accuracy within one round of L2GD(PM) —
+    # the one-round slack absorbs round-to-round noise at quick scale.
+    def t90(hist):
+        target = 0.9 * max(hist)
+        return next(i for i, a in enumerate(hist) if a >= target)
+
+    ok = t90(curves["permfl_pm"]) <= t90(curves["l2gd_pm"]) + 1
+    csv(f"# fig2 {dataset}/{mdl}: permfl t90={t90(curves['permfl_pm'])} "
+        f"l2gd t90={t90(curves['l2gd_pm'])} equivalent_or_faster={ok}")
+    return ok
+
+
+def main(quick=True, csv=print):
+    oks = []
+    for convex in (True, False):
+        oks.append(run("fmnist", convex, rounds=12 if quick else 40,
+                       csv=csv, quick=quick))
+    return [] if all(oks) else ["fig2 convergence ranking"]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Generate the §Dry-run and §Roofline markdown tables in EXPERIMENTS.md
+from results/dryrun_all.json (single source of truth)."""
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RESULTS = os.path.join(HERE, "..", "results", "dryrun_all.json")
+
+MITIGATION = {
+    # one sentence per (dominant-term x shape kind) on what moves it down
+    ("memory", "train"): "chunk recurrent scans / fuse elementwise chains so "
+    "activations stream once; remat already bounds residency",
+    ("memory", "prefill"): "fuse attention epilogues; keep bf16 end-to-end "
+    "through the mixer instead of f32 staging",
+    ("memory", "decode"): "decode is KV-cache-read bound by construction; "
+    "quantize cache to int8 or shard KV heads wider",
+    ("collective", "train"): "reduce-scatter gradients instead of all-reduce "
+    "and overlap FSDP all-gathers with the previous layer's compute",
+    ("collective", "prefill"): "shift TP boundaries so activations cross the "
+    "mesh once per block (Megatron-SP style)",
+    ("collective", "decode"): "replicate the small per-step state instead of "
+    "re-gathering it every token",
+    ("compute", "train"): "already MXU-bound: raise arithmetic intensity via "
+    "larger per-device batch",
+    ("compute", "prefill"): "already MXU-bound",
+    ("compute", "decode"): "already MXU-bound",
+}
+
+
+def fmt_bytes(b):
+    return f"{(b or 0) / 1e9:.1f}"
+
+
+def gen(csv=print):
+    recs = json.load(open(RESULTS))
+    shape_kind = {"train_4k": "train", "prefill_32k": "prefill",
+                  "decode_32k": "decode", "long_500k": "decode"}
+
+    lines = []
+    lines.append("### Dry-run matrix (all 10 archs x 4 shapes x 2 meshes)\n")
+    lines.append("| arch | shape | mesh | status | lower+compile (s) | "
+                 "HLO GFLOPs/dev | peak GB/dev | collective GB/dev |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"SKIP (by design) | — | — | — | — |")
+            continue
+        t = f"{r['lower_s'] + r['compile_s']:.1f}"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {t} | "
+            f"{r['hlo_flops'] / 1e9:.0f} | "
+            f"{fmt_bytes(r['bytes_per_device']['peak'])} | "
+            f"{fmt_bytes(r['collective_bytes'])} |")
+
+    lines.append("\n### Roofline (single-pod 16x16, per device)\n")
+    lines.append("| arch | shape | compute (s) | memory (s) | collective (s)"
+                 " | dominant | useful FLOP ratio | mitigation |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != "pod_16x16":
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | {r.get('reason', '')[:60]} |")
+            continue
+        kind = shape_kind[r["shape"]]
+        mit = MITIGATION.get((r["dominant"], kind), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | {mit} |")
+    baseline_path = os.path.join(HERE, "..", "results",
+                                 "dryrun_baseline.json")
+    if os.path.exists(baseline_path):
+        base = {(r["arch"], r["shape"]): r
+                for r in json.load(open(baseline_path))
+                if r["mesh"] == "pod_16x16" and r["status"] == "ok"}
+        opt = {(r["arch"], r["shape"]): r for r in recs
+               if r["mesh"] == "pod_16x16" and r["status"] == "ok"}
+        lines.append("\n### Paper-faithful baseline vs optimized "
+                     "(single-pod, pairs that moved >5%)\n")
+        lines.append("| arch | shape | term | baseline (s) | optimized (s) "
+                     "| speedup |")
+        lines.append("|---|---|---|---|---|---|")
+        for k in sorted(base):
+            if k not in opt:
+                continue
+            for term in ("compute_s", "memory_s", "collective_s"):
+                b, o = base[k][term], opt[k][term]
+                if b > 0 and abs(b - o) / b > 0.05 and b > 1e-4:
+                    lines.append(
+                        f"| {k[0]} | {k[1]} | {term[:-2]} | {b:.3e} | "
+                        f"{o:.3e} | {b / o:.1f}x |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(gen())

@@ -1,0 +1,45 @@
+"""§Roofline table: read the dry-run sweep artifact and print the
+three-term roofline per (arch x shape) on the single-pod mesh, plus the
+dominant term and the MODEL_FLOPS/HLO_FLOPs useful-compute ratio."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_all.json")
+
+
+def load(mesh="pod_16x16"):
+    recs = json.load(open(RESULTS))
+    return [r for r in recs if r["mesh"] == mesh]
+
+
+def main(quick=True, csv=print):
+    if not os.path.exists(RESULTS):
+        csv("# roofline: results/dryrun_all.json missing — run "
+            "`python -m repro.launch.dryrun --all --out results/dryrun_all.json`")
+        return ["dry-run artifact missing"]
+    csv("roofline,arch,shape,compute_s,memory_s,collective_s,dominant,"
+        "useful_ratio,peak_gb_per_dev")
+    fails = []
+    for r in load():
+        if r["status"] == "skipped":
+            csv(f"roofline,{r['arch']},{r['shape']},,,,SKIPPED({r['reason'][:40]}),,")
+            continue
+        if r["status"] != "ok":
+            fails.append((r["arch"], r["shape"]))
+            continue
+        peak = (r["bytes_per_device"]["peak"] or 0) / 1e9
+        csv(f"roofline,{r['arch']},{r['shape']},{r['compute_s']:.3e},"
+            f"{r['memory_s']:.3e},{r['collective_s']:.3e},{r['dominant']},"
+            f"{r['useful_ratio']:.2f},{peak:.2f}")
+    # multi-pod sanity: every combo must also be ok on 2x16x16
+    for r in load("multipod_2x16x16"):
+        if r["status"] == "FAILED":
+            fails.append(("multipod", r["arch"], r["shape"]))
+    return fails
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: PerMFL on a non-IID federated image problem in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's setting — 4 teams x 10 devices, each device holding two
+classes — runs a few PerMFL global rounds, and prints the three models'
+accuracies (personalized / team / global) per round.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_mclr import CONFIG as MCLR
+from repro.core.permfl import PerMFLHParams
+from repro.data.federated import partition_label_skew
+from repro.data.synthetic import make_dataset
+from repro.models import paper_models as PM
+from repro.train.fl_trainer import run_permfl
+
+
+def main():
+    rng = np.random.default_rng(0)
+    x, y = make_dataset("mnist", rng, n_per_class=400)
+    fed = partition_label_skew(rng, x, y, m_teams=4, n_devices=10,
+                               classes_per_device=2, samples_per_device=48)
+    print(f"teams={fed.m_teams} devices/team={fed.n_devices} "
+          f"train shape={fed.train_x.shape}")
+
+    params = PM.init_params(jax.random.PRNGKey(0), MCLR)
+    hp = PerMFLHParams(alpha=0.01, eta=0.03, beta=0.6, lam=0.5, gamma=1.5,
+                       k_team=5, l_local=10)   # paper §4.1.4 values
+    train = {"x": jnp.asarray(fed.train_x), "y": jnp.asarray(fed.train_y)}
+    val = {"x": jnp.asarray(fed.val_x), "y": jnp.asarray(fed.val_y)}
+
+    res = run_permfl(
+        params, train, val,
+        loss_fn=lambda p, b: PM.loss_fn(p, MCLR, b),
+        metric_fn=lambda p, b: PM.accuracy(p, MCLR, b),
+        hp=hp, rounds=10, m=fed.m_teams, n=fed.n_devices)
+
+    for t, (pm, tm, gm) in enumerate(zip(res.pm_acc, res.tm_acc,
+                                         res.gm_acc)):
+        print(f"round {t:2d}: PM={pm:.3f} TM={tm:.3f} GM={gm:.3f}")
+    print(f"\nPersonalized beats global by "
+          f"{100 * (res.pm_acc[-1] - res.gm_acc[-1]):.1f} points "
+          f"({res.seconds:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

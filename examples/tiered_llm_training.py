@@ -1,0 +1,80 @@
+"""PerMFL at LLM scale — the production "tier mode" (DESIGN.md §2).
+
+    PYTHONPATH=src python examples/tiered_llm_training.py --arch phi3-mini-3.8b
+
+Runs the tiered PerMFL round (device prox steps -> team update -> server
+update) on a REDUCED variant of an assigned architecture, with federated
+LM data where each team has its own topic distribution — the LM analogue
+of the paper's label skew. Shows personalized perplexity < global
+perplexity on each team's distribution.
+
+At production scale the same `make_tier_round` step is what
+`repro.launch.dryrun` lowers onto the (pod, data, model) mesh: pods play
+teams, DCN carries only the per-round server aggregate.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro.data.tokens import federated_lm_data
+from repro.models import model as M
+from repro.train.trainer import make_tier_round
+
+VOCAB = 256
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b", choices=ARCH_IDS)
+    ap.add_argument("--teams", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--seq-len", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced_config(args.arch).replace(vocab_size=VOCAB)
+    data = federated_lm_data(np.random.default_rng(0), VOCAB,
+                             m_teams=args.teams, n_devices=1,
+                             seq_len=args.seq_len, seqs_per_device=8)
+
+    key = jax.random.PRNGKey(0)
+    x = M.init_params(key, cfg)                      # global model
+    thetas = [jax.tree.map(jnp.copy, x) for _ in range(args.teams)]
+    ws = [jax.tree.map(jnp.copy, x) for _ in range(args.teams)]
+
+    round_fn = jax.jit(make_tier_round(
+        cfg, alpha=3e-3, lam=0.5, gamma=1.5, eta=0.03, beta=0.3, l_local=2))
+
+    def team_batch(i):
+        toks = jnp.asarray(data["tokens"][i, 0])     # (S, seq)
+        tgts = jnp.asarray(data["targets"][i, 0])
+        return {"tokens": toks, "targets": tgts}
+
+    loss_of = jax.jit(lambda p, b: M.loss_fn(p, cfg, b))
+
+    for t in range(args.rounds):
+        xs = []
+        for i in range(args.teams):                  # pods, in production
+            thetas[i], ws[i], xi, metrics = round_fn(
+                thetas[i], ws[i], x, team_batch(i))
+            xs.append(xi)
+        # server aggregation over the `pod` axis (here: a mean)
+        x = jax.tree.map(lambda *leaves: sum(leaves) / len(leaves), *xs)
+        if t % 10 == 0 or t == args.rounds - 1:
+            pm = np.mean([float(loss_of(thetas[i], team_batch(i)))
+                          for i in range(args.teams)])
+            gm = np.mean([float(loss_of(x, team_batch(i)))
+                          for i in range(args.teams)])
+            print(f"round {t:3d}: personalized loss {pm:.4f} "
+                  f"(ppl {np.exp(pm):7.1f})   global loss {gm:.4f} "
+                  f"(ppl {np.exp(gm):7.1f})")
+
+    assert pm <= gm + 1e-6, "personalized should fit team topics at least as well"
+    print("\npersonalized models fit their team's topic better than the "
+          "global model — the paper's mechanism, at LM scale.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, PAPER_IDS, InputShape,
+                                ModelConfig, MoEConfig, PaperModelConfig,
+                                active_param_count, get_config,
+                                get_reduced_config, param_count,
+                                reduce_config)
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "PAPER_IDS", "InputShape", "ModelConfig",
+    "MoEConfig", "PaperModelConfig", "active_param_count", "get_config",
+    "get_reduced_config", "param_count", "reduce_config",
+]

@@ -1,0 +1,7 @@
+from repro.core.permfl import (PerMFLHParams, PerMFLState, eval_stacked,
+                               init_state, permfl_round)
+from repro.core import baselines, participation, team_formation, theory
+
+__all__ = ["PerMFLHParams", "PerMFLState", "eval_stacked", "init_state",
+           "permfl_round", "baselines", "participation", "team_formation",
+           "theory"]

@@ -1,0 +1,206 @@
+"""Baselines from Table 1 / Fig 2, in the same stacked-FL representation.
+
+All operate on data with leading (M, N, ...) so results are directly
+comparable to PerMFL on identical partitions. Conventional (single-tier)
+methods treat all M*N devices as one flat pool.
+
+  FedAvg      [1]  — local SGD + global averaging (GM).
+  Per-FedAvg  [13] — MAML-style: the PM is one adaptation step from GM.
+  pFedMe      [11] — Moreau-envelope personalization, single tier
+                     (PerMFL with M=1 team recovers its structure).
+  Ditto       [10] — FedAvg GM + per-device PM trained with a prox term
+                     toward the GM.
+  h-SGD       [5]  — hierarchical local SGD: device steps, team average
+                     every L steps, global average every K*L (GM).
+  L2GD        [18] — global/cluster/personal mixture; we implement the
+                     synchronous variant of the loopless method (the paper's
+                     AL2GD is asynchronous — deviation noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _bcast(tree, lead):
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[(None,) * len(lead)],
+                                   lead + x.shape).copy(), tree)
+
+
+def _mean01(tree):
+    return jax.tree.map(lambda x: x.mean(axis=(0, 1)), tree)
+
+
+def _sgd_steps(theta, data, grad_fn, lr, steps):
+    def one(_, th):
+        g = jax.vmap(jax.vmap(grad_fn))(th, data)
+        return jax.tree.map(lambda t, gg: t - lr * gg, th, g)
+    return jax.lax.fori_loop(0, steps, one, theta)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "lr", "local_steps",
+                                              "m", "n"))
+def fedavg_round(x, data, *, loss_fn: Callable, lr: float, local_steps: int,
+                 m: int, n: int):
+    grad_fn = jax.grad(loss_fn)
+    theta = _bcast(x, (m, n))
+    theta = _sgd_steps(theta, data, grad_fn, lr, local_steps)
+    return _mean01(theta)
+
+
+# ---------------------------------------------------------------------------
+# Per-FedAvg (first-order MAML)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "lr", "inner_lr",
+                                              "local_steps", "m", "n"))
+def perfedavg_round(x, data, *, loss_fn: Callable, lr: float,
+                    inner_lr: float, local_steps: int, m: int, n: int):
+    grad_fn = jax.grad(loss_fn)
+
+    def meta_loss(params, batch):
+        g = grad_fn(params, batch)
+        adapted = jax.tree.map(lambda p, gg: p - inner_lr * gg, params, g)
+        return loss_fn(adapted, batch)
+
+    meta_grad = jax.grad(meta_loss)
+    theta = _bcast(x, (m, n))
+
+    def one(_, th):
+        g = jax.vmap(jax.vmap(meta_grad))(th, data)
+        return jax.tree.map(lambda t, gg: t - lr * gg, th, g)
+
+    theta = jax.lax.fori_loop(0, local_steps, one, theta)
+    return _mean01(theta)
+
+
+def perfedavg_personalize(x, data, *, loss_fn, inner_lr, m: int, n: int):
+    """PM = one adaptation step of the converged GM on each device."""
+    grad_fn = jax.grad(loss_fn)
+    theta = _bcast(x, (m, n))
+    g = jax.vmap(jax.vmap(grad_fn))(theta, data)
+    return jax.tree.map(lambda t, gg: t - inner_lr * gg, theta, g)
+
+
+# ---------------------------------------------------------------------------
+# pFedMe
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "loss_fn", "lr", "inner_lr", "lam", "inner_steps", "local_rounds",
+    "m", "n"))
+def pfedme_round(x, data, *, loss_fn: Callable, lr: float, inner_lr: float,
+                 lam: float, inner_steps: int, local_rounds: int,
+                 m: int, n: int):
+    """Returns (new_x, theta) — theta are the personalized models."""
+    grad_fn = jax.grad(loss_fn)
+    w = _bcast(x, (m, n))     # local copies of the global model
+
+    def local_round(_, w):
+        # solve the Moreau subproblem approximately from w
+        def prox_steps(i, th):
+            g = jax.vmap(jax.vmap(grad_fn))(th, data)
+            return jax.tree.map(
+                lambda t, gg, ww: t - inner_lr * (gg + lam * (t - ww)),
+                th, g, w)
+        theta = jax.lax.fori_loop(0, inner_steps, prox_steps, w)
+        # w <- w - lr * lam * (w - theta)
+        return jax.tree.map(lambda ww, th: ww - lr * lam * (ww - th),
+                            w, theta)
+
+    w = jax.lax.fori_loop(0, local_rounds, local_round, w)
+    new_x = _mean01(w)
+    # final personalized models from the new anchor
+    def prox_steps(i, th):
+        g = jax.vmap(jax.vmap(grad_fn))(th, data)
+        return jax.tree.map(
+            lambda t, gg, ww: t - inner_lr * (gg + lam * (t - ww)), th, g, w)
+    theta = jax.lax.fori_loop(0, inner_steps, prox_steps, w)
+    return new_x, theta
+
+
+# ---------------------------------------------------------------------------
+# Ditto
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "lr", "lam",
+                                              "local_steps", "m", "n"))
+def ditto_round(x, v, data, *, loss_fn: Callable, lr: float, lam: float,
+                local_steps: int, m: int, n: int):
+    """Returns (new_x, new_v). v: personal models (M, N, ...)."""
+    grad_fn = jax.grad(loss_fn)
+    theta = _bcast(x, (m, n))
+    theta = _sgd_steps(theta, data, grad_fn, lr, local_steps)
+    new_x = _mean01(theta)
+
+    anchor = _bcast(x, (m, n))
+    def one(_, vv):
+        g = jax.vmap(jax.vmap(grad_fn))(vv, data)
+        return jax.tree.map(
+            lambda t, gg, a: t - lr * (gg + lam * (t - a)), vv, g, anchor)
+    new_v = jax.lax.fori_loop(0, local_steps, one, v)
+    return new_x, new_v
+
+
+# ---------------------------------------------------------------------------
+# h-SGD (hierarchical FedAvg)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "lr", "k_team",
+                                              "l_local", "m", "n"))
+def hsgd_round(x, data, *, loss_fn: Callable, lr: float, k_team: int,
+               l_local: int, m: int, n: int):
+    grad_fn = jax.grad(loss_fn)
+    w = _bcast(x, (m,))
+
+    def team_iter(_, w):
+        theta = jax.tree.map(
+            lambda wl: jnp.broadcast_to(wl[:, None],
+                                        (m, n) + wl.shape[1:]).copy(), w)
+        theta = _sgd_steps(theta, data, grad_fn, lr, l_local)
+        return jax.tree.map(lambda t: t.mean(axis=1), theta)
+
+    w = jax.lax.fori_loop(0, k_team, team_iter, w)
+    return jax.tree.map(lambda wl: wl.mean(axis=0), w)
+
+
+# ---------------------------------------------------------------------------
+# L2GD (synchronous variant of the cluster/loopless method)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "loss_fn", "lr", "lam_c", "lam_g", "k_team", "l_local", "m", "n"))
+def l2gd_round(x, theta, data, *, loss_fn: Callable, lr: float,
+               lam_c: float, lam_g: float, k_team: int, l_local: int,
+               m: int, n: int):
+    """Three models: global x, cluster c_i = team mean of theta,
+    personal theta. Devices mix gradient steps with pulls toward the
+    cluster mean; clusters pull toward the global mean.
+    Returns (new_x, new_theta)."""
+    grad_fn = jax.grad(loss_fn)
+
+    def team_iter(_, th):
+        cluster = jax.tree.map(lambda t: t.mean(axis=1, keepdims=True), th)
+        def local(_, th):
+            g = jax.vmap(jax.vmap(grad_fn))(th, data)
+            return jax.tree.map(
+                lambda t, gg, c: t - lr * (gg + lam_c * (t - c)),
+                th, g, cluster)
+        th = jax.lax.fori_loop(0, l_local, local, th)
+        # cluster pull toward global
+        cl = jax.tree.map(lambda t: t.mean(axis=1, keepdims=True), th)
+        return jax.tree.map(
+            lambda t, c, xl: t - lr * lam_g * (c - xl[None, None]),
+            th, cl, x)
+
+    theta = jax.lax.fori_loop(0, k_team, team_iter, theta)
+    new_x = _mean01(theta)
+    return new_x, theta

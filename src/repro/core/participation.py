@@ -1,0 +1,41 @@
+"""Team/device participation sampling — the paper's four modes (§3.1):
+
+  1. full teams, full devices
+  2. full teams, partial devices
+  3. partial teams, full devices
+  4. partial teams, partial devices
+
+Masks are sampled per global round; at least one team (and one device per
+participating team) is always kept so the round is well-defined.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_masks(key, m_teams: int, n_devices: int, *,
+                 team_frac: float = 1.0, device_frac: float = 1.0):
+    """Returns (team_mask (M,), device_mask (M, N)) f32 in {0, 1}."""
+    k1, k2 = jax.random.split(key)
+    n_t = max(1, round(m_teams * team_frac))
+    n_d = max(1, round(n_devices * device_frac))
+
+    t_perm = jax.random.permutation(k1, m_teams)
+    team_mask = jnp.zeros((m_teams,), jnp.float32).at[t_perm[:n_t]].set(1.0)
+
+    def one_team(k):
+        perm = jax.random.permutation(k, n_devices)
+        return jnp.zeros((n_devices,), jnp.float32).at[perm[:n_d]].set(1.0)
+
+    device_mask = jax.vmap(one_team)(jax.random.split(k2, m_teams))
+    device_mask = device_mask * team_mask[:, None]
+    return team_mask, device_mask
+
+
+MODES = {
+    "full": dict(team_frac=1.0, device_frac=1.0),
+    "partial_devices": dict(team_frac=1.0, device_frac=0.5),
+    "partial_teams": dict(team_frac=0.5, device_frac=1.0),
+    "partial_both": dict(team_frac=0.5, device_frac=0.5),
+}

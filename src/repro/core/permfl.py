@@ -1,0 +1,193 @@
+"""PerMFL — Algorithm 1 of the paper, as a fully-jitted stacked simulator.
+
+State layout ("stacked FL"): device models are a pytree whose leaves carry
+leading axes (M, N, ...) — M teams x N devices — team models carry (M, ...),
+and the global model is unstacked. Device-local steps are vmapped over
+(M, N); team aggregation is a (masked) mean over N; global aggregation a
+(masked) mean over M. Under pjit the (M, N) axes shard over the
+(pod, data) mesh axes, which maps the paper's WAN/LAN communication
+hierarchy onto DCN/ICI (DESIGN.md §2).
+
+One call = one global round t:
+
+    w_i^{t,0} = x^t
+    repeat K:  theta^{k,0} = w^k;  L prox-SGD device steps (eq. 4, the
+               fused kernel);  team update (eq. 9)
+    x^{t+1} = (1 - beta*gamma) x^t + beta*gamma * mean_i w_i^{t,K}  (eq. 13)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prox_update import prox_sgd_tree
+
+
+@dataclass(frozen=True)
+class PerMFLHParams:
+    alpha: float = 0.01      # device LR
+    eta: float = 0.03        # team LR
+    beta: float = 0.6        # server LR
+    lam: float = 0.5         # device<->team proximity (lambda)
+    gamma: float = 1.5       # team<->global proximity (gamma)
+    k_team: int = 10         # K: team iterations per global round
+    l_local: int = 20        # L: device iterations per team iteration
+    momentum: float = 0.0    # optional heavy-ball on the device step
+    weight_decay: float = 0.0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class PerMFLState:
+    """x: global model; w: (M, ...); theta: (M, N, ...)."""
+    x: Any
+    w: Any
+    theta: Any
+    round: jnp.ndarray  # scalar i32
+
+    def tree_flatten(self):
+        return (self.x, self.w, self.theta, self.round), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_state(params, m_teams: int, n_devices: int) -> PerMFLState:
+    """All tiers initialized from a single model (Algorithm 1, init)."""
+    def bc(x, lead):
+        return jnp.broadcast_to(x[(None,) * len(lead)], lead + x.shape).copy()
+    w = jax.tree.map(lambda p: bc(p, (m_teams,)), params)
+    theta = jax.tree.map(lambda p: bc(p, (m_teams, n_devices)), params)
+    return PerMFLState(x=params, w=w, theta=theta, round=jnp.int32(0))
+
+
+def _masked_mean(tree, mask, axis, fallback=None):
+    """Mean over `axis` weighted by mask; if the mask is all-zero along the
+    axis, fall back to `fallback` (or the unmasked mean)."""
+    denom = mask.sum(axis=axis)
+
+    def leaf(x, fb):
+        extra = x.ndim - mask.ndim
+        m = mask.reshape(mask.shape + (1,) * extra)
+        num = (x * m).sum(axis=axis)
+        d = denom.reshape(denom.shape + (1,) * (num.ndim - denom.ndim))
+        mean = num / jnp.maximum(d, 1.0)
+        if fb is not None:
+            take = (d > 0)
+            mean = jnp.where(take, mean, fb)
+        return mean
+
+    if fallback is None:
+        return jax.tree.map(lambda x: leaf(x, None), tree)
+    return jax.tree.map(leaf, tree, fallback)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("loss_fn", "hp", "m_teams", "n_devices"))
+def permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
+                 loss_fn: Callable, *, m_teams: int, n_devices: int,
+                 team_mask=None, device_mask=None):
+    """One global round.
+
+    data: pytree of arrays with leading (M, N, ...) — each device's (full)
+        batch; loss_fn(params, device_batch) -> scalar.
+    team_mask: (M,) f32 in {0,1}; device_mask: (M, N) f32. None = full
+        participation (paper's default mode 1).
+    """
+    if team_mask is None:
+        team_mask = jnp.ones((m_teams,), jnp.float32)
+    if device_mask is None:
+        device_mask = jnp.ones((m_teams, n_devices), jnp.float32)
+
+    x = state.x
+    grad_fn = jax.grad(loss_fn)
+    per_device_grad = jax.vmap(jax.vmap(grad_fn))
+
+    def device_loop(theta, w):
+        """L prox-SGD steps (eq. 4), vmapped over (M, N)."""
+        anchor = jax.tree.map(
+            lambda wl: jnp.broadcast_to(
+                wl[:, None], (m_teams, n_devices) + wl.shape[1:]), w)
+
+        def one_step(_, carry):
+            theta, mom = carry
+            g = per_device_grad(theta, data)
+            theta, mom = prox_sgd_tree(
+                theta, g, anchor, mom, alpha=hp.alpha, lam=hp.lam,
+                momentum=hp.momentum, weight_decay=hp.weight_decay)
+            return theta, mom
+
+        mom0 = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), theta)
+        theta, _ = jax.lax.fori_loop(0, hp.l_local, one_step, (theta, mom0))
+        return theta
+
+    def team_iter(k, carry):
+        """One team round: re-init theta from w, L device steps, eq. 9."""
+        w, _ = carry
+        theta = jax.tree.map(
+            lambda wl: jnp.broadcast_to(
+                wl[:, None], (m_teams, n_devices) + wl.shape[1:]).copy(), w)
+        theta = device_loop(theta, w)
+        theta_bar = _masked_mean(theta, device_mask, axis=1, fallback=w)
+        c = 1.0 - hp.eta * hp.lam - hp.eta * hp.gamma
+        w = jax.tree.map(
+            lambda wl, xl, tb: c * wl + hp.eta * hp.gamma * xl[None]
+            + hp.lam * hp.eta * tb,
+            w, x, theta_bar)
+        return w, theta
+
+    # w_i^{t,0} = x^t
+    w0 = jax.tree.map(
+        lambda xl: jnp.broadcast_to(xl[None], (m_teams,) + xl.shape).copy(), x)
+    theta0 = state.theta
+    w, theta = jax.lax.fori_loop(0, hp.k_team, team_iter, (w0, theta0))
+
+    # eq. 13 (global) — non-participating teams keep w out of the average,
+    # and also do not move (their w snaps back to x next round anyway).
+    w_eff = jax.tree.map(
+        lambda wl, old: jnp.where(
+            team_mask.reshape((-1,) + (1,) * (wl.ndim - 1)) > 0, wl, old),
+        w, state.w)
+    w_bar = _masked_mean(w_eff, team_mask, axis=0,
+                         fallback=x)
+    x_new = jax.tree.map(
+        lambda xl, wb: (1.0 - hp.beta * hp.gamma) * xl
+        + hp.beta * hp.gamma * wb, x, w_bar)
+
+    # devices/teams that did not participate keep their previous theta/w
+    th_eff = jax.tree.map(
+        lambda t_new, t_old: jnp.where(
+            device_mask.reshape(device_mask.shape +
+                                (1,) * (t_new.ndim - 2)) > 0, t_new, t_old),
+        theta, state.theta)
+
+    return PerMFLState(x=x_new, w=w_eff, theta=th_eff,
+                       round=state.round + 1)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation helpers
+# ---------------------------------------------------------------------------
+
+def eval_stacked(state: PerMFLState, data, metric_fn, *, which: str = "pm"):
+    """metric_fn(params, batch) -> scalar; data leading (M, N, ...).
+
+    which: 'pm'  — per-device personalized models theta_ij on their data
+           'tm'  — team models w_i on each device's data
+           'gm'  — global model x on each device's data
+    Returns (M, N) matrix of metric values.
+    """
+    if which == "pm":
+        return jax.vmap(jax.vmap(metric_fn))(state.theta, data)
+    if which == "tm":
+        f = jax.vmap(lambda w, d: jax.vmap(lambda dd: metric_fn(w, dd))(d))
+        return f(state.w, data)
+    if which == "gm":
+        return jax.vmap(jax.vmap(lambda d: metric_fn(state.x, d)))(data)
+    raise ValueError(which)

@@ -1,0 +1,9 @@
+from repro.data import federated, synthetic, tokens
+from repro.data.federated import FederatedData, partition_label_skew, \
+    partition_tabular
+from repro.data.synthetic import make_dataset, synthetic_images, \
+    synthetic_tabular
+
+__all__ = ["federated", "synthetic", "tokens", "FederatedData",
+           "partition_label_skew", "partition_tabular", "make_dataset",
+           "synthetic_images", "synthetic_tabular"]

@@ -1,0 +1,105 @@
+"""Non-IID federated partitioning + team assembly (paper §4 / §D.2.7).
+
+The paper's dissemination: each device holds data from at most
+``classes_per_device`` classes (2 for MNIST-family, 3 for FEMNIST/CIFAR100);
+devices are then grouped into teams, either randomly or per a team-formation
+label-pool strategy (worst/average case, §4.1.4). Output is the *stacked*
+layout PerMFL consumes: arrays with leading (M, N, S).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.team_formation import label_pools
+
+
+@dataclass
+class FederatedData:
+    """Stacked train/val tensors: x (M,N,S,...) f32, y (M,N,S) i32."""
+    train_x: np.ndarray
+    train_y: np.ndarray
+    val_x: np.ndarray
+    val_y: np.ndarray
+
+    @property
+    def m_teams(self):
+        return self.train_x.shape[0]
+
+    @property
+    def n_devices(self):
+        return self.train_x.shape[1]
+
+    def train_batch(self):
+        return {"x": self.train_x, "y": self.train_y}
+
+    def val_batch(self):
+        return {"x": self.val_x, "y": self.val_y}
+
+
+def partition_label_skew(rng: np.random.Generator, x, y, *, m_teams: int,
+                         n_devices: int, classes_per_device: int = 2,
+                         samples_per_device: int = 64,
+                         strategy: str = "random",
+                         val_fraction: float = 0.25) -> FederatedData:
+    """Give each device `classes_per_device` classes drawn from its team's
+    label pool, then `samples_per_device` samples of those classes
+    (3:1 train/val split as in the paper)."""
+    num_classes = int(y.max()) + 1
+    pools = label_pools(strategy, m_teams, num_classes)
+    by_class = {c: np.where(y == c)[0] for c in range(num_classes)}
+    for c in by_class:
+        by_class[c] = rng.permutation(by_class[c])
+    cursor = {c: 0 for c in range(num_classes)}
+
+    def take(c, n):
+        idx = by_class[c]
+        start = cursor[c]
+        out = [idx[(start + i) % len(idx)] for i in range(n)]
+        cursor[c] = (start + n) % len(idx)
+        return np.array(out)
+
+    xs = np.zeros((m_teams, n_devices, samples_per_device) + x.shape[1:],
+                  np.float32)
+    ys = np.zeros((m_teams, n_devices, samples_per_device), np.int32)
+    for i in range(m_teams):
+        pool = pools[i]
+        for j in range(n_devices):
+            classes = rng.choice(pool, size=min(classes_per_device,
+                                                len(pool)), replace=False)
+            per = samples_per_device // len(classes)
+            rem = samples_per_device - per * len(classes)
+            idx = np.concatenate(
+                [take(c, per + (1 if k < rem else 0))
+                 for k, c in enumerate(classes)])
+            rng.shuffle(idx)
+            xs[i, j] = x[idx]
+            ys[i, j] = y[idx]
+
+    n_val = max(1, int(samples_per_device * val_fraction))
+    return FederatedData(
+        train_x=xs[:, :, n_val:], train_y=ys[:, :, n_val:],
+        val_x=xs[:, :, :n_val], val_y=ys[:, :, :n_val])
+
+
+def partition_tabular(devices, *, m_teams: int, n_devices: int,
+                      samples_per_device: int = 64,
+                      val_fraction: float = 0.25) -> FederatedData:
+    """Stack the per-device synthetic tabular data (truncate/cycle to a
+    common per-device sample count so the stacked layout is rectangular)."""
+    assert len(devices) >= m_teams * n_devices
+    dim = devices[0][0].shape[1]
+    xs = np.zeros((m_teams, n_devices, samples_per_device, dim), np.float32)
+    ys = np.zeros((m_teams, n_devices, samples_per_device), np.int32)
+    it = iter(devices)
+    for i in range(m_teams):
+        for j in range(n_devices):
+            dx, dy = next(it)
+            idx = np.resize(np.arange(len(dy)), samples_per_device)
+            xs[i, j] = dx[idx]
+            ys[i, j] = dy[idx]
+    n_val = max(1, int(samples_per_device * val_fraction))
+    return FederatedData(
+        train_x=xs[:, :, n_val:], train_y=ys[:, :, n_val:],
+        val_x=xs[:, :, :n_val], val_y=ys[:, :, :n_val])

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each subpackage ships:
+  * ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec
+    VMEM tiling (TPU target),
+  * ``ops.py``    — the jit'd public wrapper with backend dispatch,
+  * ``ref.py``    — the pure-jnp oracle used for allclose validation
+    (and as the compiled implementation on non-TPU backends).
+"""
+from repro.kernels.flash_attention import attention
+from repro.kernels.moe_router import route_topk
+from repro.kernels.prox_update import prox_sgd_tree
+from repro.kernels.rwkv6_scan import wkv
+
+__all__ = ["attention", "route_topk", "prox_sgd_tree", "wkv"]

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+__all__ = ["attention", "attention_ref", "flash_attention"]

@@ -1,0 +1,39 @@
+"""Public attention op: dispatches Pallas-on-TPU / interpret / jnp-ref.
+
+Model code calls :func:`attention`; the backend is chosen once per process:
+  * TPU backend        -> compiled Pallas kernel
+  * elsewhere          -> the blocked pure-jnp reference (same math), which
+                          is what CPU smoke tests and the 512-host-device
+                          dry-run compile. ``FORCE_PALLAS_INTERPRET=1`` runs
+                          the Pallas kernel body in interpret mode instead
+                          (used by kernel correctness tests).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=None,
+              block_q=512, block_kv=512):
+    if _on_tpu():
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_kv=block_kv)
+    if os.environ.get("FORCE_PALLAS_INTERPRET") == "1":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_kv=block_kv, interpret=True)
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset)

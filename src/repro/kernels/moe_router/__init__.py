@@ -1,0 +1,5 @@
+from repro.kernels.moe_router.ops import route_topk
+from repro.kernels.moe_router.ref import load_balance_loss, route_ref
+from repro.kernels.moe_router.moe_router import route
+
+__all__ = ["route_topk", "route_ref", "route", "load_balance_loss"]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for fused MoE top-k routing.
+
+Given router logits (tokens, experts): softmax -> top-k -> renormalized
+gates, plus the load-balance auxiliary statistics (Switch/DeepSeek-MoE
+style: mean gate probability and token fraction per expert).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "renormalize"))
+def route_ref(logits, *, top_k: int, renormalize: bool = True):
+    """logits: (tokens, experts) -> (gates (t,k), idx (t,k) int32,
+    probs (t,E), aux dict)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    if renormalize:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-20)
+    e = logits.shape[-1]
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(1)  # (t, E)
+    aux = {
+        "mean_prob": probs.mean(0),                 # (E,)
+        "frac_tokens": onehot.mean(0) / top_k,      # (E,)
+    }
+    return gates.astype(logits.dtype), idx.astype(jnp.int32), probs, aux
+
+
+def load_balance_loss(aux, num_experts: int):
+    """Switch-transformer aux loss: E * sum(frac_tokens * mean_prob)."""
+    return num_experts * jnp.sum(aux["frac_tokens"] * aux["mean_prob"])

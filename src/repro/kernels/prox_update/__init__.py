@@ -1,0 +1,5 @@
+from repro.kernels.prox_update.ops import prox_sgd, prox_sgd_tree
+from repro.kernels.prox_update.ref import prox_sgd_ref
+from repro.kernels.prox_update.prox_update import prox_sgd_flat
+
+__all__ = ["prox_sgd", "prox_sgd_tree", "prox_sgd_ref", "prox_sgd_flat"]

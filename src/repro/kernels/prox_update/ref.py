@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused PerMFL device prox step (paper eq. 4).
+
+    theta_new = theta - alpha * grad - alpha * lam * (theta - anchor)
+
+optionally with momentum (heavy ball) and decoupled weight decay, applied to
+flat f32/bf16 blocks. The Moreau-envelope anchor term is what distinguishes
+this from a vanilla SGD step — it is executed L*K*T times per device, the
+hottest loop in PerMFL.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def prox_sgd_ref(theta, grad, anchor, *, alpha, lam, momentum=0.0,
+                 mom_buf=None, weight_decay=0.0):
+    """All tensors same shape. Returns (theta_new, mom_buf_new)."""
+    tf = theta.astype(jnp.float32)
+    gf = grad.astype(jnp.float32)
+    af = anchor.astype(jnp.float32)
+    update = gf + lam * (tf - af) + weight_decay * tf
+    if momentum > 0.0:
+        mb = jnp.zeros_like(tf) if mom_buf is None else mom_buf.astype(jnp.float32)
+        mb = momentum * mb + update
+        update = mb
+    else:
+        mb = jnp.zeros_like(tf) if mom_buf is None else mom_buf
+    new = tf - alpha * update
+    return new.astype(theta.dtype), mb

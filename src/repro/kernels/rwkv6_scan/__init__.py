@@ -1,0 +1,5 @@
+from repro.kernels.rwkv6_scan.ops import wkv
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+from repro.kernels.rwkv6_scan.rwkv6_scan import wkv6
+
+__all__ = ["wkv", "wkv6_ref", "wkv6"]

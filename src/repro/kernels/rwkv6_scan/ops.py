@@ -1,0 +1,24 @@
+"""Public WKV-6 op with backend dispatch (TPU Pallas / interpret / jnp ref)."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+from repro.kernels.rwkv6_scan.rwkv6_scan import wkv6
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def wkv(r, k, v, w, u, state=None, *, chunk: int = 128):
+    if _on_tpu():
+        return wkv6(r, k, v, w, u, state, chunk=chunk)
+    if os.environ.get("FORCE_PALLAS_INTERPRET") == "1":
+        return wkv6(r, k, v, w, u, state, chunk=chunk, interpret=True)
+    return wkv6_ref(r, k, v, w, u, state)

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 v5e chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — `pod` is the
+DCN-connected axis, which PerMFL's team/global tier structure maps onto
+(DESIGN.md §2).
+
+These are FUNCTIONS (not module constants) so importing this module never
+touches jax device state — dryrun.py sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init,
+and only dryrun does.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """The axes the global batch shards over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mesh_batch_size(mesh) -> int:
+    out = 1
+    for a in batch_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over whatever devices exist (CPU tests)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# Hardware constants for the roofline model (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,5 @@
+from repro.models import (attention, layers, mamba, model, moe,
+                          paper_models, rwkv, transformer)
+
+__all__ = ["attention", "layers", "mamba", "model", "moe", "paper_models",
+           "rwkv", "transformer"]

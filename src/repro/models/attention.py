@@ -1,0 +1,126 @@
+"""GQA attention layer with KV cache, qk-norm, QKV bias, RoPE/M-RoPE, SWA.
+
+The attention math itself is delegated to ``repro.kernels.flash_attention``
+(Pallas on TPU, blocked-jnp elsewhere).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention
+from repro.models import layers
+
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, hq * hd, dtype),
+        "wk": layers.dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": layers.dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": layers.dense_init(ks[3], hq * hd, d, dtype),
+    }
+    if cfg.use_qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.use_qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(hd, dtype)
+        p["k_norm"] = layers.rmsnorm_init(hd, dtype)
+    return p
+
+
+def init_kv_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def _project_qkv(params, cfg, x, positions, mrope_positions=None):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.use_qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    from repro.sharding.constrain import constrain
+    q = constrain(q.reshape(b, s, cfg.num_heads, hd),
+                  "batch", None, "model", None)
+    k = constrain(k.reshape(b, s, cfg.num_kv_heads, hd),
+                  "batch", None, "model", None)
+    v = constrain(v.reshape(b, s, cfg.num_kv_heads, hd),
+                  "batch", None, "model", None)
+    if cfg.use_qk_norm:
+        q = layers.rmsnorm_apply(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+    if cfg.use_mrope and mrope_positions is not None:
+        q = layers.apply_mrope(q, mrope_positions, cfg.rope_theta)
+        k = layers.apply_mrope(k, mrope_positions, cfg.rope_theta)
+    elif positions is not None:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(params, cfg, x, *, positions=None, mrope_positions=None,
+               window=None, causal=True):
+    """Full-sequence attention (train / prefill). x: (b, s, d)."""
+    b, s, _ = x.shape
+    if positions is None and not cfg.use_mrope:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    q, k, v = _project_qkv(params, cfg, x, positions, mrope_positions)
+    w = cfg.sliding_window if window is None else window
+    out = attention(q, k, v, causal=causal, window=w, q_offset=0)
+    return out.reshape(b, s, -1) @ params["wo"]
+
+
+def attn_prefill(params, cfg, x, *, positions=None, mrope_positions=None,
+                 window=None, cache=None):
+    """Like attn_apply but also writes K/V into the cache at [0:s]."""
+    b, s, _ = x.shape
+    if positions is None and not cfg.use_mrope:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    q, k, v = _project_qkv(params, cfg, x, positions, mrope_positions)
+    w = cfg.sliding_window if window is None else window
+    out = attention(q, k, v, causal=True, window=w, q_offset=0)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        }
+    return out.reshape(b, s, -1) @ params["wo"], new_cache
+
+
+def attn_decode(params, cfg, x, cache, pos, *, mrope_positions=None,
+                window=None):
+    """Single-token decode. x: (b, 1, d); pos: scalar int32 (cache length).
+
+    Returns (y: (b, 1, d), new_cache).
+    """
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None] if jnp.ndim(pos) == 0
+                                 else pos[:, None], (b, 1))
+    q, k, v = _project_qkv(params, cfg, x, positions, mrope_positions)
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0)),
+    }
+    w = cfg.sliding_window if window is None else window
+    # q_offset = pos: causal mask admits cache slots [0..pos] and excludes
+    # the not-yet-written zeros beyond pos.
+    out = attention(q, new_cache["k"], new_cache["v"], causal=True,
+                    window=w, q_offset=pos)
+    return out.reshape(b, 1, -1) @ params["wo"], new_cache

@@ -1,0 +1,176 @@
+"""Mamba (S6) block — the SSM mixer used by Jamba's non-attention layers.
+
+Selective state space: input-dependent (Δ, B, C), diagonal A.
+    h_t = exp(Δ_t ⊙ A) h_{t-1} + Δ_t B_t x_t
+    y_t = C_t · h_t + D x_t
+Training/prefill runs a time scan carrying the (d_in, d_state) state;
+decode is a single recurrence step against a (conv window, ssm state)
+cache. The sequential scan is deliberate on TPU: materializing per-step
+states for an associative scan costs seq×d_in×d_state HBM, which at Jamba
+scale (d_in=16384) dwarfs the win — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _dims(cfg):
+    d_in = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_in, dt_rank, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in, dt_rank, d_state, d_conv = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    a = jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                         (d_in, d_state))
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_in)) *
+                   (1.0 / jnp.sqrt(d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": layers.dense_init(ks[2], d_in, dt_rank + 2 * d_state, dtype),
+        "dt_proj": layers.dense_init(ks[3], dt_rank, d_in, dtype),
+        "dt_bias": (jnp.log(jnp.expm1(0.01)) *
+                    jnp.ones((d_in,))).astype(jnp.float32),
+        "A_log": jnp.log(a),                       # f32: decay-critical
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], d_in, d, dtype),
+    }
+
+
+def init_mamba_cache(cfg, batch, dtype=jnp.float32):
+    d_in, _, d_state, d_conv = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, d_state), jnp.float32),
+    }
+
+
+def _ssm_params(params, xc, cfg):
+    """xc: (..., d_in) conv output -> (dt, B, C) input-dependent params."""
+    _, dt_rank, d_state, _ = _dims(cfg)
+    proj = xc @ params["x_proj"]
+    dt, b_mat, c_mat = jnp.split(
+        proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"] +
+                         params["dt_bias"].astype(dt.dtype))
+    return dt, b_mat, c_mat
+
+
+# Unrolled-chunk length for the selective scan. Larger chunks cut HBM
+# round-trips on the carried state linearly but grow the unrolled HLO (and
+# compile time) linearly; 16 puts the memory term at compute parity for
+# jamba-398b while keeping XLA compile tractable (§Perf hillclimb 1).
+# REPRO_MAMBA_CHUNK=1 restores the per-timestep scan (the naive-port
+# baseline recorded in EXPERIMENTS.md §Perf).
+import os as _os
+MAMBA_CHUNK = int(_os.environ.get("REPRO_MAMBA_CHUNK", "16"))
+
+
+def mamba_apply(params, cfg, x, cache=None, *, chunk: int = MAMBA_CHUNK):
+    """Full-sequence mamba. x: (b, s, d) -> (y, new_cache or None).
+
+    If ``cache`` is given, the scan starts from its (conv, ssm) state and
+    the returned cache holds the post-sequence state (prefill semantics).
+
+    The selective scan is CHUNKED (TPU adaptation): the outer
+    ``jax.lax.scan`` carries the (b, d_in, N) state across s/chunk chunks
+    and the inner `chunk` steps are unrolled, so the per-step recurrence
+    stays inside one fusion's VMEM working set. A per-timestep lax.scan
+    would re-touch HBM every step — at Jamba scale that is ~30x the whole
+    step's compute time (EXPERIMENTS.md §Perf, hillclimb 1). Streams
+    (xc/dt/B/C) stay in the activation dtype; only the carried state is
+    f32 (decay-critical).
+    """
+    b, s, d = x.shape
+    d_in, dt_rank, d_state, d_conv = _dims(cfg)
+    xz = x @ params["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)                  # (b, s, d_in) ×2
+
+    # causal depthwise conv1d (history from cache if present)
+    if cache is not None:
+        hist = cache["conv"].astype(xr.dtype)          # (b, d_conv-1, d_in)
+        xp = jnp.concatenate([hist, xr], axis=1)
+    else:
+        xp = jnp.pad(xr, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + s, :] * params["conv_w"][i][None, None, :]
+             for i in range(d_conv))
+    xc = jax.nn.silu(xc + params["conv_b"])
+
+    dt, b_mat, c_mat = _ssm_params(params, xc, cfg)    # (b,s,d_in),(b,s,N)×2
+    a = -jnp.exp(params["A_log"])                      # (d_in, N) f32
+
+    from repro.sharding.constrain import constrain
+    h0 = (cache["ssm"] if cache is not None
+          else jnp.zeros((b, d_in, d_state), jnp.float32))
+    h0 = constrain(h0, "batch", "model", None)
+
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+
+    def to_chunks(t):                                   # (b, s, f) -> (nc, chunk, b, f)
+        tp = jnp.pad(t, ((0, 0), (0, pad), (0, 0))) if pad else t
+        return jnp.moveaxis(tp.reshape(b, n_chunks, chunk, -1), 0, 2)
+
+    xs = tuple(to_chunks(t) for t in (xc, dt, b_mat, c_mat))
+
+    @jax.checkpoint
+    def chunk_fn(h, inp):
+        xc_c, dt_c, b_c, c_c = inp                     # (chunk, b, ...)
+        ys = []
+        for i in range(chunk):
+            dt_t = dt_c[i].astype(jnp.float32)         # (b, d_in)
+            da = jnp.exp(dt_t[..., None] * a)          # (b, d_in, N)
+            bb = (dt_t * xc_c[i].astype(jnp.float32))[..., None] * \
+                b_c[i].astype(jnp.float32)[:, None, :]
+            h = da * h + bb
+            ys.append(jnp.einsum(
+                "bdn,bn->bd", h, c_c[i].astype(jnp.float32)))
+        # NB: keeping ys f32 across the scan and casting once afterwards
+        # was tried and REFUTED (§Perf hillclimb 1 iter 2): the f32
+        # stacked buffer made the backward loop's whole-buffer traffic
+        # 5x WORSE (94 s -> 463 s). Cast per chunk.
+        return h, jnp.stack(ys).astype(x.dtype)        # (chunk, b, d_in)
+
+    h_final, ys = jax.lax.scan(chunk_fn, h0, xs)
+    y = jnp.moveaxis(ys.reshape(n_chunks * chunk, b, d_in), 0, 1)[:, :s]
+    y = y + xc * params["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": xp[:, -(d_conv - 1):, :].astype(
+            cache["conv"].dtype), "ssm": h_final}
+    return y @ params["out_proj"], new_cache
+
+
+def mamba_decode(params, cfg, x, cache):
+    """Single-token step. x: (b, 1, d); cache from init_mamba_cache."""
+    b = x.shape[0]
+    d_in, dt_rank, d_state, d_conv = _dims(cfg)
+    xz = x[:, 0, :] @ params["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)                  # (b, d_in)
+
+    window = jnp.concatenate([cache["conv"],
+                              xr[:, None, :].astype(cache["conv"].dtype)],
+                             axis=1)                   # (b, d_conv, d_in)
+    xc = jnp.einsum("bcd,cd->bd", window, params["conv_w"].astype(window.dtype))
+    xc = jax.nn.silu(xc + params["conv_b"])
+
+    dt, b_mat, c_mat = _ssm_params(params, xc, cfg)
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)
+    h = (da * cache["ssm"] +
+         (dt * xc).astype(jnp.float32)[..., None] *
+         b_mat.astype(jnp.float32)[:, None, :])
+    y = jnp.einsum("bdn,bn->bd", h, c_mat.astype(jnp.float32)).astype(x.dtype)
+    y = y + xc * params["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    new_cache = {"conv": window[:, 1:, :], "ssm": h}
+    return (y @ params["out_proj"])[:, None, :], new_cache

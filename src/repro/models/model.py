@@ -1,0 +1,186 @@
+"""Public model API: init / forward / loss / prefill / decode + input specs.
+
+Batch conventions (all archs):
+  * plain LM (dense/moe/ssm/hybrid):
+      train/prefill: {"tokens": (b,s) i32, "targets": (b,s) i32}
+      decode:        {"tokens": (b,1) i32}
+  * vlm (qwen2-vl; vision frontend stubbed):
+      train/prefill: {"embeds": (b,s,d), "mrope_positions": (b,s,3) i32,
+                      "targets": (b,s) i32}
+      decode:        {"tokens": (b,1) i32, "mrope_positions": (b,1,3) i32}
+  * audio enc-dec (whisper; conv/mel frontend stubbed):
+      train/prefill: {"enc_frames": (b,enc_seq,d), "tokens": (b,s) i32,
+                      "targets": (b,s) i32}
+      decode:        {"tokens": (b,1) i32}
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, transformer
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rounded up so the `model` mesh axis divides it (production
+    trick): whisper's 51865 would otherwise leave the (b, s, V) f32 logits
+    FULLY REPLICATED on every device (13.6 GB each at train_4k scale plus
+    a 31 GB softmax chain — measured, EXPERIMENTS.md §Perf). Pad rows are
+    masked to -inf in `_logits_out`, so losses/sampling are unchanged."""
+    v = cfg.vocab_size
+    return v if v % 16 == 0 else -(-v // 128) * 128
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    pv = padded_vocab(cfg)
+    p = {
+        "embed": layers.embed_init(ks[0], pv, cfg.d_model, dtype),
+        "blocks": transformer.stack_init(ks[1], cfg, dtype),
+        "final_norm": layers.norm_init(cfg, dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(ks[2], cfg.d_model, pv, dtype)
+    if cfg.is_encoder_decoder:
+        p["encoder"] = transformer.encoder_init(ks[3], cfg, dtype)
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    return {"layers": transformer.stack_cache(cfg, batch, max_len, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _embed_in(params, cfg, batch):
+    if "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = params["embed"][batch["tokens"]]
+    return x
+
+
+def _logits_out(params, cfg, x):
+    from repro.sharding.constrain import constrain
+    x = layers.norm_apply(cfg, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = constrain((x @ head).astype(jnp.float32),
+                       "batch", None, "model")
+    pv = head.shape[-1]
+    if pv != cfg.vocab_size:
+        # vocab-padding rows never win an argmax / contribute to softmax
+        pad_mask = jax.lax.broadcasted_iota(
+            jnp.int32, (pv,), 0) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = False):
+    """Full-sequence forward -> (logits (b,s,V) f32, aux_loss)."""
+    x = _embed_in(params, cfg, batch)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = transformer.encoder_apply(params["encoder"], cfg,
+                                            batch["enc_frames"])
+    x, _, aux = transformer.stack_apply(
+        params["blocks"], cfg, x, mode="full",
+        mrope_positions=batch.get("mrope_positions"), enc_out=enc_out,
+        remat=remat)
+    return _logits_out(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: bool = False):
+    """Mean next-token CE + MoE aux. Targets of -100 are masked."""
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    ce = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, last_only=False):
+    """Forward + populate cache. Returns (logits, new_cache).
+
+    last_only=True computes logits for the final position only (serving:
+    avoids the (b, s, V) matmul at 32k prefill)."""
+    x = _embed_in(params, cfg, batch)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = transformer.encoder_apply(params["encoder"], cfg,
+                                            batch["enc_frames"])
+    x, new_layers, aux = transformer.stack_apply(
+        params["blocks"], cfg, x, mode="full", cache=cache["layers"],
+        mrope_positions=batch.get("mrope_positions"), enc_out=enc_out)
+    if last_only:
+        x = x[:, -1:, :]
+    return _logits_out(params, cfg, x), {"layers": new_layers}
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch, pos):
+    """One-token decode. batch: {"tokens": (b,1), ...}; pos: scalar i32.
+
+    Returns (logits (b,1,V) f32, new_cache).
+    """
+    x = _embed_in(params, cfg, batch)
+    x, new_layers, _ = transformer.stack_apply(
+        params["blocks"], cfg, x, mode="decode", cache=cache["layers"],
+        pos=pos, mrope_positions=batch.get("mrope_positions"))
+    return _logits_out(params, cfg, x), {"layers": new_layers}
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs for dry-runs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, *, batch: int, seq_len: int, kind: str,
+                act_dtype=jnp.bfloat16):
+    """Stand-in inputs (no allocation) for (arch x input-shape) lowering."""
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if kind in ("train", "prefill"):
+        s = seq_len
+        spec = {}
+        if cfg.family == "vlm":
+            spec["embeds"] = sds((batch, s, cfg.d_model), act_dtype)
+            spec["mrope_positions"] = sds((batch, s, 3), i32)
+        elif cfg.is_encoder_decoder:
+            spec["enc_frames"] = sds((batch, cfg.encoder_seq_len,
+                                      cfg.d_model), act_dtype)
+            spec["tokens"] = sds((batch, s), i32)
+        else:
+            spec["tokens"] = sds((batch, s), i32)
+        if kind == "train":
+            spec["targets"] = sds((batch, s), i32)
+        return spec
+    if kind == "decode":
+        spec = {"tokens": sds((batch, 1), i32)}
+        if cfg.family == "vlm":
+            spec["mrope_positions"] = sds((batch, 1, 3), i32)
+        return spec
+    raise ValueError(kind)
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """abstract param tree via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_len, dtype=dtype))

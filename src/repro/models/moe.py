@@ -1,0 +1,123 @@
+"""Fine-grained Mixture-of-Experts layer (DeepSeek-MoE / DBRX style).
+
+Shared experts (always on) + routed experts with top-k gating and
+capacity-based dispatch. Routing is the fused kernel
+(repro.kernels.moe_router); dispatch/combine are one-hot einsums over token
+*groups* (GShard style) so the dispatch tensor is
+(groups, group_size, E, capacity) with a bounded group_size — the
+expert matmuls are plain batched einsums the MXU loves, and the experts
+dimension is what the `model`/expert-parallel mesh axis shards.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_router import route_topk
+from repro.models import layers
+
+DEFAULT_GROUP = 1024
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    m = cfg.moe
+    e_ff = m.expert_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d)
+
+    def expert_bank(k_, n):
+        k1, k2, k3 = jax.random.split(k_, 3)
+        return {
+            "w_gate": (jax.random.normal(k1, (n, d, e_ff)) * scale).astype(dtype),
+            "w_up": (jax.random.normal(k2, (n, d, e_ff)) * scale).astype(dtype),
+            "w_down": (jax.random.normal(k3, (n, e_ff, d)) *
+                       (1.0 / jnp.sqrt(e_ff))).astype(dtype),
+        }
+
+    p = {
+        "router": layers.dense_init(ks[0], d, m.num_experts, jnp.float32),
+        "experts": expert_bank(ks[1], m.num_experts),
+    }
+    if m.num_shared_experts:
+        p["shared"] = layers.swiglu_init(ks[2], d, e_ff * m.num_shared_experts,
+                                         dtype)
+    return p
+
+
+def _capacity(group_size: int, num_experts: int, top_k: int,
+              factor: float) -> int:
+    cap = int(group_size * top_k / num_experts * factor)
+    return max(cap, top_k)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "group_size"))
+def moe_apply(params, cfg, x, *, group_size: int = DEFAULT_GROUP):
+    """x: (b, s, d) -> (y: (b, s, d), aux_loss: scalar).
+
+    Tokens over capacity are dropped (their contribution is the shared
+    experts + residual only) — standard capacity-based MoE semantics.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    gs = min(group_size, t)
+    n_groups = -(-t // gs)
+    pad = n_groups * gs - t
+    xp = jnp.pad(xt, ((0, pad), (0, 0))) if pad else xt
+
+    logits = (xp.astype(jnp.float32) @ params["router"])      # (T, E)
+    gates, idx, aux = route_topk(logits, top_k=m.top_k)       # (T,k) ×2
+    # drop gates of padded tokens so they don't consume capacity weights
+    if pad:
+        valid = jnp.arange(n_groups * gs) < t
+        gates = jnp.where(valid[:, None], gates, 0.0)
+
+    e = m.num_experts
+    cap = _capacity(gs, e, m.top_k, m.capacity_factor)
+    gates_g = gates.reshape(n_groups, gs, m.top_k)
+    idx_g = idx.reshape(n_groups, gs, m.top_k)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    sel = jax.nn.one_hot(idx_g, e, dtype=jnp.float32)         # (g, gs, k, E)
+    # priority: earlier tokens (and earlier choices) win capacity
+    sel_flat = sel.reshape(n_groups, gs * m.top_k, e)
+    pos_in_expert = jnp.cumsum(sel_flat, axis=1) - sel_flat    # (g, gs*k, E)
+    pos_in_expert = pos_in_expert.reshape(n_groups, gs, m.top_k, e)
+    within_cap = pos_in_expert < cap
+    sel = sel * within_cap
+
+    pos_idx = (pos_in_expert * sel).sum(-1).astype(jnp.int32)  # (g, gs, k)
+    cap_onehot = jax.nn.one_hot(pos_idx, cap, dtype=jnp.float32)  # (g,gs,k,C)
+    # dispatch: (g, gs, E, C)
+    dispatch = jnp.einsum("gske,gskc->gsec", sel, cap_onehot)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", sel, cap_onehot,
+                         gates_g.astype(jnp.float32))
+
+    from repro.sharding.constrain import constrain
+    xg = xp.reshape(n_groups, gs, d)
+    dispatch = constrain(dispatch.astype(x.dtype),
+                         "batch", None, "model", None)
+    combine = constrain(combine, "batch", None, "model", None)
+    expert_in = constrain(jnp.einsum("gsec,gsd->gecd", dispatch, xg),
+                          "batch", "model", None, None)
+    w_g, w_u, w_d = (params["experts"][k_] for k_ in ("w_gate", "w_up",
+                                                      "w_down"))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, w_g))
+    h = h * jnp.einsum("gecd,edf->gecf", expert_in, w_u)
+    h = constrain(h, "batch", "model", None, None)
+    expert_out = constrain(jnp.einsum("gecf,efd->gecd", h, w_d),
+                           "batch", "model", None, None)
+    yt = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), expert_out)
+    yt = yt.reshape(n_groups * gs, d)[:t]
+
+    if m.num_shared_experts:
+        yt = yt + layers.swiglu_apply(params["shared"], xt)
+
+    aux_loss = m.router_aux_weight * e * jnp.sum(
+        aux["frac_tokens"] * aux["mean_prob"])
+    return yt.reshape(b, s, d), aux_loss

@@ -1,0 +1,113 @@
+"""The paper's own learning models: MCLR, 2-layer CNN, 2-hidden-layer DNN.
+
+MCLR (multinomial logistic regression with l2) is the strongly-convex model
+of Theorem 1 — its loss is (l2_reg)-strongly convex and smooth, so the
+linear-rate validation tests run against it. The CNN/DNN cover Theorem 2's
+smooth non-convex setting, matching §4 of the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PaperModelConfig
+
+
+def init_params(key, cfg: PaperModelConfig, dtype=jnp.float32):
+    if cfg.kind == "mclr":
+        d = int(jnp.prod(jnp.array(cfg.input_shape)))
+        return {"w": jnp.zeros((d, cfg.num_classes), dtype),
+                "b": jnp.zeros((cfg.num_classes,), dtype)}
+    if cfg.kind == "dnn":
+        dims = [int(jnp.prod(jnp.array(cfg.input_shape)))] + \
+            list(cfg.hidden) + [cfg.num_classes]
+        ks = jax.random.split(key, len(dims) - 1)
+        return {f"layer{i}": {
+            "w": (jax.random.normal(ks[i], (dims[i], dims[i + 1])) *
+                  jnp.sqrt(2.0 / dims[i])).astype(dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)}
+    if cfg.kind == "cnn":
+        h, w, c_in = cfg.input_shape
+        chans = [c_in] + list(cfg.conv_channels)
+        ks = jax.random.split(key, len(chans) + 1)
+        p = {}
+        for i in range(len(chans) - 1):
+            fan_in = 9 * chans[i]
+            p[f"conv{i}"] = {
+                "w": (jax.random.normal(ks[i], (3, 3, chans[i], chans[i + 1]))
+                      * jnp.sqrt(2.0 / fan_in)).astype(dtype),
+                "b": jnp.zeros((chans[i + 1],), dtype)}
+        # two 2x2 maxpools -> spatial /4
+        flat = (h // 4) * (w // 4) * chans[-1]
+        dims = [flat] + list(cfg.hidden) + [cfg.num_classes]
+        for i in range(len(dims) - 1):
+            p[f"dense{i}"] = {
+                "w": (jax.random.normal(ks[len(chans) + i - 1],
+                                        (dims[i], dims[i + 1])) *
+                      jnp.sqrt(2.0 / dims[i])).astype(dtype),
+                "b": jnp.zeros((dims[i + 1],), dtype)}
+        return p
+    raise ValueError(cfg.kind)
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply(params, cfg: PaperModelConfig, x):
+    """x: (b, *input_shape) -> logits (b, num_classes)."""
+    if cfg.kind == "mclr":
+        xf = x.reshape(x.shape[0], -1)
+        return xf @ params["w"] + params["b"]
+    if cfg.kind == "dnn":
+        h = x.reshape(x.shape[0], -1)
+        n = len(params)
+        for i in range(n):
+            h = h @ params[f"layer{i}"]["w"] + params[f"layer{i}"]["b"]
+            if i < n - 1:
+                h = jax.nn.relu(h)
+        return h
+    if cfg.kind == "cnn":
+        h = x
+        i = 0
+        while f"conv{i}" in params:
+            # 3x3 SAME conv as im2col + matmul: XLA-CPU's conv emitter is
+            # ~100x slower than its GEMM under the stacked-FL double vmap,
+            # and on TPU the matmul form feeds the MXU directly.
+            w = params[f"conv{i}"]["w"]                  # (3, 3, cin, cout)
+            hp = jnp.pad(h, ((0, 0), (1, 1), (1, 1), (0, 0)))
+            bsz, hh, ww = h.shape[0], h.shape[1], h.shape[2]
+            patches = jnp.concatenate(
+                [hp[:, dy:dy + hh, dx:dx + ww, :]
+                 for dy in range(3) for dx in range(3)], axis=-1)
+            h = patches @ w.reshape(9 * w.shape[2], w.shape[3])
+            h = jax.nn.relu(h + params[f"conv{i}"]["b"])
+            h = _maxpool2(h)
+            i += 1
+        h = h.reshape(h.shape[0], -1)
+        j = 0
+        while f"dense{j}" in params:
+            h = h @ params[f"dense{j}"]["w"] + params[f"dense{j}"]["b"]
+            if f"dense{j + 1}" in params:
+                h = jax.nn.relu(h)
+            j += 1
+        return h
+    raise ValueError(cfg.kind)
+
+
+def loss_fn(params, cfg: PaperModelConfig, batch):
+    """Mean CE (+ l2 for the strongly-convex MCLR)."""
+    logits = apply(params, cfg, batch["x"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
+    if cfg.l2_reg > 0.0:
+        sq = sum(jnp.vdot(a, a) for a in jax.tree.leaves(params))
+        nll = nll + 0.5 * cfg.l2_reg * sq
+    return nll
+
+
+def accuracy(params, cfg: PaperModelConfig, batch):
+    logits = apply(params, cfg, batch["x"])
+    return (jnp.argmax(logits, -1) == batch["y"]).mean()

@@ -1,0 +1,120 @@
+"""RWKV-6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence is the Pallas kernel (repro.kernels.rwkv6_scan); this
+module provides the surrounding token-shift interpolation, the decay LoRA
+(the data-dependent w_t that distinguishes RWKV-6 from RWKV-4/5), gating,
+and the squared-ReLU channel mix. Decode carries (last hidden token per
+mix, WKV state) — O(1) in sequence length, which is why rwkv6-7b runs
+long_500k natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan import wkv
+from repro.models import layers
+
+DECAY_LORA = 64
+
+
+def timemix_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.num_heads
+    n = cfg.rwkv_head_dim
+    assert h * n == d, f"rwkv heads {h} x head_dim {n} != d_model {d}"
+    ks = jax.random.split(key, 10)
+    p = {
+        # token-shift interpolation weights per stream
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w_r": layers.dense_init(ks[0], d, d, dtype),
+        "w_k": layers.dense_init(ks[1], d, d, dtype),
+        "w_v": layers.dense_init(ks[2], d, d, dtype),
+        "w_g": layers.dense_init(ks[3], d, d, dtype),
+        "w_o": layers.dense_init(ks[4], d, d, dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_A": layers.dense_init(ks[5], d, DECAY_LORA, dtype),
+        "decay_B": layers.dense_init(ks[6], DECAY_LORA, d, dtype,
+                                     scale=0.01),
+        "bonus_u": (jax.random.normal(ks[7], (h, n)) * 0.1).astype(jnp.float32),
+        "ln_x": layers.rmsnorm_init(d, dtype),   # per-head group norm stand-in
+    }
+    return p
+
+
+def channelmix_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    ff = cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "w_k": layers.dense_init(ks[0], d, ff, dtype),
+        "w_v": layers.dense_init(ks[1], ff, d, dtype),
+        "w_r": layers.dense_init(ks[2], d, d, dtype),
+    }
+
+
+def init_rwkv_cache(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    h, n = cfg.num_heads, cfg.rwkv_head_dim
+    return {
+        "tm_last": jnp.zeros((batch, d), dtype),     # token shift (time mix)
+        "cm_last": jnp.zeros((batch, d), dtype),     # token shift (chan mix)
+        "wkv": jnp.zeros((batch, h, n, n), jnp.float32),
+    }
+
+
+def _shift(x, last=None):
+    """token shift: x_{t-1} (zeros or `last` for t=0). x: (b, s, d)."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _decay(params, xw):
+    logw = params["decay_w0"] + jnp.tanh(
+        xw.astype(jnp.float32) @ params["decay_A"].astype(jnp.float32)
+    ) @ params["decay_B"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))          # in (0, 1)
+
+
+def timemix_apply(params, cfg, x, *, last=None, state=None):
+    """x: (b, s, d) -> (y, (new_last, new_state))."""
+    b, s, d = x.shape
+    h, n = cfg.num_heads, cfg.rwkv_head_dim
+    xs = _shift(x, last)
+    r = _lerp(x, xs, params["mu_r"]) @ params["w_r"]
+    k = _lerp(x, xs, params["mu_k"]) @ params["w_k"]
+    v = _lerp(x, xs, params["mu_v"]) @ params["w_v"]
+    g = _lerp(x, xs, params["mu_g"]) @ params["w_g"]
+    w = _decay(params, _lerp(x, xs, params["mu_w"]))         # (b, s, d)
+
+    rh = r.reshape(b, s, h, n)
+    kh = k.reshape(b, s, h, n)
+    vh = v.reshape(b, s, h, n)
+    wh = w.reshape(b, s, h, n)
+    out, new_state = wkv(rh, kh, vh, wh, params["bonus_u"], state)
+    out = out.reshape(b, s, d)
+    out = layers.rmsnorm_apply(params["ln_x"], out, cfg.norm_eps)
+    out = out * jax.nn.silu(g)
+    y = out @ params["w_o"]
+    return y, (x[:, -1, :], new_state)
+
+
+def channelmix_apply(params, cfg, x, *, last=None):
+    """x: (b, s, d) -> (y, new_last)."""
+    xs = _shift(x, last)
+    k = _lerp(x, xs, params["mu_k"]) @ params["w_k"]
+    k = jnp.square(jax.nn.relu(k))
+    kv = k @ params["w_v"]
+    r = jax.nn.sigmoid(_lerp(x, xs, params["mu_r"]) @ params["w_r"])
+    return r * kv, x[:, -1, :]

@@ -1,0 +1,271 @@
+"""Decoder stack (+ Whisper encoder-decoder) with scanned layer blocks.
+
+Layers are grouped into *blocks*: the smallest repeating pattern of
+(mixer kind, MoE?) signatures — size lcm(attn_period, moe_period). Per-layer
+params are stacked over blocks on a leading axis and the stack is applied
+with ``jax.lax.scan``, so HLO size and compile time are independent of
+depth (9 scanned blocks of 8 heterogeneous layers for 72-layer Jamba).
+
+The same block structure carries the KV/SSM/RWKV caches: cache leaves are
+stacked (n_blocks, ...) and scanned together with the params.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mamba, moe, rwkv
+
+
+# ---------------------------------------------------------------------------
+# block pattern
+# ---------------------------------------------------------------------------
+
+def block_pattern(cfg):
+    """Returns (n_blocks, [(kind, is_moe), ...] per position-in-block)."""
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    period = 1
+    if cfg.attn_period and cfg.attn_period > 1:
+        period = cfg.attn_period
+    if cfg.moe.num_experts and cfg.moe_layer_period > 1:
+        period = math.lcm(period, cfg.moe_layer_period)
+    if cfg.num_layers % period:
+        period = cfg.num_layers  # fall back to one unscanned mega-block
+    pattern = [(kinds[i], moe_mask[i]) for i in range(period)]
+    # verify periodicity
+    for i in range(cfg.num_layers):
+        assert (kinds[i], moe_mask[i]) == pattern[i % period], \
+            f"layer pattern not periodic at {i}"
+    return cfg.num_layers // period, pattern
+
+
+# ---------------------------------------------------------------------------
+# per-position init/apply
+# ---------------------------------------------------------------------------
+
+def _position_init(key, cfg, kind, is_moe, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": layers.norm_init(cfg, dtype=dtype),
+         "norm2": layers.norm_init(cfg, dtype=dtype)}
+    if kind == "attn":
+        p["attn"] = attention.attn_init(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = mamba.mamba_init(ks[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["tm"] = rwkv.timemix_init(ks[0], cfg, dtype)
+    if kind == "rwkv":
+        p["cm"] = rwkv.channelmix_init(ks[1], cfg, dtype)
+    elif is_moe:
+        p["moe"] = moe.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = layers.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    if cfg.is_encoder_decoder:
+        p["norm_x"] = layers.norm_init(cfg, dtype=dtype)
+        p["cross"] = attention.attn_init(ks[2], cfg, dtype)
+    return p
+
+
+def _position_cache(cfg, kind, batch, max_len, dtype):
+    if kind == "attn":
+        c = attention.init_kv_cache(cfg, batch, max_len, dtype)
+    elif kind == "mamba":
+        # conv window follows activation dtype; ssm state stays f32
+        c = mamba.init_mamba_cache(cfg, batch, dtype)
+    elif kind == "rwkv":
+        # token-shift buffers follow activation dtype; wkv state stays f32
+        c = rwkv.init_rwkv_cache(cfg, batch, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.is_encoder_decoder and kind == "attn":
+        hd = cfg.resolved_head_dim
+        c["cross_k"] = jnp.zeros((batch, cfg.encoder_seq_len,
+                                  cfg.num_kv_heads, hd), dtype)
+        c["cross_v"] = jnp.zeros_like(c["cross_k"])
+    return c
+
+
+def _apply_position(p, cfg, kind, is_moe, x, *, mode, cache=None, pos=None,
+                    mrope_positions=None, enc_out=None):
+    """One layer. mode: 'full' | 'decode'. Returns (x, new_cache, aux)."""
+    aux = 0.0
+    h = layers.norm_apply(cfg, p["norm1"], x)
+    new_cache = dict(cache) if cache is not None else None
+    if kind == "attn":
+        if mode == "full":
+            if cache is not None:
+                y, kvc = attention.attn_prefill(
+                    p["attn"], cfg, h, mrope_positions=mrope_positions,
+                    cache={"k": cache["k"], "v": cache["v"]})
+                new_cache.update(kvc)
+            else:
+                y = attention.attn_apply(p["attn"], cfg, h,
+                                         mrope_positions=mrope_positions)
+        else:
+            y, kvc = attention.attn_decode(
+                p["attn"], cfg, h, {"k": cache["k"], "v": cache["v"]}, pos,
+                mrope_positions=mrope_positions)
+            new_cache.update(kvc)
+    elif kind == "mamba":
+        if mode == "full":
+            y, mc = mamba.mamba_apply(
+                p["mamba"], cfg, h,
+                cache=({"conv": cache["conv"], "ssm": cache["ssm"]}
+                       if cache is not None else None))
+            if new_cache is not None:
+                new_cache.update(mc)
+        else:
+            y, mc = mamba.mamba_decode(p["mamba"], cfg, h,
+                                       {"conv": cache["conv"],
+                                        "ssm": cache["ssm"]})
+            new_cache.update(mc)
+    elif kind == "rwkv":
+        if mode == "full":
+            y, (tm_last, wkv_state) = rwkv.timemix_apply(
+                p["tm"], cfg, h,
+                last=cache["tm_last"] if cache is not None else None,
+                state=cache["wkv"] if cache is not None else None)
+        else:
+            y, (tm_last, wkv_state) = rwkv.timemix_apply(
+                p["tm"], cfg, h, last=cache["tm_last"], state=cache["wkv"])
+        if new_cache is not None:
+            new_cache["tm_last"] = tm_last.astype(
+                cache["tm_last"].dtype if cache is not None else y.dtype)
+            new_cache["wkv"] = wkv_state
+    x = x + y
+
+    if cfg.is_encoder_decoder and kind == "attn":
+        hx = layers.norm_apply(cfg, p["norm_x"], x)
+        hd = cfg.resolved_head_dim
+        if mode == "full":
+            # compute + (optionally) cache cross K/V from encoder output
+            b, se, _ = enc_out.shape
+            ck = (enc_out @ p["cross"]["wk"]).reshape(b, se,
+                                                      cfg.num_kv_heads, hd)
+            cv = (enc_out @ p["cross"]["wv"]).reshape(b, se,
+                                                      cfg.num_kv_heads, hd)
+            if new_cache is not None:
+                new_cache["cross_k"] = ck.astype(new_cache["cross_k"].dtype)
+                new_cache["cross_v"] = cv.astype(new_cache["cross_v"].dtype)
+        else:
+            ck, cv = cache["cross_k"], cache["cross_v"]
+        bq, sq, _ = hx.shape
+        q = (hx @ p["cross"]["wq"]).reshape(bq, sq, cfg.num_heads, hd)
+        from repro.kernels.flash_attention import attention as attn_op
+        y = attn_op(q, ck, cv, causal=False, q_offset=0)
+        x = x + y.reshape(bq, sq, -1) @ p["cross"]["wo"]
+
+    h2 = layers.norm_apply(cfg, p["norm2"], x)
+    if kind == "rwkv":
+        y2, cm_last = rwkv.channelmix_apply(
+            p["cm"], cfg, h2,
+            last=cache["cm_last"] if cache is not None else None)
+        if new_cache is not None:
+            new_cache["cm_last"] = cm_last.astype(
+                cache["cm_last"].dtype if cache is not None else y2.dtype)
+    elif is_moe:
+        y2, aux = moe.moe_apply(p["moe"], cfg, h2)
+    else:
+        y2 = layers.swiglu_apply(p["mlp"], h2)
+    x = x + y2
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stack init / apply
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg, dtype=jnp.float32):
+    n_blocks, pattern = block_pattern(cfg)
+
+    def one_block(k):
+        ks = jax.random.split(k, len(pattern))
+        return {f"pos{i}": _position_init(ks[i], cfg, kind, is_moe, dtype)
+                for i, (kind, is_moe) in enumerate(pattern)}
+
+    keys = jax.random.split(key, n_blocks)
+    return jax.vmap(one_block)(keys)
+
+
+def stack_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    n_blocks, pattern = block_pattern(cfg)
+    one = {f"pos{i}": _position_cache(cfg, kind, batch, max_len, dtype)
+           for i, (kind, _) in enumerate(pattern)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_blocks,) + x.shape).copy(), one)
+
+
+def stack_apply(params, cfg, x, *, mode="full", cache=None, pos=None,
+                mrope_positions=None, enc_out=None, remat=False):
+    """Scan the block stack. Returns (x, new_cache, total_aux)."""
+    _, pattern = block_pattern(cfg)
+
+    from repro.sharding.constrain import constrain
+
+    def block_fn(carry, xs):
+        x, aux_tot = carry
+        # between-block activations are sequence-sharded over `model`
+        # (Megatron-SP): divides the remat residual footprint by the TP
+        # degree; GSPMD re-gathers at each mixer's QKV projection.
+        x = constrain(x, "batch", "model", None)
+        blk_params, blk_cache = xs
+        new_blk_cache = {} if blk_cache is not None else None
+        for i, (kind, is_moe) in enumerate(pattern):
+            c = blk_cache[f"pos{i}"] if blk_cache is not None else None
+            x, nc, aux = _apply_position(
+                blk_params[f"pos{i}"], cfg, kind, is_moe, x, mode=mode,
+                cache=c, pos=pos, mrope_positions=mrope_positions,
+                enc_out=enc_out)
+            if new_blk_cache is not None:
+                new_blk_cache[f"pos{i}"] = nc
+        return (x, aux_tot + aux), new_blk_cache
+
+    if remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    if cache is None:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, p: block_fn(c, (p, None)), (x, 0.0), params)
+        return x, None, aux
+    (x, aux), new_cache = jax.lax.scan(block_fn, (x, 0.0), (params, cache))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder
+# ---------------------------------------------------------------------------
+
+def encoder_init(key, cfg, dtype=jnp.float32):
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": layers.norm_init(cfg, dtype=dtype),
+            "attn": attention.attn_init(k1, cfg, dtype),
+            "norm2": layers.norm_init(cfg, dtype=dtype),
+            "mlp": layers.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+    keys = jax.random.split(key, cfg.encoder_layers)
+    return {"layers": jax.vmap(one)(keys),
+            "final_norm": layers.norm_init(cfg, dtype=dtype)}
+
+
+def encoder_apply(params, cfg, frames):
+    """frames: (b, encoder_seq, d) precomputed embeddings (frontend stub)."""
+    b, s, d = frames.shape
+    pos = layers.sinusoidal_positions(s, d).astype(frames.dtype)
+    x = frames + pos[None]
+
+    def layer_fn(x, p):
+        h = layers.norm_apply(cfg, p["norm1"], x)
+        y = attention.attn_apply(p["attn"], cfg, h, causal=False,
+                                 positions=None)
+        x = x + y
+        h2 = layers.norm_apply(cfg, p["norm2"], x)
+        x = x + layers.gelu_mlp_apply(p["mlp"], h2)
+        return x, None
+
+    x, _ = jax.lax.scan(layer_fn, x, params["layers"])
+    return layers.norm_apply(cfg, params["final_norm"], x)

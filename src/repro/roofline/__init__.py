@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (Roofline, analyze, model_flops_decode,
+                                     model_flops_train, parse_collectives)
+
+__all__ = ["Roofline", "analyze", "model_flops_decode", "model_flops_train",
+           "parse_collectives"]

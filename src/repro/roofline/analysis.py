@@ -1,0 +1,132 @@
+"""Roofline extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), DESIGN/EXPERIMENTS §Roofline:
+
+    compute    = HLO_FLOPs / (chips * 197 TF/s bf16)
+    memory     = HLO_bytes / (chips * 819 GB/s)
+    collective = collective_bytes / (chips * 50 GB/s per ICI link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+are parsed from the optimized HLO text (cost_analysis does not expose
+them): we sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops. Loop bodies are multiplied by trip
+count when the enclosing while op carries a known trip count annotation —
+XLA's cost analysis already folds loops into its totals.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,1024]' -> bytes. '(bf16[..], f32[..])' handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self):
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result sizes of collective ops in the optimized HLO module,
+    weighted by call-graph multiplicity (while bodies x known_trip_count).
+    Thin wrapper over the full HLO walker in :mod:`hlo_analysis`."""
+    from repro.roofline.hlo_analysis import HloModule
+
+    agg = HloModule(hlo_text).aggregate()
+    stats = CollectiveStats()
+    stats.bytes_by_kind = {k: int(v)
+                           for k, v in agg["collective_bytes_by_kind"].items()}
+    stats.count_by_kind = dict(agg["collective_counts_by_kind"])
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    collectives: dict
+
+    def summary(self) -> str:
+        return (f"compute={self.compute_s:.3e}s memory={self.memory_s:.3e}s "
+                f"collective={self.collective_s:.3e}s -> {self.dominant}-bound"
+                f" | useful={self.useful_ratio:.2f}")
+
+
+def analyze(compiled, *, chips: int, model_flops: float,
+            hlo_text: str | None = None) -> Roofline:
+    """model_flops is GLOBAL (6*N*D); HLO numbers are per-device (the HLO
+    is SPMD-partitioned), so the useful-compute ratio compares
+    model_flops/chips against per-device HLO flops."""
+    from repro.roofline.hlo_analysis import analyze_hlo_text
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    agg = analyze_hlo_text(text)
+    flops = agg["flops"]                      # per device
+    hbm = agg["hbm_bytes"]                    # per device
+    coll_bytes = agg["collective_bytes"]      # per device
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = hbm / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf_dev = model_flops / chips
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll_bytes,
+        chips=chips, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=(mf_dev / flops) if flops else 0.0,
+        collectives=dict(agg["collective_bytes_by_kind"]))
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6 * N_active * D (trained tokens)."""
+    from repro.configs.base import active_param_count
+    return 6.0 * active_param_count(cfg) * tokens
+
+
+def model_flops_decode(cfg, tokens: int) -> float:
+    """2 * N_active * D for forward-only decode."""
+    from repro.configs.base import active_param_count
+    return 2.0 * active_param_count(cfg) * tokens

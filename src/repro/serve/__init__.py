@@ -1,0 +1,5 @@
+from repro.serve.engine import ServeEngine, make_decode_step, \
+    make_prefill_step
+from repro.serve import sampler
+
+__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step", "sampler"]

@@ -1,0 +1,77 @@
+"""Batched serving engine: prefill once, decode autoregressively.
+
+``make_prefill_step`` / ``make_decode_step`` return the jittable units that
+the launcher lowers for the decode-shape dry-runs (decode_32k, long_500k);
+``ServeEngine`` drives them for real generation in examples/tests.
+
+The decode step is exactly "ONE new token against a seq_len KV cache":
+cache layout is preallocated to max_len, `pos` is a traced scalar.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.serve import sampler as sampler_lib
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch, cache):
+        logits, cache = model_lib.prefill(params, cfg, batch, cache,
+                                          last_only=True)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg, *, sample: str = "greedy", temp: float = 1.0):
+    def decode_step(params, cache, tokens, pos, key):
+        batch = {"tokens": tokens}
+        if cfg.family == "vlm":
+            b = tokens.shape[0]
+            batch["mrope_positions"] = jnp.broadcast_to(
+                pos, (b, 1))[..., None].repeat(3, -1).astype(jnp.int32)
+        logits, cache = model_lib.decode_step(params, cfg, cache, batch, pos)
+        if sample == "greedy":
+            next_tok = sampler_lib.greedy(logits)
+        else:
+            next_tok = sampler_lib.temperature(logits, key, temp)
+        return next_tok, cache
+    return decode_step
+
+
+@dataclass
+class ServeEngine:
+    cfg: object
+    params: object
+    max_len: int
+    cache_dtype: object = jnp.float32
+    sample: str = "greedy"
+    temp: float = 1.0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.cfg))
+        self._decode = jax.jit(make_decode_step(self.cfg, sample=self.sample,
+                                                temp=self.temp))
+
+    def generate(self, batch, *, max_new_tokens: int, seed: int = 0):
+        """batch: prefill inputs (tokens (b, s) etc.). Returns (b, new) i32."""
+        b = next(iter(batch.values())).shape[0]
+        prompt_len = batch["tokens"].shape[1] if "tokens" in batch else \
+            batch["embeds"].shape[1]
+        cache = model_lib.init_cache(self.cfg, b, self.max_len,
+                                     dtype=self.cache_dtype)
+        logits, cache = self._prefill(self.params, batch, cache)
+        key = jax.random.PRNGKey(seed)
+        tok = sampler_lib.greedy(logits) if self.sample == "greedy" else \
+            sampler_lib.temperature(logits, key, self.temp)
+        out = [tok]
+        pos = jnp.int32(prompt_len)
+        for i in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            tok, cache = self._decode(self.params, cache, tok, pos + i, sub)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,22 @@
+"""Token samplers: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits, key=None):
+    """logits: (b, 1, V) -> (b, 1) i32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
+    x = logits.astype(jnp.float32) / max(temp, 1e-6)
+    if top_k:
+        v, _ = jax.lax.top_k(x, top_k)
+        cutoff = v[..., -1:]
+        x = jnp.where(x < cutoff, -1e30, x)
+    b, s, _ = x.shape
+    flat = x.reshape(b * s, -1)
+    toks = jax.random.categorical(key, flat)
+    return toks.reshape(b, s).astype(jnp.int32)

@@ -1,0 +1,186 @@
+"""PartitionSpec rules: path-pattern -> logical sharding, per leaf.
+
+Strategy (DESIGN.md §2/§5):
+  * `model` axis: tensor parallel on attention head / FFN-hidden dims;
+    EXPERT parallel on MoE banks (the expert axis shards, expert interiors
+    stay whole — fine-grained MoE's natural layout);
+  * `data` axis: FSDP on the d_model ("reduce") dim of the big projections
+    + batch sharding of activations;
+  * `pod` axis (multi-pod): batch/teams (DCN only sees per-round PerMFL
+    aggregates + gradient all-reduce).
+
+Non-divisible cases (56 q-heads / 16, kv=8 / 16, vocab 51865 / 16) rely on
+GSPMD's implicit padding — structural waste is counted by the
+MODEL_FLOPS/HLO_FLOPs ratio in §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (path regex, spec builder(leaf_ndim) -> PartitionSpec)
+# Paths look like: blocks/pos0/attn/wq, blocks/pos3/moe/experts/w_gate, ...
+# Leaves under blocks/ carry a leading n_blocks axis (the scan axis).
+
+def _rules(data_axes):
+    """data_axes: name or tuple for the FSDP/"reduce" dim."""
+    da = data_axes
+    return [
+        # --- attention ---
+        (r"attn/wq$|attn/wk$|attn/wv$|cross/wq$|cross/wk$|cross/wv$",
+         lambda nd: P(*([None] * (nd - 2)), da, "model")),
+        (r"attn/wo$|cross/wo$",
+         lambda nd: P(*([None] * (nd - 2)), "model", da)),
+        (r"attn/b[qkv]$", lambda nd: P(*([None] * (nd - 1)), "model")),
+        # --- dense mlp ---
+        (r"mlp/w_gate$|mlp/w_up$|shared/w_gate$|shared/w_up$|mlp/w_in$",
+         lambda nd: P(*([None] * (nd - 2)), da, "model")),
+        (r"mlp/w_down$|shared/w_down$|mlp/w_out$",
+         lambda nd: P(*([None] * (nd - 2)), "model", da)),
+        (r"mlp/b_in$", lambda nd: P(*([None] * (nd - 1)), "model")),
+        # --- moe: expert parallel over `model`, FSDP on the d dim ---
+        (r"experts/w_(gate|up)$",
+         lambda nd: P(*([None] * (nd - 3)), "model", da, None)),
+        (r"experts/w_down$",
+         lambda nd: P(*([None] * (nd - 3)), "model", None, da)),
+        (r"moe/router$", lambda nd: P()),
+        # --- mamba ---
+        (r"mamba/in_proj$", lambda nd: P(*([None] * (nd - 2)), da, "model")),
+        (r"mamba/out_proj$", lambda nd: P(*([None] * (nd - 2)), "model", da)),
+        (r"mamba/conv_w$", lambda nd: P(*([None] * (nd - 1)), "model")),
+        (r"mamba/conv_b$|mamba/dt_bias$|mamba/D$",
+         lambda nd: P(*([None] * (nd - 1)), "model")),
+        (r"mamba/x_proj$", lambda nd: P(*([None] * (nd - 2)), "model", None)),
+        (r"mamba/dt_proj$", lambda nd: P(*([None] * (nd - 2)), None, "model")),
+        (r"mamba/A_log$", lambda nd: P(*([None] * (nd - 2)), "model", None)),
+        # --- rwkv ---
+        (r"tm/w_[rkvg]$", lambda nd: P(*([None] * (nd - 2)), da, "model")),
+        (r"tm/w_o$", lambda nd: P(*([None] * (nd - 2)), "model", da)),
+        (r"tm/decay_A$", lambda nd: P(*([None] * (nd - 2)), da, None)),
+        (r"tm/decay_B$", lambda nd: P(*([None] * (nd - 2)), None, "model")),
+        (r"tm/bonus_u$", lambda nd: P(*([None] * (nd - 2)), "model", None)),
+        (r"cm/w_k$", lambda nd: P(*([None] * (nd - 2)), da, "model")),
+        (r"cm/w_v$", lambda nd: P(*([None] * (nd - 2)), "model", da)),
+        (r"cm/w_r$", lambda nd: P(*([None] * (nd - 2)), da, "model")),
+        # --- embeddings / head ---
+        (r"^embed$", lambda nd: P("model", None)),
+        (r"^lm_head$", lambda nd: P(None, "model")),
+        # everything else (norm scales, mu_*, decay_w0, biases) replicated
+    ]
+
+
+def _leaf_path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_pspecs(params_tree, *, fsdp: bool = True,
+                 fsdp_axes="data") -> dict:
+    """Returns a pytree of PartitionSpec matching `params_tree`.
+
+    fsdp=False replicates the `data` dim (pure TP) — a perf-iteration knob.
+    """
+    rules = _rules(fsdp_axes if fsdp else None)
+
+    def spec_for(path, leaf):
+        pstr = _leaf_path_str(path)
+        for pat, builder in rules:
+            if re.search(pat, pstr):
+                spec = builder(leaf.ndim)
+                # drop None-fsdp placeholders
+                if not fsdp:
+                    spec = P(*[None if s == fsdp_axes or s is None and False
+                               else s for s in spec])
+                return spec
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_tree)
+
+
+def batch_pspecs(batch_tree, *, batch_axes) -> dict:
+    """Shard the leading (batch) dim of every input over `batch_axes`;
+    replicate if the batch is smaller than the axes product."""
+    def spec_for(leaf):
+        return P(batch_axes, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(spec_for, batch_tree)
+
+
+def cache_pspecs(cache_tree, *, batch_axes, mesh_batch: int) -> dict:
+    """KV/state cache sharding: batch over data axes when divisible,
+    heads/feature dim over model."""
+    def spec_for(path, leaf):
+        pstr = _leaf_path_str(path)
+        b_ok = leaf.ndim >= 2 and leaf.shape[1] % mesh_batch == 0 and \
+            leaf.shape[1] >= mesh_batch
+        b_ax = batch_axes if b_ok else None
+        if re.search(r"/k$|/v$|cross_k$|cross_v$", pstr):
+            # (n_blocks, b, s, h_kv, hd). When the batch can't shard
+            # (long_500k: b=1), shard the KV *sequence* over the data axes
+            # instead — the long-context cache is the dominant buffer and
+            # must not be replicated 256x.
+            s_ok = (b_ax is None and leaf.ndim >= 3 and
+                    leaf.shape[2] % mesh_batch == 0 and
+                    leaf.shape[2] >= mesh_batch)
+            return P(None, b_ax, batch_axes if s_ok else None, "model", None)
+        if re.search(r"/conv$", pstr):      # (n_blocks, b, d_conv-1, d_in)
+            return P(None, b_ax, None, "model")
+        if re.search(r"/ssm$", pstr):       # (n_blocks, b, d_in, N)
+            return P(None, b_ax, "model", None)
+        if re.search(r"/wkv$", pstr):       # (n_blocks, b, h, n, n)
+            return P(None, b_ax, "model", None, None)
+        if re.search(r"tm_last$|cm_last$", pstr):  # (n_blocks, b, d)
+            return P(None, b_ax, "model")
+        return P()
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+def _axes_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, (tuple, list)):
+        out = 1
+        for a in axes:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axes]
+
+
+def validate_pspecs(shape_tree, pspec_tree, mesh: Mesh):
+    """Drop spec axes that don't divide the corresponding dim (explicit
+    pjit arg shardings require exact divisibility — e.g. whisper's vocab
+    51865 on a 16-way model axis, or 8 kv heads on 16)."""
+    def fix(leaf, spec):
+        out = []
+        for i, axes in enumerate(spec):
+            if axes is not None and (i >= len(leaf.shape) or
+                                     leaf.shape[i] % _axes_size(mesh, axes)
+                                     or leaf.shape[i] < _axes_size(mesh, axes)):
+                out.append(None)
+            else:
+                out.append(axes)
+        return P(*out)
+    return jax.tree_util.tree_map(fix, shape_tree, pspec_tree)
+
+
+def to_named(tree_of_pspecs, mesh: Mesh, shape_tree=None):
+    """PartitionSpec tree -> NamedSharding tree; if shape_tree is given,
+    non-dividing axes are dropped first."""
+    if shape_tree is not None:
+        tree_of_pspecs = validate_pspecs(shape_tree, tree_of_pspecs, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def fl_pspecs(stacked_tree, *, team_axis="pod", device_axis="data"):
+    """Stacked-FL sharding (DESIGN.md §2 mode 1): theta (M, N, ...) shards
+    teams over `team_axis` and devices over `device_axis`."""
+    def spec_for(leaf):
+        if leaf.ndim >= 2:
+            return P(team_axis, device_axis, *([None] * (leaf.ndim - 2)))
+        return P(team_axis)
+    return jax.tree.map(spec_for, stacked_tree)

@@ -1,0 +1,6 @@
+from repro.train import checkpoint, fl_trainer, metrics, optim, trainer
+from repro.train.optim import adamw, momentum, sgd
+from repro.train.train_state import TrainState
+
+__all__ = ["checkpoint", "fl_trainer", "metrics", "optim", "trainer",
+           "adamw", "momentum", "sgd", "TrainState"]

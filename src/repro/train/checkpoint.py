@@ -1,0 +1,61 @@
+"""Pytree checkpointing: msgpack index + raw npy payloads in a zip.
+
+No orbax in this environment; this is a self-contained format:
+np.savez with flattened key paths, plus a msgpack manifest carrying tree
+structure and metadata (step, config name).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import zipfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, *, metadata: dict | None = None):
+    flat = _flatten_with_paths(tree)
+    treedef = jax.tree.structure(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with zipfile.ZipFile(path, "w", zipfile.ZIP_STORED) as zf:
+        manifest = {
+            "keys": list(flat.keys()),
+            "treedef": str(treedef),
+            "metadata": metadata or {},
+        }
+        zf.writestr("manifest.json", json.dumps(manifest))
+        for k, v in flat.items():
+            buf = io.BytesIO()
+            np.save(buf, v)
+            zf.writestr(f"arrays/{k.replace('/', '__')}.npy", buf.getvalue())
+
+
+def restore_checkpoint(path: str, like_tree):
+    """Restores into the structure of `like_tree` (leaf order match)."""
+    with zipfile.ZipFile(path, "r") as zf:
+        manifest = json.loads(zf.read("manifest.json"))
+        arrays = {}
+        for k in manifest["keys"]:
+            buf = io.BytesIO(zf.read(f"arrays/{k.replace('/', '__')}.npy"))
+            arrays[k] = np.load(buf)
+    ref = _flatten_with_paths(like_tree)
+    assert set(ref.keys()) == set(arrays.keys()), \
+        f"checkpoint/tree key mismatch: {set(ref) ^ set(arrays)}"
+    leaves, treedef = jax.tree.flatten(like_tree)
+    paths = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+        for pth, _ in jax.tree_util.tree_flatten_with_path(like_tree)[0]]
+    new_leaves = [arrays[p] for p in paths]
+    return jax.tree.unflatten(treedef, new_leaves), \
+        json.loads(json.dumps(manifest["metadata"]))

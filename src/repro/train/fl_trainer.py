@@ -1,0 +1,195 @@
+"""FL trainer: drives PerMFL (and the baselines) over stacked federated
+data — the paper-faithful experiment loop behind benchmarks/ and examples/.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PerMFLHParams, eval_stacked, init_state,
+                        permfl_round)
+from repro.core import baselines as B
+from repro.core.participation import sample_masks
+
+
+@dataclass
+class FLResult:
+    pm_acc: list = field(default_factory=list)   # per-round personalized acc
+    tm_acc: list = field(default_factory=list)
+    gm_acc: list = field(default_factory=list)
+    train_loss: list = field(default_factory=list)
+    seconds: float = 0.0
+
+    def last(self, which="pm"):
+        hist = {"pm": self.pm_acc, "tm": self.tm_acc, "gm": self.gm_acc}[which]
+        return hist[-1] if hist else float("nan")
+
+    def best(self, which="pm"):
+        hist = {"pm": self.pm_acc, "tm": self.tm_acc, "gm": self.gm_acc}[which]
+        return max(hist) if hist else float("nan")
+
+
+def run_permfl(params0, train_data, val_data, *, loss_fn, metric_fn,
+               hp: PerMFLHParams, rounds: int, m: int, n: int,
+               team_frac: float = 1.0, device_frac: float = 1.0,
+               seed: int = 0, eval_every: int = 1) -> FLResult:
+    state = init_state(params0, m, n)
+    key = jax.random.PRNGKey(seed)
+    res = FLResult()
+    t0 = time.time()
+    for t in range(rounds):
+        if team_frac < 1.0 or device_frac < 1.0:
+            key, sub = jax.random.split(key)
+            tm, dm = sample_masks(sub, m, n, team_frac=team_frac,
+                                  device_frac=device_frac)
+        else:
+            tm = dm = None
+        state = permfl_round(state, train_data, hp, loss_fn,
+                             m_teams=m, n_devices=n,
+                             team_mask=tm, device_mask=dm)
+        if t % eval_every == 0 or t == rounds - 1:
+            res.pm_acc.append(float(
+                eval_stacked(state, val_data, metric_fn, which="pm").mean()))
+            res.tm_acc.append(float(
+                eval_stacked(state, val_data, metric_fn, which="tm").mean()))
+            res.gm_acc.append(float(
+                eval_stacked(state, val_data, metric_fn, which="gm").mean()))
+            res.train_loss.append(float(jax.vmap(jax.vmap(loss_fn))(
+                state.theta, train_data).mean()))
+    res.seconds = time.time() - t0
+    res.state = state
+    return res
+
+
+def _eval_global(x, val_data, metric_fn):
+    return float(jax.vmap(jax.vmap(lambda d: metric_fn(x, d)))
+                 (val_data).mean())
+
+
+def _eval_stackedq(theta, val_data, metric_fn):
+    return float(jax.vmap(jax.vmap(metric_fn))(theta, val_data).mean())
+
+
+def run_fedavg(params0, train_data, val_data, *, loss_fn, metric_fn,
+               lr: float, local_steps: int, rounds: int, m: int,
+               n: int, eval_every: int = 1) -> FLResult:
+    x = params0
+    res = FLResult()
+    t0 = time.time()
+    for t in range(rounds):
+        x = B.fedavg_round(x, train_data, loss_fn=loss_fn, lr=lr,
+                           local_steps=local_steps, m=m, n=n)
+        if t % eval_every == 0 or t == rounds - 1:
+            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
+    res.seconds = time.time() - t0
+    res.state = x
+    return res
+
+
+def run_perfedavg(params0, train_data, val_data, *, loss_fn, metric_fn,
+                  lr: float, inner_lr: float, local_steps: int, rounds: int,
+                  m: int, n: int, eval_every: int = 1) -> FLResult:
+    x = params0
+    res = FLResult()
+    t0 = time.time()
+    for t in range(rounds):
+        x = B.perfedavg_round(x, train_data, loss_fn=loss_fn, lr=lr,
+                              inner_lr=inner_lr, local_steps=local_steps,
+                              m=m, n=n)
+        if t % eval_every == 0 or t == rounds - 1:
+            theta = B.perfedavg_personalize(x, train_data, loss_fn=loss_fn,
+                                            inner_lr=inner_lr, m=m, n=n)
+            res.pm_acc.append(_eval_stackedq(theta, val_data, metric_fn))
+            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
+    res.seconds = time.time() - t0
+    return res
+
+
+def run_pfedme(params0, train_data, val_data, *, loss_fn, metric_fn,
+               lr: float, inner_lr: float, lam: float, inner_steps: int,
+               local_rounds: int, rounds: int, m: int, n: int,
+               eval_every: int = 1) -> FLResult:
+    x = params0
+    res = FLResult()
+    t0 = time.time()
+    for t in range(rounds):
+        x, theta = B.pfedme_round(
+            x, train_data, loss_fn=loss_fn, lr=lr, inner_lr=inner_lr,
+            lam=lam, inner_steps=inner_steps, local_rounds=local_rounds,
+            m=m, n=n)
+        if t % eval_every == 0 or t == rounds - 1:
+            res.pm_acc.append(_eval_stackedq(theta, val_data, metric_fn))
+            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
+    res.seconds = time.time() - t0
+    return res
+
+
+def run_ditto(params0, train_data, val_data, *, loss_fn, metric_fn,
+              lr: float, lam: float, local_steps: int, rounds: int,
+              m: int, n: int, eval_every: int = 1) -> FLResult:
+    x = params0
+    v = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None, None], (m, n) + p.shape).copy(),
+        params0)
+    res = FLResult()
+    t0 = time.time()
+    for t in range(rounds):
+        x, v = B.ditto_round(x, v, train_data, loss_fn=loss_fn, lr=lr,
+                             lam=lam, local_steps=local_steps, m=m, n=n)
+        if t % eval_every == 0 or t == rounds - 1:
+            res.pm_acc.append(_eval_stackedq(v, val_data, metric_fn))
+            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
+    res.seconds = time.time() - t0
+    return res
+
+
+def run_hsgd(params0, train_data, val_data, *, loss_fn, metric_fn,
+             lr: float, k_team: int, l_local: int, rounds: int,
+             m: int, n: int, eval_every: int = 1) -> FLResult:
+    x = params0
+    res = FLResult()
+    t0 = time.time()
+    for t in range(rounds):
+        x = B.hsgd_round(x, train_data, loss_fn=loss_fn, lr=lr,
+                         k_team=k_team, l_local=l_local, m=m, n=n)
+        if t % eval_every == 0 or t == rounds - 1:
+            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
+    res.seconds = time.time() - t0
+    return res
+
+
+def run_l2gd(params0, train_data, val_data, *, loss_fn, metric_fn,
+             lr: float, lam_c: float, lam_g: float, k_team: int,
+             l_local: int, rounds: int, m: int, n: int,
+             eval_every: int = 1) -> FLResult:
+    x = params0
+    theta = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None, None], (m, n) + p.shape).copy(),
+        params0)
+    res = FLResult()
+    t0 = time.time()
+    for t in range(rounds):
+        x, theta = B.l2gd_round(x, theta, train_data, loss_fn=loss_fn,
+                                lr=lr, lam_c=lam_c, lam_g=lam_g,
+                                k_team=k_team, l_local=l_local, m=m, n=n)
+        if t % eval_every == 0 or t == rounds - 1:
+            res.pm_acc.append(_eval_stackedq(theta, val_data, metric_fn))
+            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
+    res.seconds = time.time() - t0
+    return res
+
+
+ALGORITHMS = {
+    "permfl": run_permfl,
+    "fedavg": run_fedavg,
+    "perfedavg": run_perfedavg,
+    "pfedme": run_pfedme,
+    "ditto": run_ditto,
+    "hsgd": run_hsgd,
+    "l2gd": run_l2gd,
+}

@@ -1,0 +1,28 @@
+"""Small metric utilities shared by trainers and benchmarks."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def token_accuracy(logits, targets):
+    mask = (targets >= 0)
+    pred = jnp.argmax(logits, -1)
+    return ((pred == targets) & mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def perplexity(loss):
+    return jnp.exp(loss)
+
+
+class RunningMean:
+    def __init__(self):
+        self.total = 0.0
+        self.count = 0
+
+    def update(self, value, n: int = 1):
+        self.total += float(value) * n
+        self.count += n
+
+    @property
+    def mean(self):
+        return self.total / max(self.count, 1)

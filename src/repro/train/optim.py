@@ -1,0 +1,88 @@
+"""Optimizers on pytrees (no optax in this environment).
+
+sgd / momentum / adamw, each as (init(params) -> opt_state,
+update(grads, opt_state, params, lr) -> (updates, opt_state)). Updates are
+*subtracted* by the caller (TrainState.apply_gradients).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+    name: str = "opt"
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        return jax.tree.map(lambda g: lr * g, grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(mu: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, buf, params, lr):
+        buf = jax.tree.map(lambda b, g: mu * b + g.astype(jnp.float32),
+                           buf, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda b, g: lr * (mu * b + g), buf, grads)
+        else:
+            upd = jax.tree.map(lambda b: lr * b, buf)
+        return upd, buf
+
+    return Optimizer(init, update, "momentum")
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) *
+                         g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(mm, vv, p):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update, "adamw")
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.vdot(x, x).real
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm

@@ -1,0 +1,37 @@
+"""TrainState: params + optimizer state + step, as a registered pytree."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optim import Optimizer
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def create(cls, params, opt: Optimizer):
+        return cls(params=params, opt_state=opt.init(params),
+                   step=jnp.zeros((), jnp.int32))
+
+    def apply_gradients(self, grads, opt: Optimizer, lr):
+        updates, new_opt = opt.update(grads, self.opt_state, self.params, lr)
+        new_params = jax.tree.map(lambda p, u: (p - u).astype(p.dtype),
+                                  self.params, updates)
+        return TrainState(params=new_params, opt_state=new_opt,
+                          step=self.step + 1)

@@ -1,0 +1,129 @@
+"""Central trainer: standard (sharded) LM training of any zoo architecture.
+
+This is the substrate the tiered PerMFL trainer builds on; it is also the
+paper's implicit baseline (1) — plain ERM with a single decision variable.
+``make_train_step`` returns the jittable step used both for real CPU/TPU
+training (examples/) and for the multi-pod dry-run lowering (launch/).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.train.optim import Optimizer, clip_by_global_norm
+from repro.train.train_state import TrainState
+
+
+def make_train_step(cfg, opt: Optimizer, *, lr: float = 3e-4,
+                    grad_clip: float = 1.0, remat: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch):
+        def loss(params):
+            return model_lib.loss_fn(params, cfg, batch, remat=remat)
+
+        loss_val, grads = jax.value_and_grad(loss)(state.params)
+        if grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = jnp.zeros(())
+        state = state.apply_gradients(grads, opt, lr)
+        return state, {"loss": loss_val, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_permfl_device_step(cfg, *, alpha: float, lam: float,
+                            remat: bool = False):
+    """PerMFL device step at LLM scale (tier mode, DESIGN.md §2): one
+    prox-SGD step of theta toward the team anchor w (eq. 4), as the jittable
+    unit the launcher lowers for the dry-run.
+
+    step(theta, w, batch) -> (theta', metrics). theta/w: model params
+    pytrees (w is the team model, replicated within a team's mesh slice).
+    """
+    from repro.kernels.prox_update import prox_sgd_tree
+
+    def device_step(theta, w, batch):
+        def loss(params):
+            return model_lib.loss_fn(params, cfg, batch, remat=remat)
+
+        loss_val, grads = jax.value_and_grad(loss)(theta)
+        theta, _ = prox_sgd_tree(theta, grads, w, alpha=alpha, lam=lam)
+        return theta, {"loss": loss_val}
+
+    return device_step
+
+
+def make_tier_round(cfg, *, alpha: float, lam: float, gamma: float,
+                    eta: float, beta: float, l_local: int,
+                    data_axis: str = "data", pod_axis: Optional[str] = "pod",
+                    remat: bool = False):
+    """Tiered PerMFL round at LLM scale for the multi-pod mesh.
+
+    Mapping (DESIGN.md §2): each pod is a team — devices are the
+    data-parallel replicas inside the pod (ICI collectives); the global
+    server averaging runs over the `pod` axis (DCN collective), once per
+    round instead of once per step — the paper's communication saving.
+
+    step(theta, w, x, batch) -> (theta', w', x', metrics), designed to be
+    jitted with in/out shardings where theta/w/x are identically sharded
+    over the `model` axis and batch is sharded over (pod, data).
+
+    Per-replica gradients are implicitly averaged over (pod, data) by jit
+    (batch is sharded, loss is a mean); the *tier structure* is expressed
+    through which model gets pulled toward which anchor and how often.
+    """
+    from repro.kernels.prox_update import prox_sgd_tree
+
+    def round_fn(theta, w, x, batch):
+        loss_val = jnp.zeros(())
+
+        def one_local(i, carry):
+            theta, loss_acc = carry
+
+            def loss(params):
+                return model_lib.loss_fn(params, cfg, batch, remat=remat)
+
+            lv, grads = jax.value_and_grad(loss)(theta)
+            theta, _ = prox_sgd_tree(theta, grads, w, alpha=alpha, lam=lam)
+            return theta, loss_acc + lv
+
+        theta, loss_val = jax.lax.fori_loop(0, l_local, one_local,
+                                            (theta, loss_val))
+        # team update (eq. 9): theta-bar == theta here (one replica's view;
+        # cross-replica averaging of theta is the psum jit inserts when the
+        # outputs are requested replicated).
+        c = 1.0 - eta * lam - eta * gamma
+        w = jax.tree.map(lambda wl, xl, tb: c * wl + eta * gamma * xl
+                         + lam * eta * tb, w, x, theta)
+        # server update (eq. 13) over pods
+        x = jax.tree.map(lambda xl, wl: (1 - beta * gamma) * xl
+                         + beta * gamma * wl, x, w)
+        return theta, w, x, {"loss": loss_val / l_local}
+
+    return round_fn
+
+
+def train_loop(cfg, batches, *, opt: Optimizer, lr: float = 3e-4,
+               steps: int = 100, seed: int = 0, log_every: int = 10,
+               param_dtype=jnp.float32, callback=None):
+    """Simple single-host loop used by examples and integration tests."""
+    params = model_lib.init_params(jax.random.PRNGKey(seed), cfg,
+                                   dtype=param_dtype)
+    state = TrainState.create(params, opt)
+    step_fn = jax.jit(make_train_step(cfg, opt, lr=lr))
+    history = []
+    for i, batch in zip(range(steps), batches):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = step_fn(state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            loss = float(metrics["loss"])
+            history.append((i, loss))
+            if callback:
+                callback(i, loss)
+    return state, history

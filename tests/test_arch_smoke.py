@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned arch (<=2 layers, d_model<=512, <=4 experts) runs one forward and
+one train step on CPU; output shapes are checked and outputs are NaN-free."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.configs.base import (INPUT_SHAPES, active_param_count,
+                                param_count)
+from repro.models import model as M
+from repro.train import optim
+from repro.train.train_state import TrainState
+from repro.train.trainer import make_train_step
+
+
+def _reduced_batch(cfg, b=2, s=16, key=None):
+    key = key or jax.random.PRNGKey(0)
+    batch = {}
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.random.normal(key, (b, s, cfg.d_model))
+        batch["mrope_positions"] = jnp.tile(
+            jnp.arange(s, dtype=jnp.int32)[None, :, None], (b, 1, 3))
+    elif cfg.is_encoder_decoder:
+        batch["enc_frames"] = jax.random.normal(
+            key, (b, cfg.encoder_seq_len, cfg.d_model))
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch["targets"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return batch
+
+
+def test_reduced_configs_respect_limits():
+    for arch in ARCH_IDS:
+        r = get_reduced_config(arch)
+        assert r.num_layers <= 8, arch          # jamba keeps one 1:7 block
+        assert r.d_model <= 512, arch
+        assert r.moe.num_experts <= 4, arch
+
+
+def test_full_configs_match_assignment():
+    """The exact dimensions from the assignment table."""
+    expect = {
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "rwkv6-7b": (32, 4096, 32, 32, 14336, 65536),
+    }
+    for arch, (nl, dm, nh, nkv, dff, v) in expect.items():
+        c = get_config(arch)
+        assert c.num_layers == nl, arch
+        assert c.d_model == dm, arch
+        if c.family != "ssm":
+            assert c.num_heads == nh, arch
+            assert c.num_kv_heads == nkv, arch
+        assert c.d_ff == dff, (arch, c.d_ff)
+        assert c.vocab_size == v, arch
+        assert c.citation, f"{arch} missing citation"
+
+
+def test_structural_features():
+    assert get_config("qwen3-14b").use_qk_norm
+    assert get_config("qwen1.5-32b").use_qkv_bias
+    assert get_config("qwen2-vl-2b").use_mrope
+    assert get_config("whisper-small").is_encoder_decoder
+    dsm = get_config("deepseek-moe-16b").moe
+    assert (dsm.num_experts, dsm.num_shared_experts, dsm.top_k) == (64, 2, 6)
+    dbrx = get_config("dbrx-132b").moe
+    assert (dbrx.num_experts, dbrx.top_k) == (16, 4)
+    jamba = get_config("jamba-1.5-large-398b")
+    kinds = jamba.layer_kinds()
+    assert kinds.count("attn") * 8 == len(kinds)   # 1:7 attn:mamba
+    assert jamba.moe.num_experts == 16 and jamba.moe.top_k == 2
+    assert get_config("rwkv6-7b").family == "ssm"
+
+
+def test_param_counts_near_nameplate():
+    """Analytic param counts should be within ~35% of the model names
+    (names round aggressively; whisper-small is 244M)."""
+    nameplate = {
+        "phi3-mini-3.8b": 3.8e9, "qwen2-vl-2b": 1.5e9,
+        "qwen1.5-32b": 32e9, "deepseek-moe-16b": 16e9,
+        "whisper-small": 0.244e9, "qwen3-14b": 14e9, "dbrx-132b": 132e9,
+        "jamba-1.5-large-398b": 398e9, "yi-34b": 34e9, "rwkv6-7b": 7e9,
+    }
+    for arch, want in nameplate.items():
+        got = param_count(get_config(arch))
+        assert 0.6 * want < got < 1.45 * want, \
+            f"{arch}: {got/1e9:.2f}B vs nameplate {want/1e9:.1f}B"
+
+
+def test_moe_active_params_smaller():
+    for arch in ("deepseek-moe-16b", "dbrx-132b", "jamba-1.5-large-398b"):
+        cfg = get_config(arch)
+        assert active_param_count(cfg) < 0.6 * param_count(cfg), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_reduced_config(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _reduced_batch(cfg)
+    logits, aux = M.forward(params, cfg, batch)
+    b, s = batch["targets"].shape
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_reduces_loss(arch):
+    """One forward + 8 SGD steps on a fixed batch must reduce the loss and
+    keep params finite (the per-arch smoke train step)."""
+    cfg = get_reduced_config(arch)
+    opt = optim.adamw()
+    step = jax.jit(make_train_step(cfg, opt, lr=3e-3))
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    state = TrainState.create(params, opt)
+    batch = _reduced_batch(cfg)
+    first = None
+    for i in range(8):
+        state, metrics = step(state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+    last = float(metrics["loss"])
+    assert np.isfinite(last)
+    assert last < first, f"{arch}: loss {first} -> {last}"
+    for leaf in jax.tree.leaves(state.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_cover_all_shapes(arch):
+    cfg = get_config(arch)
+    for name, shp in INPUT_SHAPES.items():
+        kind = shp.kind
+        spec = M.input_specs(cfg, batch=shp.global_batch, seq_len=shp.seq_len,
+                             kind=kind)
+        assert spec, (arch, name)
+        for leaf in jax.tree.leaves(spec):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)

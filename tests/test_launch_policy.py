@@ -1,0 +1,86 @@
+"""Launch-layer policy units (no 512-device init needed): shape policy,
+SWA resolution, cache sizing, mesh helpers."""
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+
+# importing repro.launch.dryrun sets XLA_FLAGS for 512 host devices, which
+# only takes effect if jax is not yet initialized — initialize it first so
+# this test file can never change the device count for the rest of the
+# session, regardless of test ordering.
+jax.devices()
+
+
+def _resolve(arch, shape):
+    # import inside: dryrun sets XLA_FLAGS at module import, which is fine
+    # in-process as long as jax was already initialized (flag is ignored).
+    from repro.launch.dryrun import cache_len_for, resolve_config
+    return resolve_config(arch, shape), cache_len_for
+
+
+def test_long500k_dense_gets_sliding_window():
+    for arch in ("phi3-mini-3.8b", "yi-34b", "qwen3-14b", "qwen1.5-32b",
+                 "dbrx-132b", "deepseek-moe-16b", "qwen2-vl-2b"):
+        (cfg, skip), _ = _resolve(arch, "long_500k")
+        assert skip is None, arch
+        assert cfg.sliding_window > 0, arch
+
+
+def test_long500k_ssm_hybrid_native():
+    for arch in ("rwkv6-7b", "jamba-1.5-large-398b"):
+        (cfg, skip), _ = _resolve(arch, "long_500k")
+        assert skip is None
+        assert cfg.sliding_window == 0, f"{arch} should run natively"
+
+
+def test_long500k_whisper_skipped():
+    (cfg, skip), _ = _resolve("whisper-small", "long_500k")
+    assert skip is not None and "448" in skip
+
+
+def test_swa_cache_is_window_sized():
+    from repro.launch.dryrun import cache_len_for, resolve_config
+
+    cfg, _ = resolve_config("yi-34b", "long_500k")
+    assert cache_len_for(cfg, INPUT_SHAPES["long_500k"]) == \
+        cfg.sliding_window
+    cfg2, _ = resolve_config("yi-34b", "decode_32k")
+    assert cache_len_for(cfg2, INPUT_SHAPES["decode_32k"]) == 32_768
+
+
+def test_other_shapes_never_skip():
+    from repro.launch.dryrun import resolve_config
+
+    for arch in ARCH_IDS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            _, skip = resolve_config(arch, shape)
+            assert skip is None, (arch, shape)
+
+
+def test_mesh_helpers():
+    from repro.launch.mesh import batch_axes, mesh_batch_size
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    assert batch_axes(FakeMesh()) == ("pod", "data")
+    assert mesh_batch_size(FakeMesh()) == 32
+
+
+def test_decode_tp_gate_thresholds():
+    """The pure-TP serving gate: small dense models qualify; 32B+ and MoE
+    banks do not (they would not fit a 16 GB v5e at TP-16)."""
+    from repro.configs.base import param_count
+
+    qualifies = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        qualifies[arch] = 2 * param_count(cfg) / 16 < 4e9
+    assert qualifies["phi3-mini-3.8b"]
+    assert qualifies["rwkv6-7b"]
+    assert qualifies["deepseek-moe-16b"]
+    assert not qualifies["dbrx-132b"]
+    assert not qualifies["jamba-1.5-large-398b"]
+    assert not qualifies["yi-34b"]

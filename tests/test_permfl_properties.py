@@ -1,0 +1,174 @@
+"""Hypothesis property tests on PerMFL invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.permfl import (PerMFLHParams, _masked_mean, init_state,
+                               permfl_round)
+
+SET = dict(max_examples=15, deadline=None)
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum((params - batch["c"]) ** 2)
+
+
+small_f = st.floats(min_value=-3.0, max_value=3.0, allow_nan=False,
+                    width=32)
+
+
+# ---------------------------------------------------------------------------
+# _masked_mean
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(0))
+def test_masked_mean_full_mask_is_mean(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, n, 3)).astype(np.float32))
+    mask = jnp.ones((m, n), jnp.float32)
+    out = _masked_mean({"a": x}, mask, axis=1)["a"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x.mean(1)),
+                               atol=1e-6)
+
+
+@settings(**SET)
+@given(st.integers(2, 5), st.integers(2, 6), st.integers(0),
+       st.integers(0, 100))
+def test_masked_mean_ignores_masked_rows(m, n, seed, mseed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, n, 2)).astype(np.float32)
+    mask = np.random.default_rng(mseed).integers(0, 2, (m, n)).astype(
+        np.float32)
+    fb = rng.normal(size=(m, 2)).astype(np.float32)
+    out = np.asarray(_masked_mean({"a": jnp.asarray(x)},
+                                  jnp.asarray(mask), axis=1,
+                                  fallback={"a": jnp.asarray(fb)})["a"])
+    for i in range(m):
+        sel = mask[i] > 0
+        want = x[i][sel].mean(0) if sel.any() else fb[i]
+        np.testing.assert_allclose(out[i], want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fixed point / pull-strength invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(small_f, st.integers(0))
+def test_identical_optimum_is_fixed_point(cval, seed):
+    """If every device's optimum is the same c and all tiers start at c,
+    one round leaves the state at c (gradients vanish, pulls vanish)."""
+    m, n, d = 2, 3, 4
+    c = jnp.full((m, n, d), cval, jnp.float32)
+    hp = PerMFLHParams(alpha=0.1, eta=0.05, beta=0.3, lam=1.0, gamma=2.0,
+                       k_team=2, l_local=3)
+    st0 = init_state(jnp.full((d,), cval), m, n)
+    st1 = permfl_round(st0, {"c": c}, hp, quad_loss, m_teams=m, n_devices=n)
+    np.testing.assert_allclose(np.asarray(st1.x), cval, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st1.w), cval, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st1.theta), cval, atol=1e-6)
+
+
+@settings(**SET)
+@given(st.integers(0), st.floats(5.0, 50.0))
+def test_larger_gamma_keeps_teams_closer_to_global(seed, gamma_hi):
+    """gamma controls the team<->global pull: larger gamma => smaller
+    ||w_i - x|| after a round (paper §3.2)."""
+    m, n, d = 3, 2, 4
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.normal(size=(m, n, d)).astype(np.float32))
+    st0 = init_state(jnp.zeros(d), m, n)
+
+    def spread(gamma):
+        # eta scaled to respect eta <= 1/(2(lam+gamma)) for both gammas
+        hp = PerMFLHParams(alpha=0.05, eta=1.0 / (2 * (0.5 + gamma_hi + 1)),
+                           beta=0.1, lam=0.5, gamma=gamma, k_team=4,
+                           l_local=4)
+        s = permfl_round(st0, {"c": c}, hp, quad_loss, m_teams=m,
+                         n_devices=n)
+        # distance of team models from the (x0 = 0) global anchor
+        return float(jnp.sum(jnp.square(s.w)))
+
+    lo = spread(1.0)
+    hi = spread(gamma_hi)
+    assert hi <= lo + 1e-9, (lo, hi)
+
+
+@settings(**SET)
+@given(st.integers(0), st.floats(5.0, 40.0))
+def test_larger_lambda_keeps_devices_closer_to_team(seed, lam_hi):
+    m, n, d = 2, 3, 4
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.normal(size=(m, n, d)).astype(np.float32))
+    st0 = init_state(jnp.zeros(d), m, n)
+
+    def spread(lam):
+        alpha = 1.0 / (1.0 + lam_hi + 1)   # alpha <= 1/(L_f+lam)
+        hp = PerMFLHParams(alpha=alpha, eta=0.01, beta=0.1, lam=lam,
+                           gamma=2 * lam_hi + 1, k_team=2, l_local=6)
+        s = permfl_round(st0, {"c": c}, hp, quad_loss, m_teams=m,
+                         n_devices=n)
+        return float(jnp.sum((s.theta - np.asarray(s.w)[:, None]) ** 2))
+
+    assert spread(lam_hi) <= spread(0.5) + 1e-9
+
+
+@settings(**SET)
+@given(st.integers(0))
+def test_round_is_deterministic(seed):
+    m, n, d = 2, 2, 3
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.normal(size=(m, n, d)).astype(np.float32))
+    hp = PerMFLHParams(k_team=2, l_local=2)
+    st0 = init_state(jnp.zeros(d), m, n)
+    s1 = permfl_round(st0, {"c": c}, hp, quad_loss, m_teams=m, n_devices=n)
+    s2 = permfl_round(st0, {"c": c}, hp, quad_loss, m_teams=m, n_devices=n)
+    np.testing.assert_array_equal(np.asarray(s1.x), np.asarray(s2.x))
+    np.testing.assert_array_equal(np.asarray(s1.theta), np.asarray(s2.theta))
+
+
+# ---------------------------------------------------------------------------
+# prox_sgd ref formula properties
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(st.integers(1, 300), small_f, st.floats(0.0, 2.0),
+       st.floats(0.001, 0.3))
+def test_prox_step_interpolates_toward_anchor(n, val, lam, alpha):
+    """With zero gradient the prox step is a convex pull toward the anchor:
+    theta' = theta - alpha*lam*(theta - w), strictly between theta and w."""
+    from repro.kernels.prox_update.ref import prox_sgd_ref
+
+    theta = jnp.full((n,), val + 1.0)
+    w = jnp.full((n,), val)
+    g = jnp.zeros((n,))
+    t2, _ = prox_sgd_ref(theta, g, w, alpha=alpha, lam=lam)
+    expect = theta - alpha * lam * (theta - w)
+    np.testing.assert_allclose(np.asarray(t2), np.asarray(expect), atol=1e-6)
+    if lam > 0 and alpha * lam < 1:
+        assert ((np.asarray(t2) >= np.asarray(w)).all() and
+                (np.asarray(t2) <= np.asarray(theta)).all())
+
+
+# ---------------------------------------------------------------------------
+# participation sampling
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(st.integers(0, 1000), st.floats(0.1, 1.0), st.floats(0.1, 1.0))
+def test_sample_masks_counts(seed, tf, df):
+    from repro.core.participation import sample_masks
+
+    m, n = 8, 10
+    tm, dm = sample_masks(jax.random.PRNGKey(seed), m, n, team_frac=tf,
+                          device_frac=df)
+    tm, dm = np.asarray(tm), np.asarray(dm)
+    assert tm.shape == (m,) and dm.shape == (m, n)
+    assert set(np.unique(tm)) <= {0.0, 1.0}
+    # at least one team participates; devices only within sampled teams
+    assert tm.sum() >= 1
+    assert (dm.sum(1)[tm > 0] >= 1).all()
+    assert (dm.sum(1)[tm == 0] == 0).all()
+    assert tm.sum() == max(1, round(tf * m))

@@ -1,0 +1,70 @@
+"""Serving engine: batched generation, samplers, cache reuse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.serve.sampler import greedy, temperature
+
+
+def test_greedy_sampler():
+    logits = jnp.zeros((2, 1, 8)).at[0, 0, 3].set(5.0).at[1, 0, 6].set(5.0)
+    toks = greedy(logits)
+    assert toks.shape == (2, 1)
+    assert toks[0, 0] == 3 and toks[1, 0] == 6
+
+
+def test_temperature_sampler_topk():
+    logits = jnp.arange(8.0)[None, None, :]
+    key = jax.random.PRNGKey(0)
+    # with top_k=1 it must behave greedily regardless of temperature
+    toks = temperature(logits, key, temp=10.0, top_k=1)
+    assert int(toks[0, 0]) == 7
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "rwkv6-7b"])
+def test_engine_generates(arch):
+    cfg = get_reduced_config(arch).replace(vocab_size=64)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg=cfg, params=params, max_len=32)
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (3, 8),
+                                           0, 64)}
+    out = eng.generate(prompt, max_new_tokens=6)
+    assert out.shape == (3, 6)
+    assert ((np.asarray(out) >= 0) & (np.asarray(out) < 64)).all()
+
+
+def test_engine_greedy_matches_stepwise_forward():
+    """Engine greedy generation == argmax rollout via full forwards."""
+    cfg = get_reduced_config("phi3-mini-3.8b").replace(vocab_size=32)
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 6), 0, 32)
+    eng = ServeEngine(cfg=cfg, params=params, max_len=16)
+    out = np.asarray(eng.generate({"tokens": toks}, max_new_tokens=4))
+
+    seq = np.asarray(toks)
+    want = []
+    for _ in range(4):
+        logits, _ = M.forward(params, cfg,
+                              {"tokens": jnp.asarray(seq),
+                               "targets": jnp.asarray(seq)})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        want.append(nxt)
+        seq = np.concatenate([seq, [[nxt]]], axis=1)
+    assert out[0].tolist() == want, (out[0].tolist(), want)
+
+
+def test_engine_temperature_deterministic_per_seed():
+    cfg = get_reduced_config("phi3-mini-3.8b").replace(vocab_size=32)
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    eng = ServeEngine(cfg=cfg, params=params, max_len=16, sample="temp",
+                      temp=1.0)
+    prompt = {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    a = np.asarray(eng.generate(prompt, max_new_tokens=5, seed=7))
+    b = np.asarray(eng.generate(prompt, max_new_tokens=5, seed=7))
+    c = np.asarray(eng.generate(prompt, max_new_tokens=5, seed=8))
+    np.testing.assert_array_equal(a, b)
+    assert not (a == c).all() or True  # different seed may still collide

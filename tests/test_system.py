@@ -1,0 +1,91 @@
+"""End-to-end system behaviour: the paper's full loop (data -> teams ->
+PerMFL -> three models -> eval) plus a dry-run launch as a subprocess."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_full_paper_loop_mclr(small_fed_data):
+    """Data partition -> PerMFL -> PM/TM/GM hierarchy behaves as the paper
+    describes: PM >= TM >= GM under label-skew (within tolerance)."""
+    from repro.configs.paper_mclr import CONFIG as MCLR
+    from repro.core.permfl import PerMFLHParams
+    from repro.models import paper_models as PM
+    from repro.train.fl_trainer import run_permfl
+
+    fd = small_fed_data
+    params = PM.init_params(jax.random.PRNGKey(0), MCLR)
+    loss = lambda p, b: PM.loss_fn(p, MCLR, b)
+    met = lambda p, b: PM.accuracy(p, MCLR, b)
+    tr = {"x": jnp.asarray(fd.train_x), "y": jnp.asarray(fd.train_y)}
+    va = {"x": jnp.asarray(fd.val_x), "y": jnp.asarray(fd.val_y)}
+    res = run_permfl(params, tr, va, loss_fn=loss, metric_fn=met,
+                     hp=PerMFLHParams(k_team=3, l_local=5), rounds=10,
+                     m=fd.m_teams, n=fd.n_devices)
+    pm, tm, gm = res.pm_acc[-1], res.tm_acc[-1], res.gm_acc[-1]
+    assert pm > 0.9
+    assert pm >= tm - 0.05, (pm, tm)
+    assert tm >= gm - 0.25, (tm, gm)
+    # training loss decreased
+    assert res.train_loss[-1] < res.train_loss[0]
+
+
+def test_partial_participation_still_converges(small_fed_data):
+    from repro.configs.paper_mclr import CONFIG as MCLR
+    from repro.core.permfl import PerMFLHParams
+    from repro.models import paper_models as PM
+    from repro.train.fl_trainer import run_permfl
+
+    fd = small_fed_data
+    params = PM.init_params(jax.random.PRNGKey(0), MCLR)
+    loss = lambda p, b: PM.loss_fn(p, MCLR, b)
+    met = lambda p, b: PM.accuracy(p, MCLR, b)
+    tr = {"x": jnp.asarray(fd.train_x), "y": jnp.asarray(fd.train_y)}
+    va = {"x": jnp.asarray(fd.val_x), "y": jnp.asarray(fd.val_y)}
+    res = run_permfl(params, tr, va, loss_fn=loss, metric_fn=met,
+                     hp=PerMFLHParams(k_team=3, l_local=5), rounds=12,
+                     m=fd.m_teams, n=fd.n_devices, team_frac=0.5,
+                     device_frac=0.67, seed=1)
+    assert res.pm_acc[-1] > 0.75
+
+
+def test_dryrun_subprocess_single_combo():
+    """launch/dryrun.py in its own process (512 host devices) must lower
+    and compile whisper-small train_4k on the single-pod mesh."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-small", "--shape", "train_4k", "--mesh", "pod"],
+        capture_output=True, text=True, timeout=420,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "1/1 combos OK" in out.stdout
+
+
+def test_mesh_factories_are_lazy():
+    """Importing launch.mesh must not initialize jax devices (the dry-run
+    device-count env only works pre-init)."""
+    import ast
+    src = open(os.path.join(REPO, "src/repro/launch/mesh.py")).read()
+    assert "jax.make_mesh" in src
+    tree = ast.parse(src)
+    for node in tree.body:
+        assert not (isinstance(node, ast.Expr) and
+                    isinstance(node.value, ast.Call)), \
+            "module-level call in mesh.py"
+
+
+def test_dryrun_sets_device_flag_first():
+    lines = [l for l in open(
+        os.path.join(REPO, "src/repro/launch/dryrun.py")).read().splitlines()
+        if l.strip() and not l.strip().startswith("#")]
+    assert lines[0] == "import os"
+    assert "xla_force_host_platform_device_count=512" in lines[1]

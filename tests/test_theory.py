@@ -1,0 +1,95 @@
+"""Theorem 1/2 hyperparameter machinery (§3.3) and its use in experiments."""
+import numpy as np
+import pytest
+
+from repro.core.theory import (inner_iteration_schedule, mclr_constants,
+                               nonconvex_bounds, pick_hparams_strongly_convex,
+                               strongly_convex_bounds)
+
+
+def test_strongly_convex_bounds_match_theorem1():
+    mu_f, l_f, lam, gamma = 0.1, 1.0, 2.5, 6.25
+    b = strongly_convex_bounds(mu_f, l_f, lam, gamma)
+    mu_ft = lam * gamma * mu_f / (lam * mu_f + gamma * mu_f + lam * gamma)
+    assert np.isclose(b.mu_f_tilde_big, mu_ft)
+    assert np.isclose(b.beta_max, mu_ft / (4 * gamma))
+    assert np.isclose(b.eta_max, 1 / (2 * (lam + gamma)))
+    assert np.isclose(b.alpha_max, 1 / (l_f + lam))
+    assert b.gamma_ok  # gamma > 2 lam > 4 L_f fails here? 2.5*2=5<6.25 ok, 2*2.5=5>4 ok
+    assert 0 < b.rate < 1
+
+
+def test_gamma_condition_flags_violations():
+    assert not strongly_convex_bounds(0.1, 1.0, 1.0, 10.0).gamma_ok  # 2lam<4Lf
+    assert not strongly_convex_bounds(0.1, 1.0, 3.0, 5.0).gamma_ok   # gamma<2lam
+    assert strongly_convex_bounds(0.1, 1.0, 2.1, 4.3).gamma_ok
+
+
+def test_nonconvex_bounds_match_theorem2():
+    b = nonconvex_bounds(1.0, 2.5, 6.0)
+    assert np.isclose(b.beta_max, 1 / 24.0)
+    assert np.isclose(b.eta_max, 1 / 8.5)
+    assert np.isclose(b.alpha_max, 1 / 2.5)
+
+
+def test_inner_schedule_scales_linearly():
+    """K = Omega(T), L = Omega(K): doubling T (at fixed constants) must at
+    least double K, and L >= K-slope * K."""
+    kwargs = dict(mu_f=0.1, l_f=1.0, lam=2.5, gamma=6.25, alpha=0.2,
+                  eta=0.05, beta=0.01)
+    k1, l1 = inner_iteration_schedule(10, **kwargs)
+    k2, l2 = inner_iteration_schedule(20, **kwargs)
+    assert k2 >= 2 * k1 - 2
+    assert l2 >= 2 * l1 - 2
+    assert k1 >= 1 and l1 >= 1
+
+
+def test_mclr_constants():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(200, 10)).astype(np.float32)
+    mu, lf = mclr_constants(x, l2_reg=0.05)
+    assert mu == 0.05
+    assert lf > mu
+    # L_f = 0.5 eig_max + reg
+    cov = x.reshape(200, -1).astype(np.float64)
+    eig = np.linalg.eigvalsh(cov.T @ cov / 200).max()
+    assert np.isclose(lf, 0.5 * eig + 0.05, rtol=1e-5)
+
+
+def test_pick_hparams_is_admissible():
+    hp = pick_hparams_strongly_convex(0.05, 1.0)
+    b = strongly_convex_bounds(0.05, 1.0, hp["lam"], hp["gamma"])
+    assert b.gamma_ok
+    assert hp["alpha"] <= b.alpha_max + 1e-12
+    assert hp["eta"] <= b.eta_max + 1e-12
+    assert hp["beta"] <= b.beta_max + 1e-12
+
+
+def test_theory_rate_observed_on_quadratic():
+    """The contraction observed on a strongly-convex run must be at least
+    as fast as Theorem 1's (1 - beta) bound."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.permfl import PerMFLHParams, init_state, permfl_round
+
+    mu_f = l_f = 1.0   # quadratic 0.5||th-c||^2
+    lam, gamma = 2.5, 6.25
+    b = strongly_convex_bounds(mu_f, l_f, lam, gamma)
+    hp = PerMFLHParams(alpha=b.alpha_max, eta=b.eta_max, beta=b.beta_max,
+                       lam=lam, gamma=gamma, k_team=12, l_local=24)
+    rng = np.random.default_rng(3)
+    m, n, d = 2, 3, 4
+    c = jnp.asarray(rng.normal(size=(m, n, d)).astype(np.float32))
+    st = init_state(jnp.zeros(d), m, n)
+    x_star = np.asarray(c.mean((0, 1)))
+    e0 = float(np.sum((np.asarray(st.x) - x_star) ** 2))
+
+    def loss(p, batch):
+        return 0.5 * jnp.sum((p - batch["c"]) ** 2)
+
+    T = 40
+    for _ in range(T):
+        st = permfl_round(st, {"c": c}, hp, loss, m_teams=m, n_devices=n)
+    eT = float(np.sum((np.asarray(st.x) - x_star) ** 2))
+    bound = 2 * (1 - hp.beta) ** T * e0
+    assert eT <= bound, (eT, bound)
