@@ -38,6 +38,20 @@ def bench_prox(csv=print):
             f"gbps,{4 * n * 4 / us / 1e3:.2f}")
 
 
+def bench_quantize(csv=print):
+    from repro.kernels.quantize.ref import quantize_int8_ref
+
+    for n in (1 << 16, 1 << 20):
+        k = jax.random.PRNGKey(5)
+        v = jax.random.normal(k, (n,))
+        noise = jax.random.uniform(jax.random.fold_in(k, 1), (n,))
+        f = jax.jit(quantize_int8_ref)  # full (q, scales, dq) — no DCE
+        us = _time(f, v, noise)
+        # reads v+noise (8B/elem), writes q+dq+scales (~5B/elem)
+        csv(f"kernels,quantize_int8,n={n},us_per_call,{us:.1f},"
+            f"gbps,{13 * n / us / 1e3:.2f}")
+
+
 def bench_attention(csv=print):
     from repro.kernels.flash_attention.ref import attention_ref
 
@@ -79,6 +93,7 @@ def check_interpret_agreement(csv=print):
     """Pallas kernel bodies (interpret) vs refs — the same check the test
     suite sweeps, asserted once here so bench output records it."""
     os.environ["FORCE_PALLAS_INTERPRET"] = "1"
+    fails = []
     try:
         from repro.kernels.prox_update.ops import prox_sgd
         from repro.kernels.prox_update.ref import prox_sgd_ref
@@ -90,13 +105,28 @@ def check_interpret_agreement(csv=print):
         b, _ = prox_sgd_ref(theta, g, w, alpha=0.01, lam=0.5)
         ok = bool(jnp.allclose(a, b, atol=1e-6))
         csv(f"kernels,interpret_agreement,prox_sgd,allclose,{ok}")
-        return [] if ok else ["prox interpret mismatch"]
+        if not ok:
+            fails.append("prox interpret mismatch")
+
+        from repro.kernels.quantize.ops import quantize_int8
+        from repro.kernels.quantize.ref import quantize_int8_ref
+
+        v = jax.random.normal(k, (4096,))
+        noise = jax.random.uniform(jax.random.fold_in(k, 1), (4096,))
+        q_k, _, dq_k = quantize_int8(v, noise)
+        q_r, _, dq_r = quantize_int8_ref(v, noise)
+        ok = bool((q_k == q_r).all() and (dq_k == dq_r).all())
+        csv(f"kernels,interpret_agreement,quantize_int8,exact,{ok}")
+        if not ok:
+            fails.append("quantize interpret mismatch")
+        return fails
     finally:
         os.environ.pop("FORCE_PALLAS_INTERPRET", None)
 
 
 def main(quick=True, csv=print):
     bench_prox(csv)
+    bench_quantize(csv)
     bench_attention(csv)
     bench_wkv(csv)
     bench_router(csv)

@@ -1,0 +1,75 @@
+"""Accuracy-vs-megabytes tradeoff for the tiered comm subsystem.
+
+Sweeps compressor x level on the paper's MNIST/MCLR setting and reports,
+per config, the final personalized accuracy against total bytes moved
+(per tier, from the CommLedger). Reproduction targets: (a) identity
+compression is accuracy-neutral; (b) top-10% with error feedback stays
+within 2 points of uncompressed PM accuracy while cutting uplink bytes
+>4x; (c) every lossy compressor moves fewer uplink bytes than identity.
+"""
+from __future__ import annotations
+
+from repro.comm import CommConfig
+from repro.train import fl_trainer as FT
+
+from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
+                                  make_fed_data, model_for, to_jax)
+
+SWEEP = [
+    ("identity", CommConfig("identity")),
+    ("topk_10", CommConfig("topk", k_frac=0.1)),
+    ("topk_25", CommConfig("topk", k_frac=0.25)),
+    ("randk_10", CommConfig("randk", k_frac=0.1)),
+    ("int8", CommConfig("int8")),
+    ("sign", CommConfig("sign")),
+]
+
+
+def main(quick=True, csv=print):
+    rounds = 8 if quick else 40
+    cfg_model = model_for("mnist", True)
+    fd = make_fed_data("mnist", seed=6)
+    tr, va = to_jax(fd)
+    loss, met = fns_for(cfg_model)
+    p0 = init_model(cfg_model)
+    m, n = fd.m_teams, fd.n_devices
+
+    base = FT.run_permfl(p0, tr, va, loss_fn=loss, metric_fn=met,
+                         hp=HP_DEFAULT, rounds=rounds, m=m, n=n)
+    csv(f"fig_comm,mnist,mclr,uncompressed,pm,,{base.pm_acc[-1]:.4f}")
+
+    results = {}
+    for name, ccfg in SWEEP:
+        r = FT.run_permfl(p0, tr, va, loss_fn=loss, metric_fn=met,
+                          hp=HP_DEFAULT, rounds=rounds, m=m, n=n, comm=ccfg)
+        results[name] = r
+        t = r.comm.totals()
+        mb = t.total / 1e6
+        csv(f"fig_comm,mnist,mclr,{name},pm,,{r.pm_acc[-1]:.4f}")
+        csv(f"fig_comm,mnist,mclr,{name},mb_total,,{mb:.2f}")
+        csv(f"fig_comm,mnist,mclr,{name},bytes,wan_up,{t.wan_up}")
+        csv(f"fig_comm,mnist,mclr,{name},bytes,wan_down,{t.wan_down}")
+        csv(f"fig_comm,mnist,mclr,{name},bytes,lan_up,{t.lan_up}")
+        csv(f"fig_comm,mnist,mclr,{name},bytes,lan_down,{t.lan_down}")
+        csv(f"fig_comm,mnist,mclr,{name},uplink_ratio,,"
+            f"{r.comm.summary()['uplink_ratio']:.1f}")
+
+    failures = []
+    ident = results["identity"]
+    if abs(ident.pm_acc[-1] - base.pm_acc[-1]) > 0.01:
+        failures.append("fig_comm: identity compression changed PM accuracy")
+    if results["topk_10"].pm_acc[-1] < ident.pm_acc[-1] - 0.02:
+        failures.append("fig_comm: topk(0.1)+EF not within 2 points of "
+                        "uncompressed")
+    id_up = ident.comm.totals().wan_up + ident.comm.totals().lan_up
+    for name, r in results.items():
+        if name == "identity":
+            continue
+        up = r.comm.totals().wan_up + r.comm.totals().lan_up
+        if not up < id_up:
+            failures.append(f"fig_comm: {name} uplink not below identity")
+    return failures
+
+
+if __name__ == "__main__":
+    main()

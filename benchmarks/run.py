@@ -20,6 +20,7 @@ MODULES = [
     ("fig3", "benchmarks.fig3_hparams"),        # Fig 3 hyperparameters
     ("table2", "benchmarks.table2_teams"),      # Table 2 team formation
     ("fig4", "benchmarks.fig4_participation"),  # Fig 4 participation
+    ("fig_comm", "benchmarks.fig_comm_tradeoff"),  # acc-vs-MB comm sweep
     ("theory", "benchmarks.theory_rates"),      # Thm 1/2 rate validation
     ("roofline", "benchmarks.roofline_table"),  # §Roofline from dry-run
     ("kernels", "benchmarks.bench_kernels"),    # kernel micro-bench

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import CommConfig
 from repro.configs.paper_mclr import CONFIG as MCLR
 from repro.core.permfl import PerMFLHParams
 from repro.data.federated import partition_label_skew
@@ -44,6 +45,23 @@ def main():
     print(f"\nPersonalized beats global by "
           f"{100 * (res.pm_acc[-1] - res.gm_acc[-1]):.1f} points "
           f"({res.seconds:.1f}s)")
+
+    # Same run, but the uplinks ship top-10% sparsified deltas with error
+    # feedback; the CommLedger accounts bytes per tier per round.
+    res_c = run_permfl(
+        params, train, val,
+        loss_fn=lambda p, b: PM.loss_fn(p, MCLR, b),
+        metric_fn=lambda p, b: PM.accuracy(p, MCLR, b),
+        hp=hp, rounds=10, m=fed.m_teams, n=fed.n_devices,
+        comm=CommConfig(compressor="topk", k_frac=0.1))
+    s = res_c.comm.summary()
+    print(f"\ncompressed uplinks (top-10% + EF): PM={res_c.pm_acc[-1]:.3f} "
+          f"(vs {res.pm_acc[-1]:.3f} uncompressed)")
+    print(f"moved {s['total_bytes'] / 1e6:.1f} MB total vs "
+          f"{s['uncompressed_bytes'] / 1e6:.1f} MB at fp32 "
+          f"(uplink shrunk {s['uplink_ratio']:.0f}x; "
+          f"WAN up {s['wan_up_bytes'] / 1e6:.2f} MB, "
+          f"LAN up {s['lan_up_bytes'] / 1e6:.2f} MB)")
 
 
 if __name__ == "__main__":

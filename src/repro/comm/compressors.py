@@ -1,0 +1,86 @@
+"""Delta compressors for the tiered uplinks.
+
+Each compressor maps a flat per-sender slice of one pytree leaf to its
+decompressed-at-the-receiver value (the simulator never materializes the
+wire format except in the int8 path, whose packed (q, scales) pair comes
+from the fused Pallas kernel on TPU / its XLA reference elsewhere — see
+``repro.kernels.quantize``). Byte costs of the wire formats live in
+``repro.comm.ledger``; the error-feedback arithmetic lives in the PerMFL
+round itself (``msg = delta + ef; ef' = msg - C(msg)``).
+
+All shapes/k are static at trace time, so everything here jits and vmaps
+over the stacked (M, N) sender axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.config import CommConfig
+from repro.kernels.quantize import quantize_int8
+
+
+def leaf_k(k_frac: float, p: int) -> int:
+    """Coordinates kept per leaf by topk/randk (static)."""
+    return max(1, min(p, int(round(k_frac * p))))
+
+
+def _topk(v, k):
+    _, idx = jax.lax.top_k(jnp.abs(v), k)
+    return jnp.zeros_like(v).at[idx].set(v[idx])
+
+
+def _randk(key, v, k, unbiased):
+    u = jax.random.uniform(key, v.shape)
+    _, idx = jax.lax.top_k(u, k)          # k uniform indices, no replacement
+    kept = v[idx] * (v.size / k if unbiased else 1.0)
+    return jnp.zeros_like(v).at[idx].set(kept)
+
+
+def _int8(key, v):
+    noise = jax.random.uniform(key, v.shape)
+    _, _, dq = quantize_int8(v, noise)
+    return dq
+
+
+def _sign(v):
+    return jnp.mean(jnp.abs(v)) * jnp.sign(v)
+
+
+def make_leaf_compressor(cfg: CommConfig, p: int):
+    """Returns fn(key, v_flat (p,)) -> v_hat (p,), specialized per leaf."""
+    name = cfg.compressor
+    if name == "identity":
+        return lambda key, v: v
+    if name == "topk":
+        k = leaf_k(cfg.k_frac, p)
+        return lambda key, v: _topk(v, k)
+    if name == "randk":
+        k = leaf_k(cfg.k_frac, p)
+        unbiased = not cfg.error_feedback
+        return lambda key, v: _randk(key, v, k, unbiased)
+    if name == "int8":
+        return _int8
+    if name == "sign":
+        return lambda key, v: _sign(v)
+    raise ValueError(name)
+
+
+def compress_tree(cfg: CommConfig, key, tree, batch_shape: tuple):
+    """Compress each sender's slice of each leaf independently.
+
+    tree leaves have shape batch_shape + param_shape; every (sender, leaf)
+    pair gets its own fold_in'd key so stochastic compressors decorrelate
+    across the fleet. Returns the decompressed tree, same structure/shapes.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    b = int(np.prod(batch_shape, dtype=np.int64)) if batch_shape else 1
+    out = []
+    for i, leaf in enumerate(leaves):
+        p = int(np.prod(leaf.shape[len(batch_shape):], dtype=np.int64))
+        fn = make_leaf_compressor(cfg, p)
+        keys = jax.random.split(jax.random.fold_in(key, i), b)
+        v2 = leaf.reshape(b, p)
+        out.append(jax.vmap(fn)(keys, v2).reshape(leaf.shape))
+    return treedef.unflatten(out)

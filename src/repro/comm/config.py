@@ -1,0 +1,77 @@
+"""Communication config and per-tier error-feedback state.
+
+``CommConfig`` is a frozen (hashable) dataclass so it can ride through
+``jax.jit`` as a static argument, exactly like ``PerMFLHParams``.
+``CommState`` is the jit-carried pytree of error-feedback residuals: one
+buffer per device (theta-shaped, (M, N, ...)) for the device->team LAN
+uplink and one per team (w-shaped, (M, ...)) for the team->server WAN
+uplink, plus the PRNG key the stochastic compressors fold the round/iter
+counters into (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+COMPRESSORS = ("identity", "topk", "randk", "int8", "sign")
+
+
+@dataclass(frozen=True)
+class CommConfig:
+    """What crosses the links, and how it is shrunk.
+
+    compressor: one of COMPRESSORS, applied to the model *deltas* on the
+        two uplink aggregation paths (device->team theta deltas inside the
+        K-loop, team->server w deltas once per round). Downlinks stay fp32
+        — they carry the anchors the algorithm re-initializes from.
+    k_frac: fraction of coordinates kept per leaf by topk / randk.
+    error_feedback: accumulate the compression residual into the sender's
+        buffer and add it to the next message (EF-SGD style). With EF on,
+        randk is left unscaled (contractive form); with EF off it is
+        rescaled by p/k to stay unbiased.
+    seed: base PRNG seed for the stochastic compressors (randk, int8).
+    """
+    compressor: str = "identity"
+    k_frac: float = 0.1
+    error_feedback: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.compressor not in COMPRESSORS:
+            raise ValueError(
+                f"unknown compressor {self.compressor!r}; "
+                f"expected one of {COMPRESSORS}")
+        if not 0.0 < self.k_frac <= 1.0:
+            raise ValueError(f"k_frac must be in (0, 1], got {self.k_frac}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class CommState:
+    """ef_dev: (M, N, ...) device-uplink residuals; ef_team: (M, ...)
+    team-uplink residuals; key: base PRNG key (never advanced in place —
+    per-round streams are derived by fold_in on the round counter)."""
+    ef_dev: Any
+    ef_team: Any
+    key: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.ef_dev, self.ef_team, self.key), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_comm_state(params, m_teams: int, n_devices: int,
+                    cfg: CommConfig) -> CommState:
+    """Zero residuals shaped like the stacked tiers."""
+    def zeros(lead):
+        return jax.tree.map(
+            lambda p: jnp.zeros(lead + p.shape, jnp.float32), params)
+    return CommState(ef_dev=zeros((m_teams, n_devices)),
+                     ef_team=zeros((m_teams,)),
+                     key=jax.random.PRNGKey(cfg.seed))

@@ -24,6 +24,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CommConfig, CommState, compress_tree, init_comm_state
 from repro.kernels.prox_update import prox_sgd_tree
 
 
@@ -43,27 +44,42 @@ class PerMFLHParams:
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class PerMFLState:
-    """x: global model; w: (M, ...); theta: (M, N, ...)."""
+    """x: global model; w: (M, ...); theta: (M, N, ...); comm: optional
+    CommState (per-tier error-feedback residuals) when compression is on."""
     x: Any
     w: Any
     theta: Any
     round: jnp.ndarray  # scalar i32
+    comm: Optional[CommState] = None
 
     def tree_flatten(self):
-        return (self.x, self.w, self.theta, self.round), None
+        return (self.x, self.w, self.theta, self.round, self.comm), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
 
-def init_state(params, m_teams: int, n_devices: int) -> PerMFLState:
+def init_state(params, m_teams: int, n_devices: int,
+               comm: Optional[CommConfig] = None) -> PerMFLState:
     """All tiers initialized from a single model (Algorithm 1, init)."""
     def bc(x, lead):
         return jnp.broadcast_to(x[(None,) * len(lead)], lead + x.shape).copy()
     w = jax.tree.map(lambda p: bc(p, (m_teams,)), params)
     theta = jax.tree.map(lambda p: bc(p, (m_teams, n_devices)), params)
-    return PerMFLState(x=params, w=w, theta=theta, round=jnp.int32(0))
+    cs = None if comm is None else init_comm_state(params, m_teams,
+                                                   n_devices, comm)
+    return PerMFLState(x=params, w=w, theta=theta, round=jnp.int32(0),
+                       comm=cs)
+
+
+def _keep_where(mask, new_tree, old_tree):
+    """Leaf-wise participation gate: keep `new` where the leading-axes
+    mask is set, else `old`. mask shape is a prefix of every leaf shape."""
+    def leaf(n, o):
+        m = mask.reshape(mask.shape + (1,) * (n.ndim - mask.ndim))
+        return jnp.where(m > 0, n, o)
+    return jax.tree.map(leaf, new_tree, old_tree)
 
 
 def _masked_mean(tree, mask, axis, fallback=None):
@@ -89,31 +105,49 @@ def _masked_mean(tree, mask, axis, fallback=None):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("loss_fn", "hp", "m_teams", "n_devices"))
+    static_argnames=("loss_fn", "hp", "m_teams", "n_devices", "comm"))
 def permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
                  loss_fn: Callable, *, m_teams: int, n_devices: int,
-                 team_mask=None, device_mask=None):
+                 team_mask=None, device_mask=None,
+                 comm: Optional[CommConfig] = None):
     """One global round.
 
     data: pytree of arrays with leading (M, N, ...) — each device's (full)
         batch; loss_fn(params, device_batch) -> scalar.
     team_mask: (M,) f32 in {0,1}; device_mask: (M, N) f32. None = full
         participation (paper's default mode 1).
+    comm: optional CommConfig. When given, the device->team theta deltas
+        (each team iteration) and the team->server w deltas (once per
+        round) cross their links compressed, with per-sender error
+        feedback carried in state.comm; local/personalized models stay
+        exact (DESIGN.md §3).
     """
     if team_mask is None:
         team_mask = jnp.ones((m_teams,), jnp.float32)
     if device_mask is None:
         device_mask = jnp.ones((m_teams, n_devices), jnp.float32)
+    if comm is not None and state.comm is None:
+        raise ValueError("comm config given but state carries no CommState; "
+                         "build the state with init_state(..., comm=cfg)")
 
     x = state.x
     grad_fn = jax.grad(loss_fn)
     per_device_grad = jax.vmap(jax.vmap(grad_fn))
+    if comm is not None:
+        round_key = jax.random.fold_in(state.comm.key, state.round)
+        # devices of masked-out teams may run locally but never transmit:
+        # their EF residuals must not record undelivered messages, even if
+        # the caller passed masks that disagree.
+        ef_gate = device_mask * team_mask[:, None]
+
+    def bcast_n(w):
+        return jax.tree.map(
+            lambda wl: jnp.broadcast_to(
+                wl[:, None], (m_teams, n_devices) + wl.shape[1:]), w)
 
     def device_loop(theta, w):
         """L prox-SGD steps (eq. 4), vmapped over (M, N)."""
-        anchor = jax.tree.map(
-            lambda wl: jnp.broadcast_to(
-                wl[:, None], (m_teams, n_devices) + wl.shape[1:]), w)
+        anchor = bcast_n(w)
 
         def one_step(_, carry):
             theta, mom = carry
@@ -127,48 +161,86 @@ def permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
         theta, _ = jax.lax.fori_loop(0, hp.l_local, one_step, (theta, mom0))
         return theta
 
-    def team_iter(k, carry):
-        """One team round: re-init theta from w, L device steps, eq. 9."""
-        w, _ = carry
+    def run_devices(w):
+        """Re-init theta from w (LAN downlink), L device steps."""
         theta = jax.tree.map(
             lambda wl: jnp.broadcast_to(
                 wl[:, None], (m_teams, n_devices) + wl.shape[1:]).copy(), w)
-        theta = device_loop(theta, w)
-        theta_bar = _masked_mean(theta, device_mask, axis=1, fallback=w)
+        return device_loop(theta, w)
+
+    def team_update(w, theta_bar):
         c = 1.0 - hp.eta * hp.lam - hp.eta * hp.gamma
-        w = jax.tree.map(
+        return jax.tree.map(
             lambda wl, xl, tb: c * wl + hp.eta * hp.gamma * xl[None]
             + hp.lam * hp.eta * tb,
             w, x, theta_bar)
-        return w, theta
+
+    def team_iter(k, carry):
+        """One team round: re-init theta from w, L device steps, eq. 9."""
+        w, _ = carry
+        theta = run_devices(w)
+        theta_bar = _masked_mean(theta, device_mask, axis=1, fallback=w)
+        return team_update(w, theta_bar), theta
+
+    def team_iter_comm(k, carry):
+        """team_iter with a compressed device->team uplink: each device
+        ships C(theta - w + ef); the team aggregates the decompressed
+        deltas on top of the anchor w it already holds."""
+        w, _, ef_dev = carry
+        theta = run_devices(w)
+        anchor = bcast_n(w)
+        msg = jax.tree.map(lambda t, a, e: t - a + e, theta, anchor, ef_dev)
+        chat = compress_tree(comm, jax.random.fold_in(round_key, k), msg,
+                             (m_teams, n_devices))
+        if comm.error_feedback:
+            ef_new = jax.tree.map(lambda ms, ch: ms - ch, msg, chat)
+            ef_dev = _keep_where(ef_gate, ef_new, ef_dev)
+        theta_hat = jax.tree.map(lambda a, ch: a + ch, anchor, chat)
+        theta_bar = _masked_mean(theta_hat, device_mask, axis=1, fallback=w)
+        return team_update(w, theta_bar), theta, ef_dev
 
     # w_i^{t,0} = x^t
     w0 = jax.tree.map(
         lambda xl: jnp.broadcast_to(xl[None], (m_teams,) + xl.shape).copy(), x)
     theta0 = state.theta
-    w, theta = jax.lax.fori_loop(0, hp.k_team, team_iter, (w0, theta0))
+    if comm is None:
+        w, theta = jax.lax.fori_loop(0, hp.k_team, team_iter, (w0, theta0))
+    else:
+        w, theta, ef_dev = jax.lax.fori_loop(
+            0, hp.k_team, team_iter_comm, (w0, theta0, state.comm.ef_dev))
 
     # eq. 13 (global) — non-participating teams keep w out of the average,
     # and also do not move (their w snaps back to x next round anyway).
-    w_eff = jax.tree.map(
-        lambda wl, old: jnp.where(
-            team_mask.reshape((-1,) + (1,) * (wl.ndim - 1)) > 0, wl, old),
-        w, state.w)
-    w_bar = _masked_mean(w_eff, team_mask, axis=0,
-                         fallback=x)
+    w_eff = _keep_where(team_mask, w, state.w)
+    if comm is None:
+        w_bar = _masked_mean(w_eff, team_mask, axis=0, fallback=x)
+        comm_state = state.comm
+    else:
+        # team->server WAN uplink: each team ships C(w - x + ef); the
+        # server reconstructs w_hat = x + C(...) against the x it holds.
+        # Masked-out teams need no substitute value — the masked mean
+        # zeroes their contribution.
+        ef_team = state.comm.ef_team
+        msg = jax.tree.map(lambda wl, xl, e: wl - xl[None] + e,
+                           w, x, ef_team)
+        chat = compress_tree(comm, jax.random.fold_in(round_key, hp.k_team),
+                             msg, (m_teams,))
+        if comm.error_feedback:
+            ef_new = jax.tree.map(lambda ms, ch: ms - ch, msg, chat)
+            ef_team = _keep_where(team_mask, ef_new, ef_team)
+        w_hat = jax.tree.map(lambda xl, ch: xl[None] + ch, x, chat)
+        w_bar = _masked_mean(w_hat, team_mask, axis=0, fallback=x)
+        comm_state = CommState(ef_dev=ef_dev, ef_team=ef_team,
+                               key=state.comm.key)
     x_new = jax.tree.map(
         lambda xl, wb: (1.0 - hp.beta * hp.gamma) * xl
         + hp.beta * hp.gamma * wb, x, w_bar)
 
     # devices/teams that did not participate keep their previous theta/w
-    th_eff = jax.tree.map(
-        lambda t_new, t_old: jnp.where(
-            device_mask.reshape(device_mask.shape +
-                                (1,) * (t_new.ndim - 2)) > 0, t_new, t_old),
-        theta, state.theta)
+    th_eff = _keep_where(device_mask, theta, state.theta)
 
     return PerMFLState(x=x_new, w=w_eff, theta=th_eff,
-                       round=state.round + 1)
+                       round=state.round + 1, comm=comm_state)
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,8 @@ Each subpackage ships:
 from repro.kernels.flash_attention import attention
 from repro.kernels.moe_router import route_topk
 from repro.kernels.prox_update import prox_sgd_tree
+from repro.kernels.quantize import quantize_int8
 from repro.kernels.rwkv6_scan import wkv
 
-__all__ = ["attention", "route_topk", "prox_sgd_tree", "wkv"]
+__all__ = ["attention", "route_topk", "prox_sgd_tree", "quantize_int8",
+           "wkv"]

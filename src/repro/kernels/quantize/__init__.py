@@ -1,0 +1,6 @@
+from repro.kernels.quantize.ops import dequantize_int8, quantize_int8
+from repro.kernels.quantize.quantize import quantize_int8_flat
+from repro.kernels.quantize.ref import dequantize_int8_ref, quantize_int8_ref
+
+__all__ = ["quantize_int8", "dequantize_int8", "quantize_int8_flat",
+           "quantize_int8_ref", "dequantize_int8_ref"]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused int8 stochastic quantize/pack kernel.
+
+Row-wise (128-lane) symmetric int8 quantization with stochastic rounding:
+
+    scale_r = max(|v_r|) / 127          (one f32 scale per 128 elements)
+    q       = clip(floor(v / scale + u), -127, 127)     u ~ U[0, 1)
+    dq      = q * scale
+
+``floor(x + u)`` is unbiased stochastic rounding: E[q] = v / scale. The
+noise is an explicit input (not an internal PRNG) so the Pallas kernel and
+this oracle are bit-comparable and the compressed-round simulation is
+deterministic under a fixed key. The packed wire format is (q int8, scales
+f32): 1 byte/element + 4 bytes per 128-element row, a 3.9x size reduction
+over fp32 that the CommLedger byte model mirrors.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANES = 128
+
+
+def _to_rows(v, size):
+    rows = -(-size // LANES)
+    pad = rows * LANES - size
+    if pad:
+        v = jnp.pad(v, (0, pad))
+    return v.reshape(rows, LANES), rows
+
+
+def quantize_int8_ref(v, noise):
+    """v, noise: flat (size,). Returns (q (size,) i8, scales (rows,) f32,
+    dq (size,) of v.dtype)."""
+    (size,) = v.shape
+    v2, rows = _to_rows(v.astype(jnp.float32), size)
+    n2, _ = _to_rows(noise.astype(jnp.float32), size)
+    absmax = jnp.max(jnp.abs(v2), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax * (1.0 / 127.0), 1e-12)
+    q = jnp.clip(jnp.floor(v2 / scale + n2), -127.0, 127.0)
+    dq = q * scale
+    return (q.astype(jnp.int8).reshape(-1)[:size],
+            scale.reshape(-1),
+            dq.reshape(-1)[:size].astype(v.dtype))
+
+
+def dequantize_int8_ref(q, scales, size=None):
+    """Inverse of the pack: q (size,) i8, scales (rows,) f32 -> (size,) f32."""
+    size = q.shape[0] if size is None else size
+    q2, _ = _to_rows(q.astype(jnp.float32), size)
+    out = q2 * scales[:, None]
+    return out.reshape(-1)[:size]

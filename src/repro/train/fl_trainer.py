@@ -5,12 +5,13 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import CommConfig, CommLedger
 from repro.core import (PerMFLHParams, eval_stacked, init_state,
                         permfl_round)
 from repro.core import baselines as B
@@ -24,6 +25,8 @@ class FLResult:
     gm_acc: list = field(default_factory=list)
     train_loss: list = field(default_factory=list)
     seconds: float = 0.0
+    state: Any = None    # final state (set by run_permfl / run_fedavg)
+    comm: Optional[CommLedger] = None    # per-tier byte ledger (PerMFL+comm)
 
     def last(self, which="pm"):
         hist = {"pm": self.pm_acc, "tm": self.tm_acc, "gm": self.gm_acc}[which]
@@ -37,10 +40,13 @@ class FLResult:
 def run_permfl(params0, train_data, val_data, *, loss_fn, metric_fn,
                hp: PerMFLHParams, rounds: int, m: int, n: int,
                team_frac: float = 1.0, device_frac: float = 1.0,
-               seed: int = 0, eval_every: int = 1) -> FLResult:
-    state = init_state(params0, m, n)
+               seed: int = 0, eval_every: int = 1,
+               comm: Optional[CommConfig] = None) -> FLResult:
+    state = init_state(params0, m, n, comm=comm)
     key = jax.random.PRNGKey(seed)
     res = FLResult()
+    if comm is not None:
+        res.comm = CommLedger.for_params(comm, params0)
     t0 = time.time()
     for t in range(rounds):
         if team_frac < 1.0 or device_frac < 1.0:
@@ -51,7 +57,12 @@ def run_permfl(params0, train_data, val_data, *, loss_fn, metric_fn,
             tm = dm = None
         state = permfl_round(state, train_data, hp, loss_fn,
                              m_teams=m, n_devices=n,
-                             team_mask=tm, device_mask=dm)
+                             team_mask=tm, device_mask=dm, comm=comm)
+        if res.comm is not None:
+            res.comm.log_round(
+                k_team=hp.k_team,
+                n_teams=m if tm is None else int(tm.sum()),
+                n_devices=m * n if dm is None else int(dm.sum()))
         if t % eval_every == 0 or t == rounds - 1:
             res.pm_acc.append(float(
                 eval_stacked(state, val_data, metric_fn, which="pm").mean()))

@@ -1,0 +1,298 @@
+"""Tiered communication subsystem: compressors, error feedback, the
+compressed PerMFL round, and the per-tier byte ledger."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (CommConfig, CommLedger, compress_tree,
+                        compressed_leaf_bytes, full_leaf_bytes, leaf_k,
+                        make_leaf_compressor, model_bytes)
+from repro.core.permfl import PerMFLHParams, init_state, permfl_round
+
+M, N, D = 3, 4, 5
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum((params - batch["c"]) ** 2)
+
+
+def _quad_setup(seed=0):
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.normal(size=(M, N, D)).astype(np.float32))
+    hp = PerMFLHParams(alpha=0.05, eta=0.04, beta=0.3, lam=0.8, gamma=2.0,
+                       k_team=3, l_local=4)
+    return {"c": c}, hp
+
+
+# ---------------------------------------------------------------------------
+# leaf compressors
+# ---------------------------------------------------------------------------
+
+KEY = jax.random.PRNGKey(0)
+V = jax.random.normal(jax.random.PRNGKey(1), (300,))
+
+
+def test_identity_is_exact():
+    fn = make_leaf_compressor(CommConfig("identity"), V.size)
+    np.testing.assert_array_equal(np.asarray(fn(KEY, V)), np.asarray(V))
+
+
+def test_topk_keeps_k_largest_by_magnitude():
+    cfg = CommConfig("topk", k_frac=0.1)
+    k = leaf_k(cfg.k_frac, V.size)
+    out = np.asarray(make_leaf_compressor(cfg, V.size)(KEY, V))
+    v = np.asarray(V)
+    nz = np.nonzero(out)[0]
+    assert len(nz) == k == 30
+    want = set(np.argsort(-np.abs(v))[:k])
+    assert set(nz) == want
+    np.testing.assert_array_equal(out[nz], v[nz])  # kept values untouched
+
+
+def test_randk_contractive_keeps_k_unscaled():
+    cfg = CommConfig("randk", k_frac=0.2, error_feedback=True)
+    out = np.asarray(make_leaf_compressor(cfg, V.size)(KEY, V))
+    nz = np.nonzero(out)[0]
+    assert len(nz) == leaf_k(0.2, V.size)
+    np.testing.assert_allclose(out[nz], np.asarray(V)[nz])
+
+
+def test_randk_unbiased_when_no_error_feedback():
+    cfg = CommConfig("randk", k_frac=0.25, error_feedback=False)
+    fn = make_leaf_compressor(cfg, V.size)
+    keys = jax.random.split(jax.random.PRNGKey(7), 400)
+    outs = jax.vmap(lambda k: fn(k, V))(keys)
+    # E[C(v)] = v for the p/k-rescaled rand-k
+    err = np.abs(np.asarray(outs.mean(0)) - np.asarray(V)).mean()
+    assert err < 0.15, err
+
+
+def test_sign_is_scaled_sign():
+    fn = make_leaf_compressor(CommConfig("sign"), V.size)
+    out = np.asarray(fn(KEY, V))
+    v = np.asarray(V)
+    np.testing.assert_allclose(out, np.abs(v).mean() * np.sign(v), rtol=1e-6)
+
+
+def test_int8_error_bounded_by_row_scale():
+    fn = make_leaf_compressor(CommConfig("int8"), V.size)
+    out = np.asarray(fn(KEY, V))
+    v = np.asarray(V)
+    # stochastic rounding error < 1 quantization step = rowmax/127
+    rows = np.abs(np.pad(v, (0, (-len(v)) % 128)).reshape(-1, 128)).max(1)
+    step = np.repeat(rows / 127.0, 128)[:len(v)]
+    assert (np.abs(out - v) <= step + 1e-7).all()
+
+
+def test_compress_tree_structure_and_batching():
+    cfg = CommConfig("topk", k_frac=0.5)
+    tree = {"a": jax.random.normal(KEY, (M, N, 6, 7)),
+            "b": [jax.random.normal(KEY, (M, N, 9))]}
+    out = compress_tree(cfg, KEY, tree, (M, N))
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for o, t in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert o.shape == t.shape
+    # per-sender sparsity: each (i, j) slice of "a" keeps exactly k coords
+    k = leaf_k(0.5, 42)
+    nz = (np.asarray(out["a"]).reshape(M, N, -1) != 0).sum(-1)
+    assert (nz == k).all()
+
+
+def test_error_feedback_transmits_everything_eventually():
+    """EF invariant: sum_t C(delta + e_t) = T*delta - e_T; with a
+    contractive C (top-k) e_T stays bounded, so the mean transmitted
+    value converges to the true delta at rate 1/T."""
+    cfg = CommConfig("topk", k_frac=0.25)
+    fn = make_leaf_compressor(cfg, V.size)
+    delta = np.asarray(V)
+    e = np.zeros_like(delta)
+    sent = np.zeros_like(delta)
+    T = 200
+    for t in range(T):
+        msg = delta + e
+        c = np.asarray(fn(KEY, jnp.asarray(msg)))
+        e = msg - c
+        sent += c
+    np.testing.assert_allclose(sent / T, delta, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# compressed PerMFL rounds
+# ---------------------------------------------------------------------------
+
+def test_identity_comm_round_matches_plain_round():
+    data, hp = _quad_setup()
+    cfg = CommConfig("identity")
+    s_plain = init_state(jnp.zeros(D), M, N)
+    s_comm = init_state(jnp.zeros(D), M, N, comm=cfg)
+    for _ in range(3):
+        s_plain = permfl_round(s_plain, data, hp, quad_loss,
+                               m_teams=M, n_devices=N)
+        s_comm = permfl_round(s_comm, data, hp, quad_loss,
+                              m_teams=M, n_devices=N, comm=cfg)
+    np.testing.assert_allclose(np.asarray(s_comm.x), np.asarray(s_plain.x),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_comm.w), np.asarray(s_plain.w),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_comm.theta),
+                               np.asarray(s_plain.theta), atol=1e-6)
+    # identity compression leaves no residual
+    assert float(jnp.abs(s_comm.comm.ef_dev).max()) == 0.0
+    assert float(jnp.abs(s_comm.comm.ef_team).max()) == 0.0
+
+
+@pytest.mark.parametrize("name", ["topk", "randk", "int8", "sign"])
+def test_comm_round_runs_and_threads_state(name):
+    data, hp = _quad_setup()
+    cfg = CommConfig(name, k_frac=0.4)
+    st = init_state(jnp.zeros(D), M, N, comm=cfg)
+    st = permfl_round(st, data, hp, quad_loss, m_teams=M, n_devices=N,
+                      comm=cfg)
+    assert st.comm is not None
+    assert int(st.round) == 1
+    for leaf in jax.tree.leaves((st.x, st.w, st.theta, st.comm.ef_dev,
+                                 st.comm.ef_team)):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # lossy compressors leave a nonzero residual somewhere
+    assert float(jnp.abs(st.comm.ef_dev).max()) > 0.0
+
+
+def test_comm_round_requires_comm_state():
+    data, hp = _quad_setup()
+    cfg = CommConfig("topk")
+    st = init_state(jnp.zeros(D), M, N)          # no CommState
+    with pytest.raises(ValueError, match="CommState"):
+        permfl_round(st, data, hp, quad_loss, m_teams=M, n_devices=N,
+                     comm=cfg)
+
+
+def test_nonparticipating_senders_keep_their_residuals():
+    data, hp = _quad_setup()
+    cfg = CommConfig("topk", k_frac=0.2)
+    tm = jnp.array([1.0, 0.0, 1.0])
+    dm = jnp.ones((M, N), jnp.float32) * tm[:, None]
+    st = init_state(jnp.zeros(D), M, N, comm=cfg)
+    st = permfl_round(st, data, hp, quad_loss, m_teams=M, n_devices=N,
+                      team_mask=tm, device_mask=dm, comm=cfg)
+    # team 1 (and its devices) never transmitted: residuals stay zero
+    assert float(jnp.abs(st.comm.ef_team[1]).max()) == 0.0
+    assert float(jnp.abs(st.comm.ef_dev[1]).max()) == 0.0
+    assert float(jnp.abs(st.comm.ef_team[0]).max()) > 0.0
+
+
+def test_inconsistent_masks_do_not_record_undelivered_uplinks():
+    """team_mask with device_mask=None: devices of masked-out teams run
+    locally but never transmit, so their EF residuals must stay zero."""
+    data, hp = _quad_setup()
+    cfg = CommConfig("topk", k_frac=0.2)
+    tm = jnp.array([1.0, 0.0, 1.0])
+    st = init_state(jnp.zeros(D), M, N, comm=cfg)
+    st = permfl_round(st, data, hp, quad_loss, m_teams=M, n_devices=N,
+                      team_mask=tm, comm=cfg)
+    assert float(jnp.abs(st.comm.ef_dev[1]).max()) == 0.0
+    assert float(jnp.abs(st.comm.ef_dev[0]).max()) > 0.0
+
+
+def test_compressed_quadratic_converges_to_neighborhood():
+    """EF-compressed PerMFL settles in a small ball around x* = mean(c).
+
+    The device->team deltas (theta - w) are *nonzero* at the fixed point,
+    so their compression error never vanishes; error feedback bounds the
+    bias, leaving x oscillating in an O(compression error) neighborhood
+    rather than converging exactly (||x0 - x*|| here is ~0.5)."""
+    data, _ = _quad_setup(seed=3)
+    hp = PerMFLHParams(alpha=0.2, eta=0.05, beta=0.2, lam=1.0, gamma=3.0,
+                       k_team=4, l_local=10)
+    cfg = CommConfig("topk", k_frac=0.4)
+    st = init_state(jnp.zeros(D), M, N, comm=cfg)
+    x_star = np.asarray(data["c"]).mean(axis=(0, 1))
+    for _ in range(150):
+        st = permfl_round(st, data, hp, quad_loss, m_teams=M, n_devices=N,
+                          comm=cfg)
+    assert np.abs(np.asarray(st.x) - x_star).max() < 0.1
+    # and the EF residuals stay bounded (no blow-up)
+    assert float(jnp.abs(st.comm.ef_dev).max()) < 10.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: run_permfl(..., comm=...) on the synthetic task
+# ---------------------------------------------------------------------------
+
+def test_run_permfl_comm_end_to_end(small_fed_data):
+    from repro.configs.paper_mclr import CONFIG as MCLR
+    from repro.models import paper_models as PM
+    from repro.train.fl_trainer import run_permfl
+
+    fd = small_fed_data
+    params = PM.init_params(jax.random.PRNGKey(0), MCLR)
+    hp = PerMFLHParams(k_team=3, l_local=5)
+    loss = lambda p, b: PM.loss_fn(p, MCLR, b)
+    met = lambda p, b: PM.accuracy(p, MCLR, b)
+    tr = {"x": jnp.asarray(fd.train_x), "y": jnp.asarray(fd.train_y)}
+    va = {"x": jnp.asarray(fd.val_x), "y": jnp.asarray(fd.val_y)}
+    kw = dict(loss_fn=loss, metric_fn=met, hp=hp, rounds=6,
+              m=fd.m_teams, n=fd.n_devices)
+
+    base = run_permfl(params, tr, va, **kw)
+    comp = run_permfl(params, tr, va,
+                      comm=CommConfig("topk", k_frac=0.1), **kw)
+
+    # acceptance: converges within 2 points of the uncompressed run
+    assert comp.pm_acc[-1] >= base.pm_acc[-1] - 0.02, \
+        (comp.pm_acc[-1], base.pm_acc[-1])
+    # per-tier bytes reported in FLResult
+    assert comp.comm is not None and len(comp.comm.rounds) == 6
+    t = comp.comm.totals()
+    assert t.wan_up > 0 and t.lan_up > 0
+    # top-10% uplink is far below the fp32 downlink on the same links
+    assert t.wan_up < t.wan_down / 4
+    assert t.lan_up < t.lan_down / 4
+    assert comp.comm.total_bytes() < comp.comm.uncompressed_total()
+    assert base.comm is None
+    assert comp.state is not None and base.state is not None
+
+
+# ---------------------------------------------------------------------------
+# ledger byte model
+# ---------------------------------------------------------------------------
+
+def test_leaf_byte_model():
+    p = 1000
+    assert full_leaf_bytes(p) == 4000
+    assert compressed_leaf_bytes(CommConfig("identity"), p) == 4000
+    assert compressed_leaf_bytes(CommConfig("topk", k_frac=0.1), p) == 8 * 100
+    assert compressed_leaf_bytes(CommConfig("randk", k_frac=0.1), p) == 404
+    assert compressed_leaf_bytes(CommConfig("int8"), p) == 1000 + 4 * 8
+    assert compressed_leaf_bytes(CommConfig("sign"), p) == 125 + 4
+
+
+def test_ledger_round_math():
+    cfg = CommConfig("topk", k_frac=0.5)
+    params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((20,))}
+    led = CommLedger.for_params(cfg, params)
+    assert sorted(led.leaf_sizes) == [20, 100]
+    led.log_round(k_team=5, n_teams=3, n_devices=12)
+    full = model_bytes(led.leaf_sizes)             # 480
+    comp = model_bytes(led.leaf_sizes, cfg)        # 8*(50+10) = 480/...
+    r = led.rounds[0]
+    assert r.wan_down == 3 * full
+    assert r.wan_up == 3 * comp
+    assert r.lan_down == 5 * 12 * full
+    assert r.lan_up == 5 * 12 * comp
+    assert r.total == r.wan_up + r.wan_down + r.lan_up + r.lan_down
+    led.log_round(k_team=5, n_teams=1, n_devices=4)
+    assert led.totals().wan_down == 4 * full
+    s = led.summary()
+    assert s["rounds"] == 2 and s["total_bytes"] == led.total_bytes()
+    assert s["uncompressed_bytes"] >= s["total_bytes"]
+
+
+def test_ledger_partial_participation_counts_less():
+    cfg = CommConfig("int8")
+    params = jnp.zeros((513,))
+    led = CommLedger.for_params(cfg, params)
+    led.log_round(k_team=2, n_teams=4, n_devices=40)
+    led_partial = CommLedger.for_params(cfg, params)
+    led_partial.log_round(k_team=2, n_teams=2, n_devices=20)
+    assert led_partial.total_bytes() == led.total_bytes() // 2

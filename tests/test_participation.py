@@ -1,0 +1,58 @@
+"""sample_masks edge cases (participation modes, §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.participation import MODES, sample_masks
+
+
+def test_full_participation_is_all_ones():
+    tm, dm = sample_masks(jax.random.PRNGKey(0), 4, 6, team_frac=1.0,
+                          device_frac=1.0)
+    np.testing.assert_array_equal(np.asarray(tm), np.ones(4))
+    np.testing.assert_array_equal(np.asarray(dm), np.ones((4, 6)))
+
+
+def test_tiny_device_frac_keeps_one_device():
+    """device_frac small enough that round(n*frac) == 0 still keeps one
+    device per participating team (n_d == 1)."""
+    m, n = 5, 10
+    tm, dm = sample_masks(jax.random.PRNGKey(1), m, n, device_frac=0.01)
+    dm = np.asarray(dm)
+    assert (dm.sum(axis=1) == 1).all()
+
+
+def test_tiny_team_frac_keeps_one_team():
+    tm, dm = sample_masks(jax.random.PRNGKey(2), 8, 4, team_frac=0.01)
+    tm = np.asarray(tm)
+    assert tm.sum() == 1
+
+
+def test_device_mask_zeroed_for_nonparticipating_teams():
+    for seed in range(5):
+        tm, dm = sample_masks(jax.random.PRNGKey(seed), 8, 6,
+                              team_frac=0.5, device_frac=0.5)
+        tm, dm = np.asarray(tm), np.asarray(dm)
+        assert (dm[tm == 0] == 0).all()
+        # participating teams keep exactly n_d = round(0.5*6) = 3 devices
+        assert (dm[tm > 0].sum(axis=1) == 3).all()
+
+
+def test_masks_are_binary_and_counts_exact():
+    m, n = 9, 7
+    for tf, df in [(0.3, 0.6), (0.7, 0.2), (1.0, 0.5)]:
+        tm, dm = sample_masks(jax.random.PRNGKey(3), m, n, team_frac=tf,
+                              device_frac=df)
+        tm, dm = np.asarray(tm), np.asarray(dm)
+        assert set(np.unique(tm)) <= {0.0, 1.0}
+        assert set(np.unique(dm)) <= {0.0, 1.0}
+        assert tm.sum() == max(1, round(tf * m))
+        assert (dm.sum(1)[tm > 0] == max(1, round(df * n))).all()
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_modes_always_keep_a_participant(mode):
+    tm, dm = sample_masks(jax.random.PRNGKey(4), 4, 10, **MODES[mode])
+    assert np.asarray(tm).sum() >= 1
+    assert np.asarray(dm).sum() >= 1
