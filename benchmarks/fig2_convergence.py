@@ -4,7 +4,9 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.train import fl_trainer as FT
+from repro.core import PerMFL
+from repro.core.baselines import HSGD, L2GD
+from repro.train.engine import run_experiment
 
 from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
                                   make_fed_data, model_for, to_jax)
@@ -26,19 +28,22 @@ def run(dataset="fmnist", convex=True, rounds=12, csv=print, quick=True):
     m, n = fd.m_teams, fd.n_devices
     lr = 0.03 if convex else 0.01
 
+    # all three algorithms run through the same scanned engine: one
+    # compiled program per curve (core.algorithm + train.engine)
+    algos = {
+        "permfl": PerMFL(loss, hp),
+        "hsgd": HSGD(loss, lr=lr, k_team=hp.k_team, l_local=hp.l_local),
+        "l2gd": L2GD(loss, lr=lr, lam_c=0.5, lam_g=0.5, k_team=hp.k_team,
+                     l_local=hp.l_local),
+    }
     curves = {}
-    r = FT.run_permfl(p0, tr, va, loss_fn=loss, metric_fn=met, hp=hp,
-                      rounds=rounds, m=m, n=n)
-    curves["permfl_pm"] = r.pm_acc
-    curves["permfl_gm"] = r.gm_acc
-    r = FT.run_hsgd(p0, tr, va, loss_fn=loss, metric_fn=met, lr=lr,
-                    k_team=hp.k_team, l_local=hp.l_local,
-                    rounds=rounds, m=m, n=n)
-    curves["hsgd_gm"] = r.gm_acc
-    r = FT.run_l2gd(p0, tr, va, loss_fn=loss, metric_fn=met, lr=lr,
-                    lam_c=0.5, lam_g=0.5, k_team=hp.k_team,
-                    l_local=hp.l_local, rounds=rounds, m=m, n=n)
-    curves["l2gd_pm"] = r.pm_acc
+    for name, algo in algos.items():
+        r = run_experiment(algo, p0, tr, va, metric_fn=met,
+                           rounds=rounds, m=m, n=n)
+        if r.pm_acc:
+            curves[f"{name}_pm"] = r.pm_acc
+        if r.gm_acc:
+            curves[f"{name}_gm"] = r.gm_acc
 
     mdl = "mclr" if convex else "cnn"
     for name, hist in curves.items():

@@ -7,7 +7,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.train import fl_trainer as FT
+from repro.core import PerMFL
+from repro.train.engine import run_experiment
 
 from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
                                   make_fed_data, model_for, to_jax)
@@ -37,8 +38,8 @@ def run(dataset="mnist", convex=True, rounds=6, csv=print):
         for v in values:
             hp = dataclasses.replace(HP_DEFAULT, **fixed, **{hname: v},
                                      alpha=0.01, eta=0.03)
-            r = FT.run_permfl(p0, tr, va, loss_fn=loss, metric_fn=met,
-                              hp=hp, rounds=rounds, m=m, n=n)
+            r = run_experiment(PerMFL(loss, hp), p0, tr, va, metric_fn=met,
+                               rounds=rounds, m=m, n=n)
             final_pm.append(r.pm_acc[-1])
             final_gm.append(r.gm_acc[-1])
             mdl = "mclr" if convex else "cnn"

@@ -18,6 +18,8 @@ import numpy as np
 from repro.configs.paper_cnn import CONFIG as CNN
 from repro.configs.paper_dnn import CONFIG as DNN
 from repro.configs.paper_mclr import CONFIG as MCLR
+from repro.core import PerMFL
+from repro.core import baselines as B
 from repro.core.permfl import PerMFLHParams
 from repro.data.federated import partition_label_skew, partition_tabular
 from repro.data.synthetic import make_dataset, synthetic_tabular
@@ -91,6 +93,27 @@ def fns_for(cfg):
     loss = lambda p, b: PM.loss_fn(p, cfg, b)
     met = lambda p, b: PM.accuracy(p, cfg, b)
     return loss, met
+
+
+def make_algorithm(name: str, loss, *, hp=HP_DEFAULT, lr: float = 0.03,
+                   comm=None):
+    """Paper-default FLAlgorithm instances for the unified engine, keyed by
+    the Table-1 names. lr is the baselines' device learning rate."""
+    builders = {
+        "permfl": lambda: PerMFL(loss, hp, comm=comm),
+        "fedavg": lambda: B.FedAvg(loss, lr=lr,
+                                   local_steps=hp.k_team * hp.l_local),
+        "perfedavg": lambda: B.PerFedAvg(loss, lr=lr, inner_lr=lr,
+                                         local_steps=20),
+        "pfedme": lambda: B.PFedMe(loss, lr=1.0, inner_lr=lr, lam=15.0,
+                                   inner_steps=10, local_rounds=5),
+        "ditto": lambda: B.Ditto(loss, lr=lr, lam=0.5, local_steps=20),
+        "hsgd": lambda: B.HSGD(loss, lr=lr, k_team=hp.k_team,
+                               l_local=hp.l_local),
+        "l2gd": lambda: B.L2GD(loss, lr=lr, lam_c=0.5, lam_g=0.5,
+                               k_team=hp.k_team, l_local=hp.l_local),
+    }
+    return builders[name]()
 
 
 def to_jax(fd):

@@ -12,11 +12,12 @@ import numpy as np
 
 from repro.comm import CommConfig
 from repro.configs.paper_mclr import CONFIG as MCLR
+from repro.core import PerMFL
 from repro.core.permfl import PerMFLHParams
 from repro.data.federated import partition_label_skew
 from repro.data.synthetic import make_dataset
 from repro.models import paper_models as PM
-from repro.train.fl_trainer import run_permfl
+from repro.train.engine import run_experiment
 
 
 def main():
@@ -33,11 +34,13 @@ def main():
     train = {"x": jnp.asarray(fed.train_x), "y": jnp.asarray(fed.train_y)}
     val = {"x": jnp.asarray(fed.val_x), "y": jnp.asarray(fed.val_y)}
 
-    res = run_permfl(
-        params, train, val,
-        loss_fn=lambda p, b: PM.loss_fn(p, MCLR, b),
-        metric_fn=lambda p, b: PM.accuracy(p, MCLR, b),
-        hp=hp, rounds=10, m=fed.m_teams, n=fed.n_devices)
+    loss = lambda p, b: PM.loss_fn(p, MCLR, b)
+    metric = lambda p, b: PM.accuracy(p, MCLR, b)
+
+    # the whole experiment — 10 rounds + evals — is one compiled program
+    res = run_experiment(PerMFL(loss, hp), params, train, val,
+                         metric_fn=metric, rounds=10,
+                         m=fed.m_teams, n=fed.n_devices)
 
     for t, (pm, tm, gm) in enumerate(zip(res.pm_acc, res.tm_acc,
                                          res.gm_acc)):
@@ -48,12 +51,10 @@ def main():
 
     # Same run, but the uplinks ship top-10% sparsified deltas with error
     # feedback; the CommLedger accounts bytes per tier per round.
-    res_c = run_permfl(
-        params, train, val,
-        loss_fn=lambda p, b: PM.loss_fn(p, MCLR, b),
-        metric_fn=lambda p, b: PM.accuracy(p, MCLR, b),
-        hp=hp, rounds=10, m=fed.m_teams, n=fed.n_devices,
-        comm=CommConfig(compressor="topk", k_frac=0.1))
+    res_c = run_experiment(
+        PerMFL(loss, hp, comm=CommConfig(compressor="topk", k_frac=0.1)),
+        params, train, val, metric_fn=metric, rounds=10,
+        m=fed.m_teams, n=fed.n_devices)
     s = res_c.comm.summary()
     print(f"\ncompressed uplinks (top-10% + EF): PM={res_c.pm_acc[-1]:.3f} "
           f"(vs {res.pm_acc[-1]:.3f} uncompressed)")

@@ -9,7 +9,11 @@ Two links, four directions per global round t (DESIGN.md §3):
   LAN  device -> team   compressed theta delta, once per team iteration
 
 Only *participating* teams/devices move bytes, so ``log_round`` takes the
-realized mask counts. Wire sizes are static functions of the compressor
+realized mask counts — and a device only transmits when its *team* also
+participates (``ef_gate`` in ``permfl_round``), so device counts must be
+computed from the gated mask ``device_mask * team_mask[:, None]``
+(``log_round_masks`` does this; the engine's scan outputs are pre-gated).
+Wire sizes are static functions of the compressor
 config and the leaf shapes — the ledger runs entirely on the host, outside
 jit, and costs nothing on the hot path.
 
@@ -87,7 +91,9 @@ class CommLedger:
         return cls(cfg=cfg, leaf_sizes=sizes)
 
     def log_round(self, *, k_team: int, n_teams: int, n_devices: int):
-        """n_teams / n_devices: participating counts this round."""
+        """n_teams / n_devices: participating counts this round; n_devices
+        must already be gated by team participation (see module docstring,
+        or use log_round_masks)."""
         full = model_bytes(self.leaf_sizes)
         comp = model_bytes(self.leaf_sizes, self.cfg)
         self.rounds.append(RoundBytes(
@@ -95,6 +101,14 @@ class CommLedger:
             wan_down=n_teams * full,
             lan_up=k_team * n_devices * comp,
             lan_down=k_team * n_devices * full))
+
+    def log_round_masks(self, *, k_team: int, team_mask, device_mask):
+        """log_round from raw participation masks: devices of masked-out
+        teams never transmit (nor receive), whatever device_mask says."""
+        tm = np.asarray(team_mask)
+        gated = np.asarray(device_mask) * tm[:, None]
+        self.log_round(k_team=k_team, n_teams=int(tm.sum()),
+                       n_devices=int(gated.sum()))
 
     # -- aggregates ---------------------------------------------------------
 

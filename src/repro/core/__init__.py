@@ -1,7 +1,10 @@
 from repro.core.permfl import (PerMFLHParams, PerMFLState, eval_stacked,
-                               init_state, permfl_round)
-from repro.core import baselines, participation, team_formation, theory
+                               init_state, normalize_masks, permfl_round)
+from repro.core.algorithm import FLAlgorithm, FLAlgorithmBase, PerMFL
+from repro.core import (algorithm, baselines, participation, team_formation,
+                        theory)
 
 __all__ = ["PerMFLHParams", "PerMFLState", "eval_stacked", "init_state",
-           "permfl_round", "baselines", "participation", "team_formation",
-           "theory"]
+           "normalize_masks", "permfl_round", "FLAlgorithm",
+           "FLAlgorithmBase", "PerMFL", "algorithm", "baselines",
+           "participation", "team_formation", "theory"]

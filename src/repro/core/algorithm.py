@@ -1,0 +1,132 @@
+"""Unified FL algorithm API — one protocol, seven implementations.
+
+Every algorithm in the repo (PerMFL and the six Table-1 baselines) is a
+stateless *instance* capturing its hyperparameters and loss function, and
+exposing three pure methods the engine (`repro.train.engine`) drives:
+
+    init_state(params, m, n)       -> state pytree (stacked tiers)
+    round(state, data, team_mask=, device_mask=) -> new state
+    eval(state, train_data, val_data, metric_fn) -> {metric: scalar}
+
+``round`` must be traceable: the engine calls it inside ``jax.lax.scan``
+under a single ``jit``, so one compiled program covers the whole
+experiment instead of one host dispatch per round. Masks are always (M,)
+/ (M, N) f32 arrays (the engine normalizes/samples them in-graph);
+algorithms without a participation notion ignore them. ``eval`` returns a
+dict of scalar metrics (keys among "pm" / "tm" / "gm" / "train_loss") and
+also runs traced, so it compiles once per experiment instead of being
+re-dispatched eagerly every eval round.
+
+Byte accounting stays on the host: algorithms that move compressed bytes
+implement ``make_ledger`` / ``log_comm_round`` and the engine feeds them
+the *realized* participation counts it emitted as scan outputs
+(DESIGN.md §5).
+
+Implementations are *frozen* dataclasses: the engine caches compiled
+programs keyed on the instance, so configuration must be immutable —
+change a hyperparameter by constructing a new instance, never by
+mutating one (mutation raises FrozenInstanceError).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax
+
+from repro.comm import CommConfig, CommLedger
+from repro.core import permfl as P
+
+
+@runtime_checkable
+class FLAlgorithm(Protocol):
+    """Structural type the engine drives; see module docstring."""
+    name: str
+
+    def init_state(self, params, m: int, n: int) -> Any: ...
+
+    def round(self, state, data, *, team_mask, device_mask) -> Any: ...
+
+    def eval(self, state, train_data, val_data,
+             metric_fn: Callable) -> dict: ...
+
+
+class FLAlgorithmBase:
+    """Defaults: no participation support (round ignores the masks — the
+    engine refuses team_frac/device_frac < 1 so FLResult.participation
+    never reports sampling that didn't happen), no comm ledger."""
+
+    supports_participation = False
+
+    def make_ledger(self, params) -> Optional[CommLedger]:
+        return None
+
+    def log_comm_round(self, ledger: CommLedger, *, n_teams: int,
+                       n_devices: int) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# metric helpers shared by the implementations
+# ---------------------------------------------------------------------------
+
+def eval_global(x, val_data, metric_fn):
+    """Unstacked model x evaluated on every device's data; scalar mean."""
+    return jax.vmap(jax.vmap(lambda d: metric_fn(x, d)))(val_data).mean()
+
+
+def eval_personal(theta, val_data, metric_fn):
+    """(M, N, ...) stacked models on their own devices' data; scalar mean."""
+    return jax.vmap(jax.vmap(metric_fn))(theta, val_data).mean()
+
+
+# ---------------------------------------------------------------------------
+# PerMFL as an FLAlgorithm
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PerMFL(FLAlgorithmBase):
+    """Algorithm 1 (core.permfl) behind the unified API.
+
+    comm: optional CommConfig — uplinks cross compressed with per-sender
+    error feedback; the engine accounts bytes via make_ledger /
+    log_comm_round from realized (gated) participation counts.
+    """
+    loss_fn: Callable
+    hp: P.PerMFLHParams
+    comm: Optional[CommConfig] = None
+
+    name = "permfl"
+    supports_participation = True   # paper modes 1-4 (§3.1)
+
+    def init_state(self, params, m: int, n: int) -> P.PerMFLState:
+        return P.init_state(params, m, n, comm=self.comm)
+
+    def round(self, state, data, *, team_mask, device_mask):
+        m, n = device_mask.shape
+        return P.permfl_round(state, data, self.hp, self.loss_fn,
+                              m_teams=m, n_devices=n, team_mask=team_mask,
+                              device_mask=device_mask, comm=self.comm)
+
+    def eval(self, state, train_data, val_data, metric_fn):
+        return {
+            "pm": P.eval_stacked(state, val_data, metric_fn,
+                                 which="pm").mean(),
+            "tm": P.eval_stacked(state, val_data, metric_fn,
+                                 which="tm").mean(),
+            "gm": P.eval_stacked(state, val_data, metric_fn,
+                                 which="gm").mean(),
+            "train_loss": jax.vmap(jax.vmap(self.loss_fn))(
+                state.theta, train_data).mean(),
+        }
+
+    # -- byte accounting (host side) ----------------------------------------
+
+    def make_ledger(self, params):
+        if self.comm is None:
+            return None
+        return CommLedger.for_params(self.comm, params)
+
+    def log_comm_round(self, ledger, *, n_teams, n_devices):
+        ledger.log_round(k_team=self.hp.k_team, n_teams=n_teams,
+                         n_devices=n_devices)

@@ -19,6 +19,7 @@ methods treat all M*N devices as one flat pool.
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 from typing import Callable
 
 import jax
@@ -204,3 +205,162 @@ def l2gd_round(x, theta, data, *, loss_fn: Callable, lr: float,
     theta = jax.lax.fori_loop(0, k_team, team_iter, theta)
     new_x = _mean01(theta)
     return new_x, theta
+
+
+# ---------------------------------------------------------------------------
+# FLAlgorithm adapters — the round functions above behind the unified API
+# (core.algorithm), so every baseline runs through the scanned engine.
+# Single-tier methods ignore the participation masks (the paper ablates
+# participation for PerMFL only); their round stays a pure function of
+# (state, data) and scans unchanged.
+# ---------------------------------------------------------------------------
+
+from repro.core.algorithm import (FLAlgorithmBase, eval_global,  # noqa: E402
+                                  eval_personal)
+
+
+@dataclass(frozen=True)
+class FedAvg(FLAlgorithmBase):
+    loss_fn: Callable
+    lr: float
+    local_steps: int
+
+    name = "fedavg"
+
+    def init_state(self, params, m, n):
+        return params
+
+    def round(self, x, data, *, team_mask, device_mask):
+        m, n = device_mask.shape
+        return fedavg_round(x, data, loss_fn=self.loss_fn, lr=self.lr,
+                            local_steps=self.local_steps, m=m, n=n)
+
+    def eval(self, x, train_data, val_data, metric_fn):
+        return {"gm": eval_global(x, val_data, metric_fn)}
+
+
+@dataclass(frozen=True)
+class PerFedAvg(FLAlgorithmBase):
+    loss_fn: Callable
+    lr: float
+    inner_lr: float
+    local_steps: int
+
+    name = "perfedavg"
+
+    def init_state(self, params, m, n):
+        return params
+
+    def round(self, x, data, *, team_mask, device_mask):
+        m, n = device_mask.shape
+        return perfedavg_round(x, data, loss_fn=self.loss_fn, lr=self.lr,
+                               inner_lr=self.inner_lr,
+                               local_steps=self.local_steps, m=m, n=n)
+
+    def eval(self, x, train_data, val_data, metric_fn):
+        m, n = jax.tree.leaves(train_data)[0].shape[:2]
+        theta = perfedavg_personalize(x, train_data, loss_fn=self.loss_fn,
+                                      inner_lr=self.inner_lr, m=m, n=n)
+        return {"pm": eval_personal(theta, val_data, metric_fn),
+                "gm": eval_global(x, val_data, metric_fn)}
+
+
+@dataclass(frozen=True)
+class PFedMe(FLAlgorithmBase):
+    loss_fn: Callable
+    lr: float
+    inner_lr: float
+    lam: float
+    inner_steps: int
+    local_rounds: int
+
+    name = "pfedme"
+
+    def init_state(self, params, m, n):
+        return (params, _bcast(params, (m, n)))
+
+    def round(self, state, data, *, team_mask, device_mask):
+        x, _ = state
+        m, n = device_mask.shape
+        return pfedme_round(x, data, loss_fn=self.loss_fn, lr=self.lr,
+                            inner_lr=self.inner_lr, lam=self.lam,
+                            inner_steps=self.inner_steps,
+                            local_rounds=self.local_rounds, m=m, n=n)
+
+    def eval(self, state, train_data, val_data, metric_fn):
+        x, theta = state
+        return {"pm": eval_personal(theta, val_data, metric_fn),
+                "gm": eval_global(x, val_data, metric_fn)}
+
+
+@dataclass(frozen=True)
+class Ditto(FLAlgorithmBase):
+    loss_fn: Callable
+    lr: float
+    lam: float
+    local_steps: int
+
+    name = "ditto"
+
+    def init_state(self, params, m, n):
+        return (params, _bcast(params, (m, n)))
+
+    def round(self, state, data, *, team_mask, device_mask):
+        x, v = state
+        m, n = device_mask.shape
+        return ditto_round(x, v, data, loss_fn=self.loss_fn, lr=self.lr,
+                           lam=self.lam, local_steps=self.local_steps,
+                           m=m, n=n)
+
+    def eval(self, state, train_data, val_data, metric_fn):
+        x, v = state
+        return {"pm": eval_personal(v, val_data, metric_fn),
+                "gm": eval_global(x, val_data, metric_fn)}
+
+
+@dataclass(frozen=True)
+class HSGD(FLAlgorithmBase):
+    loss_fn: Callable
+    lr: float
+    k_team: int
+    l_local: int
+
+    name = "hsgd"
+
+    def init_state(self, params, m, n):
+        return params
+
+    def round(self, x, data, *, team_mask, device_mask):
+        m, n = device_mask.shape
+        return hsgd_round(x, data, loss_fn=self.loss_fn, lr=self.lr,
+                          k_team=self.k_team, l_local=self.l_local, m=m, n=n)
+
+    def eval(self, x, train_data, val_data, metric_fn):
+        return {"gm": eval_global(x, val_data, metric_fn)}
+
+
+@dataclass(frozen=True)
+class L2GD(FLAlgorithmBase):
+    loss_fn: Callable
+    lr: float
+    lam_c: float
+    lam_g: float
+    k_team: int
+    l_local: int
+
+    name = "l2gd"
+
+    def init_state(self, params, m, n):
+        return (params, _bcast(params, (m, n)))
+
+    def round(self, state, data, *, team_mask, device_mask):
+        x, theta = state
+        m, n = device_mask.shape
+        return l2gd_round(x, theta, data, loss_fn=self.loss_fn, lr=self.lr,
+                          lam_c=self.lam_c, lam_g=self.lam_g,
+                          k_team=self.k_team, l_local=self.l_local, m=m, n=n)
+
+    def eval(self, state, train_data, val_data, metric_fn):
+        x, theta = state
+        return {"pm": eval_personal(theta, val_data, metric_fn),
+                "gm": eval_global(x, val_data, metric_fn)}

@@ -103,9 +103,18 @@ def _masked_mean(tree, mask, axis, fallback=None):
     return jax.tree.map(leaf, tree, fallback)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("loss_fn", "hp", "m_teams", "n_devices", "comm"))
+def normalize_masks(team_mask, device_mask, m_teams: int, n_devices: int):
+    """None -> all-ones participation arrays. Masks always enter the jitted
+    round as (M,) / (M, N) f32 arrays so a single trace serves every
+    participation pattern (full rounds and team_frac<1 rounds alike)."""
+    if team_mask is None:
+        team_mask = jnp.ones((m_teams,), jnp.float32)
+    if device_mask is None:
+        device_mask = jnp.ones((m_teams, n_devices), jnp.float32)
+    return jnp.asarray(team_mask, jnp.float32), \
+        jnp.asarray(device_mask, jnp.float32)
+
+
 def permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
                  loss_fn: Callable, *, m_teams: int, n_devices: int,
                  team_mask=None, device_mask=None,
@@ -115,21 +124,32 @@ def permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
     data: pytree of arrays with leading (M, N, ...) — each device's (full)
         batch; loss_fn(params, device_batch) -> scalar.
     team_mask: (M,) f32 in {0,1}; device_mask: (M, N) f32. None = full
-        participation (paper's default mode 1).
+        participation (paper's default mode 1). Masks are normalized to
+        arrays here, at the boundary, so flipping between None and arrays
+        across rounds never re-traces the compiled round.
     comm: optional CommConfig. When given, the device->team theta deltas
         (each team iteration) and the team->server w deltas (once per
         round) cross their links compressed, with per-sender error
         feedback carried in state.comm; local/personalized models stay
         exact (DESIGN.md §3).
     """
-    if team_mask is None:
-        team_mask = jnp.ones((m_teams,), jnp.float32)
-    if device_mask is None:
-        device_mask = jnp.ones((m_teams, n_devices), jnp.float32)
     if comm is not None and state.comm is None:
         raise ValueError("comm config given but state carries no CommState; "
                          "build the state with init_state(..., comm=cfg)")
+    team_mask, device_mask = normalize_masks(team_mask, device_mask,
+                                             m_teams, n_devices)
+    return _permfl_round(state, data, hp, loss_fn, m_teams=m_teams,
+                         n_devices=n_devices, team_mask=team_mask,
+                         device_mask=device_mask, comm=comm)
 
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("loss_fn", "hp", "m_teams", "n_devices", "comm"))
+def _permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
+                  loss_fn: Callable, *, m_teams: int, n_devices: int,
+                  team_mask, device_mask,
+                  comm: Optional[CommConfig] = None):
     x = state.x
     grad_fn = jax.grad(loss_fn)
     per_device_grad = jax.vmap(jax.vmap(grad_fn))

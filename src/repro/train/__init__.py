@@ -1,6 +1,8 @@
-from repro.train import checkpoint, fl_trainer, metrics, optim, trainer
+from repro.train import checkpoint, engine, fl_trainer, metrics, optim, trainer
+from repro.train.engine import FLResult, run_experiment
 from repro.train.optim import adamw, momentum, sgd
 from repro.train.train_state import TrainState
 
-__all__ = ["checkpoint", "fl_trainer", "metrics", "optim", "trainer",
-           "adamw", "momentum", "sgd", "TrainState"]
+__all__ = ["checkpoint", "engine", "fl_trainer", "metrics", "optim",
+           "trainer", "FLResult", "run_experiment", "adamw", "momentum",
+           "sgd", "TrainState"]

@@ -1,0 +1,185 @@
+"""Scanned multi-round FL engine: one compiled program per experiment.
+
+The legacy drivers dispatched one jitted round at a time from Python and
+re-traced eval on every call; at paper scale (hundreds of rounds x seven
+algorithms x hyperparameter sweeps) the experiments were bottlenecked on
+host dispatch, not hardware. This engine runs any `FLAlgorithm`
+(core.algorithm) as a *single* jitted program:
+
+    jit( scan over eval chunks:
+           scan over eval_every rounds:
+             sample participation masks in-graph (PRNG key in the carry)
+             state = algo.round(state, data, masks)
+             emit realized (gated) participation counts   # scan outputs
+           metrics = algo.eval(state, ...)                # traced, cached
+         -> metric history + per-round counts )
+
+Participation sampling lives in the graph (core.participation), threading
+the PRNG key through the scan carry — the same split-per-round chain the
+legacy loop used, so trajectories match bit-for-bit. Byte accounting
+stays on the host: the per-round team/device counts come back as scan
+outputs and feed `CommLedger` post-hoc, counting only devices whose team
+also participated (device_mask * team_mask[:, None] — the legacy loop's
+ungated `dm.sum()` overcounted).
+
+``scan=False`` runs the same semantics as a per-round host-dispatch loop
+(the legacy execution model) — kept for equivalence tests and for
+benchmarks/bench_engine.py to quantify the dispatch win.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommLedger
+from repro.core.participation import sample_masks
+
+
+@dataclass
+class FLResult:
+    pm_acc: list = field(default_factory=list)   # per-eval personalized acc
+    tm_acc: list = field(default_factory=list)
+    gm_acc: list = field(default_factory=list)
+    train_loss: list = field(default_factory=list)
+    seconds: float = 0.0
+    state: Any = None    # final algorithm state (set for every algorithm)
+    comm: Optional[CommLedger] = None    # per-tier byte ledger (comm runs)
+    participation: list = field(default_factory=list)  # (teams, devices)/rnd
+
+    def last(self, which="pm"):
+        hist = {"pm": self.pm_acc, "tm": self.tm_acc, "gm": self.gm_acc}[which]
+        return hist[-1] if hist else float("nan")
+
+    def best(self, which="pm"):
+        hist = {"pm": self.pm_acc, "tm": self.tm_acc, "gm": self.gm_acc}[which]
+        return max(hist) if hist else float("nan")
+
+
+_METRIC_FIELDS = {"pm": "pm_acc", "tm": "tm_acc", "gm": "gm_acc",
+                  "train_loss": "train_loss"}
+
+
+def _round_body(algo, m, n, team_frac, device_frac):
+    """Scan step: in-graph mask sampling (key in the carry), one algorithm
+    round, realized gated participation counts as outputs."""
+    sampled = team_frac < 1.0 or device_frac < 1.0
+
+    def body(carry, _, data):
+        state, key = carry
+        if sampled:
+            key, sub = jax.random.split(key)
+            tm, dm = sample_masks(sub, m, n, team_frac=team_frac,
+                                  device_frac=device_frac)
+        else:
+            tm = jnp.ones((m,), jnp.float32)
+            dm = jnp.ones((m, n), jnp.float32)
+        state = algo.round(state, data, team_mask=tm, device_mask=dm)
+        gated = dm * tm[:, None]
+        counts = (jnp.sum(tm).astype(jnp.int32),
+                  jnp.sum(gated).astype(jnp.int32))
+        return (state, key), counts
+
+    return body
+
+
+# Compiled programs are cached per (algo instance, metric_fn, dims): a
+# sweep that reruns the same algorithm object pays one compile for its
+# first experiment and dispatches exactly once per experiment after that.
+@functools.lru_cache(maxsize=128)
+def _scan_program(algo, metric_fn, m, n, team_frac, device_frac):
+    body = _round_body(algo, m, n, team_frac, device_frac)
+
+    @functools.partial(jax.jit, static_argnames=("length", "n_steps"))
+    def scanned(state, key, tr, va, *, length, n_steps):
+        """`n_steps` chunks of `length` rounds, eval after each chunk."""
+        def chunk(carry, _):
+            state, key = carry
+            (state, key), counts = jax.lax.scan(
+                lambda c, x: body(c, x, tr), (state, key), length=length)
+            return (state, key), (algo.eval(state, tr, va, metric_fn),
+                                  counts)
+
+        return jax.lax.scan(chunk, (state, key), length=n_steps)
+
+    return scanned
+
+
+@functools.lru_cache(maxsize=128)
+def _eval_program(algo, metric_fn):
+    return jax.jit(lambda state, tr, va: algo.eval(state, tr, va, metric_fn))
+
+
+def run_experiment(algo, params0, train_data, val_data, *,
+                   metric_fn: Callable, rounds: int, m: int, n: int,
+                   team_frac: float = 1.0, device_frac: float = 1.0,
+                   seed: int = 0, eval_every: int = 1,
+                   scan: bool = True) -> FLResult:
+    """Drive `algo` for `rounds` global rounds, evaluating every
+    `eval_every` rounds (and after the final round). Returns an FLResult
+    whose metric histories hold one entry per eval point.
+
+    scan=True compiles the whole experiment into one program (chunked
+    lax.scan); scan=False dispatches round-by-round from the host with
+    identical semantics — same mask PRNG chain, same eval points.
+    """
+    if (team_frac < 1.0 or device_frac < 1.0) and \
+            not getattr(algo, "supports_participation", False):
+        raise ValueError(
+            f"{getattr(algo, 'name', type(algo).__name__)} ignores "
+            "participation masks; team_frac/device_frac < 1 would sample "
+            "masks that never gate anything")
+    state = algo.init_state(params0, m, n)
+    key = jax.random.PRNGKey(seed)
+    n_chunks, rem = divmod(rounds, eval_every)
+
+    scanned = _scan_program(algo, metric_fn, m, n, team_frac, device_frac)
+    round_body = _round_body(algo, m, n, team_frac, device_frac)
+    eval_jit = _eval_program(algo, metric_fn)
+
+    res = FLResult()
+    ledger = algo.make_ledger(params0)
+    t0 = time.time()
+
+    def record(metrics_hist, counts_hist):
+        """metrics_hist: dict of (chunks,) arrays; counts: (chunks, len)."""
+        for k, v in metrics_hist.items():
+            getattr(res, _METRIC_FIELDS[k]).extend(
+                float(x) for x in np.asarray(v))
+        tc, dc = counts_hist
+        res.participation.extend(
+            zip(np.asarray(tc).reshape(-1).tolist(),
+                np.asarray(dc).reshape(-1).tolist()))
+
+    if scan:
+        for length, n_steps in ((eval_every, n_chunks), (rem, 1)):
+            if length == 0 or n_steps == 0:
+                continue
+            (state, key), (metrics, counts) = scanned(
+                state, key, train_data, val_data, length=length,
+                n_steps=n_steps)
+            record(metrics, counts)
+    else:
+        for t in range(rounds):
+            (state, key), counts = round_body((state, key), None,
+                                              train_data)
+            res.participation.append(
+                (int(counts[0]), int(counts[1])))
+            if (t + 1) % eval_every == 0 or t == rounds - 1:
+                metrics = eval_jit(state, train_data, val_data)
+                for k, v in metrics.items():
+                    getattr(res, _METRIC_FIELDS[k]).append(float(v))
+
+    res.seconds = time.time() - t0
+    res.state = state
+
+    if ledger is not None:
+        for n_teams, n_devices in res.participation:
+            algo.log_comm_round(ledger, n_teams=n_teams, n_devices=n_devices)
+        res.comm = ledger
+    return res

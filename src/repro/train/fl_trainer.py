@@ -1,198 +1,114 @@
-"""FL trainer: drives PerMFL (and the baselines) over stacked federated
-data — the paper-faithful experiment loop behind benchmarks/ and examples/.
+"""FL trainer — thin compatibility shims over the scanned engine.
+
+The seven ``run_<algo>`` entry points keep their historical signatures
+(benchmarks/, examples/, and tests call them), but each now just builds
+the matching `FLAlgorithm` instance (core.algorithm / core.baselines) and
+hands it to `repro.train.engine.run_experiment`, which compiles the whole
+experiment — rounds, in-graph participation sampling, and eval — into a
+single program instead of dispatching one jitted round at a time.
+
+Every runner sets ``FLResult.state`` to the algorithm's final state
+(historically only run_permfl/run_fedavg did):
+
+    permfl    -> PerMFLState
+    fedavg    -> x                       (global model pytree)
+    perfedavg -> x
+    pfedme    -> (x, theta)              (global, personalized)
+    ditto     -> (x, v)
+    hsgd      -> x
+    l2gd      -> (x, theta)
+
+Eval cadence: metrics are recorded every ``eval_every`` rounds counting
+from the first (i.e. after rounds eval_every, 2*eval_every, ...) and
+always after the final round; with the default eval_every=1 this is
+identical to the legacy per-round loop.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.comm import CommConfig, CommLedger
-from repro.core import (PerMFLHParams, eval_stacked, init_state,
-                        permfl_round)
+from repro.comm import CommConfig
+from repro.core import PerMFL, PerMFLHParams
 from repro.core import baselines as B
-from repro.core.participation import sample_masks
+from repro.train.engine import FLResult, run_experiment
 
-
-@dataclass
-class FLResult:
-    pm_acc: list = field(default_factory=list)   # per-round personalized acc
-    tm_acc: list = field(default_factory=list)
-    gm_acc: list = field(default_factory=list)
-    train_loss: list = field(default_factory=list)
-    seconds: float = 0.0
-    state: Any = None    # final state (set by run_permfl / run_fedavg)
-    comm: Optional[CommLedger] = None    # per-tier byte ledger (PerMFL+comm)
-
-    def last(self, which="pm"):
-        hist = {"pm": self.pm_acc, "tm": self.tm_acc, "gm": self.gm_acc}[which]
-        return hist[-1] if hist else float("nan")
-
-    def best(self, which="pm"):
-        hist = {"pm": self.pm_acc, "tm": self.tm_acc, "gm": self.gm_acc}[which]
-        return max(hist) if hist else float("nan")
+__all__ = ["FLResult", "ALGORITHMS", "run_permfl", "run_fedavg",
+           "run_perfedavg", "run_pfedme", "run_ditto", "run_hsgd",
+           "run_l2gd"]
 
 
 def run_permfl(params0, train_data, val_data, *, loss_fn, metric_fn,
                hp: PerMFLHParams, rounds: int, m: int, n: int,
                team_frac: float = 1.0, device_frac: float = 1.0,
                seed: int = 0, eval_every: int = 1,
-               comm: Optional[CommConfig] = None) -> FLResult:
-    state = init_state(params0, m, n, comm=comm)
-    key = jax.random.PRNGKey(seed)
-    res = FLResult()
-    if comm is not None:
-        res.comm = CommLedger.for_params(comm, params0)
-    t0 = time.time()
-    for t in range(rounds):
-        if team_frac < 1.0 or device_frac < 1.0:
-            key, sub = jax.random.split(key)
-            tm, dm = sample_masks(sub, m, n, team_frac=team_frac,
-                                  device_frac=device_frac)
-        else:
-            tm = dm = None
-        state = permfl_round(state, train_data, hp, loss_fn,
-                             m_teams=m, n_devices=n,
-                             team_mask=tm, device_mask=dm, comm=comm)
-        if res.comm is not None:
-            res.comm.log_round(
-                k_team=hp.k_team,
-                n_teams=m if tm is None else int(tm.sum()),
-                n_devices=m * n if dm is None else int(dm.sum()))
-        if t % eval_every == 0 or t == rounds - 1:
-            res.pm_acc.append(float(
-                eval_stacked(state, val_data, metric_fn, which="pm").mean()))
-            res.tm_acc.append(float(
-                eval_stacked(state, val_data, metric_fn, which="tm").mean()))
-            res.gm_acc.append(float(
-                eval_stacked(state, val_data, metric_fn, which="gm").mean()))
-            res.train_loss.append(float(jax.vmap(jax.vmap(loss_fn))(
-                state.theta, train_data).mean()))
-    res.seconds = time.time() - t0
-    res.state = state
-    return res
-
-
-def _eval_global(x, val_data, metric_fn):
-    return float(jax.vmap(jax.vmap(lambda d: metric_fn(x, d)))
-                 (val_data).mean())
-
-
-def _eval_stackedq(theta, val_data, metric_fn):
-    return float(jax.vmap(jax.vmap(metric_fn))(theta, val_data).mean())
+               comm: Optional[CommConfig] = None,
+               scan: bool = True) -> FLResult:
+    return run_experiment(
+        PerMFL(loss_fn, hp, comm=comm), params0, train_data, val_data,
+        metric_fn=metric_fn, rounds=rounds, m=m, n=n, team_frac=team_frac,
+        device_frac=device_frac, seed=seed, eval_every=eval_every, scan=scan)
 
 
 def run_fedavg(params0, train_data, val_data, *, loss_fn, metric_fn,
                lr: float, local_steps: int, rounds: int, m: int,
-               n: int, eval_every: int = 1) -> FLResult:
-    x = params0
-    res = FLResult()
-    t0 = time.time()
-    for t in range(rounds):
-        x = B.fedavg_round(x, train_data, loss_fn=loss_fn, lr=lr,
-                           local_steps=local_steps, m=m, n=n)
-        if t % eval_every == 0 or t == rounds - 1:
-            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
-    res.seconds = time.time() - t0
-    res.state = x
-    return res
+               n: int, eval_every: int = 1, scan: bool = True) -> FLResult:
+    return run_experiment(
+        B.FedAvg(loss_fn, lr=lr, local_steps=local_steps),
+        params0, train_data, val_data, metric_fn=metric_fn, rounds=rounds,
+        m=m, n=n, eval_every=eval_every, scan=scan)
 
 
 def run_perfedavg(params0, train_data, val_data, *, loss_fn, metric_fn,
                   lr: float, inner_lr: float, local_steps: int, rounds: int,
-                  m: int, n: int, eval_every: int = 1) -> FLResult:
-    x = params0
-    res = FLResult()
-    t0 = time.time()
-    for t in range(rounds):
-        x = B.perfedavg_round(x, train_data, loss_fn=loss_fn, lr=lr,
-                              inner_lr=inner_lr, local_steps=local_steps,
-                              m=m, n=n)
-        if t % eval_every == 0 or t == rounds - 1:
-            theta = B.perfedavg_personalize(x, train_data, loss_fn=loss_fn,
-                                            inner_lr=inner_lr, m=m, n=n)
-            res.pm_acc.append(_eval_stackedq(theta, val_data, metric_fn))
-            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
-    res.seconds = time.time() - t0
-    return res
+                  m: int, n: int, eval_every: int = 1,
+                  scan: bool = True) -> FLResult:
+    return run_experiment(
+        B.PerFedAvg(loss_fn, lr=lr, inner_lr=inner_lr,
+                    local_steps=local_steps),
+        params0, train_data, val_data, metric_fn=metric_fn, rounds=rounds,
+        m=m, n=n, eval_every=eval_every, scan=scan)
 
 
 def run_pfedme(params0, train_data, val_data, *, loss_fn, metric_fn,
                lr: float, inner_lr: float, lam: float, inner_steps: int,
                local_rounds: int, rounds: int, m: int, n: int,
-               eval_every: int = 1) -> FLResult:
-    x = params0
-    res = FLResult()
-    t0 = time.time()
-    for t in range(rounds):
-        x, theta = B.pfedme_round(
-            x, train_data, loss_fn=loss_fn, lr=lr, inner_lr=inner_lr,
-            lam=lam, inner_steps=inner_steps, local_rounds=local_rounds,
-            m=m, n=n)
-        if t % eval_every == 0 or t == rounds - 1:
-            res.pm_acc.append(_eval_stackedq(theta, val_data, metric_fn))
-            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
-    res.seconds = time.time() - t0
-    return res
+               eval_every: int = 1, scan: bool = True) -> FLResult:
+    return run_experiment(
+        B.PFedMe(loss_fn, lr=lr, inner_lr=inner_lr, lam=lam,
+                 inner_steps=inner_steps, local_rounds=local_rounds),
+        params0, train_data, val_data, metric_fn=metric_fn, rounds=rounds,
+        m=m, n=n, eval_every=eval_every, scan=scan)
 
 
 def run_ditto(params0, train_data, val_data, *, loss_fn, metric_fn,
               lr: float, lam: float, local_steps: int, rounds: int,
-              m: int, n: int, eval_every: int = 1) -> FLResult:
-    x = params0
-    v = jax.tree.map(
-        lambda p: jnp.broadcast_to(p[None, None], (m, n) + p.shape).copy(),
-        params0)
-    res = FLResult()
-    t0 = time.time()
-    for t in range(rounds):
-        x, v = B.ditto_round(x, v, train_data, loss_fn=loss_fn, lr=lr,
-                             lam=lam, local_steps=local_steps, m=m, n=n)
-        if t % eval_every == 0 or t == rounds - 1:
-            res.pm_acc.append(_eval_stackedq(v, val_data, metric_fn))
-            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
-    res.seconds = time.time() - t0
-    return res
+              m: int, n: int, eval_every: int = 1,
+              scan: bool = True) -> FLResult:
+    return run_experiment(
+        B.Ditto(loss_fn, lr=lr, lam=lam, local_steps=local_steps),
+        params0, train_data, val_data, metric_fn=metric_fn, rounds=rounds,
+        m=m, n=n, eval_every=eval_every, scan=scan)
 
 
 def run_hsgd(params0, train_data, val_data, *, loss_fn, metric_fn,
              lr: float, k_team: int, l_local: int, rounds: int,
-             m: int, n: int, eval_every: int = 1) -> FLResult:
-    x = params0
-    res = FLResult()
-    t0 = time.time()
-    for t in range(rounds):
-        x = B.hsgd_round(x, train_data, loss_fn=loss_fn, lr=lr,
-                         k_team=k_team, l_local=l_local, m=m, n=n)
-        if t % eval_every == 0 or t == rounds - 1:
-            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
-    res.seconds = time.time() - t0
-    return res
+             m: int, n: int, eval_every: int = 1,
+             scan: bool = True) -> FLResult:
+    return run_experiment(
+        B.HSGD(loss_fn, lr=lr, k_team=k_team, l_local=l_local),
+        params0, train_data, val_data, metric_fn=metric_fn, rounds=rounds,
+        m=m, n=n, eval_every=eval_every, scan=scan)
 
 
 def run_l2gd(params0, train_data, val_data, *, loss_fn, metric_fn,
              lr: float, lam_c: float, lam_g: float, k_team: int,
              l_local: int, rounds: int, m: int, n: int,
-             eval_every: int = 1) -> FLResult:
-    x = params0
-    theta = jax.tree.map(
-        lambda p: jnp.broadcast_to(p[None, None], (m, n) + p.shape).copy(),
-        params0)
-    res = FLResult()
-    t0 = time.time()
-    for t in range(rounds):
-        x, theta = B.l2gd_round(x, theta, train_data, loss_fn=loss_fn,
-                                lr=lr, lam_c=lam_c, lam_g=lam_g,
-                                k_team=k_team, l_local=l_local, m=m, n=n)
-        if t % eval_every == 0 or t == rounds - 1:
-            res.pm_acc.append(_eval_stackedq(theta, val_data, metric_fn))
-            res.gm_acc.append(_eval_global(x, val_data, metric_fn))
-    res.seconds = time.time() - t0
-    return res
+             eval_every: int = 1, scan: bool = True) -> FLResult:
+    return run_experiment(
+        B.L2GD(loss_fn, lr=lr, lam_c=lam_c, lam_g=lam_g, k_team=k_team,
+               l_local=l_local),
+        params0, train_data, val_data, metric_fn=metric_fn, rounds=rounds,
+        m=m, n=n, eval_every=eval_every, scan=scan)
 
 
 ALGORITHMS = {

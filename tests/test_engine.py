@@ -1,0 +1,261 @@
+"""Scanned engine vs the legacy per-round loop: same seed -> same
+trajectories, same final state, same byte ledgers — for PerMFL (with and
+without comm) and the baselines — plus the unified-API/shim plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig, CommLedger
+from repro.core import PerMFL, baselines as B
+from repro.core.permfl import (PerMFLHParams, eval_stacked, init_state,
+                               permfl_round)
+from repro.core.participation import sample_masks
+from repro.train import fl_trainer as FT
+from repro.train.engine import run_experiment
+
+M, N, D = 3, 4, 5
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum((params - batch["c"]) ** 2)
+
+
+def neg_loss(params, batch):
+    return -quad_loss(params, batch)
+
+
+@pytest.fixture(scope="module")
+def quad_data():
+    rng = np.random.default_rng(0)
+    return {"c": jnp.asarray(rng.normal(size=(M, N, D)).astype(np.float32))}
+
+
+HP = PerMFLHParams(alpha=0.05, eta=0.04, beta=0.3, lam=0.8, gamma=2.0,
+                   k_team=3, l_local=4)
+
+
+def legacy_permfl_loop(data, rounds, *, team_frac=1.0, device_frac=1.0,
+                       seed=0, comm=None):
+    """The pre-engine fl_trainer loop, verbatim semantics: host-side mask
+    sampling, one permfl_round dispatch per round, eager eval, ungated-
+    but-sampled ledger counts (sample_masks already gates devices)."""
+    st = init_state(jnp.zeros(D), M, N, comm=comm)
+    key = jax.random.PRNGKey(seed)
+    ledger = None if comm is None else CommLedger.for_params(
+        comm, jnp.zeros(D))
+    pm, tm_acc, gm = [], [], []
+    for _ in range(rounds):
+        if team_frac < 1.0 or device_frac < 1.0:
+            key, sub = jax.random.split(key)
+            tm, dm = sample_masks(sub, M, N, team_frac=team_frac,
+                                  device_frac=device_frac)
+        else:
+            tm = dm = None
+        st = permfl_round(st, data, HP, quad_loss, m_teams=M, n_devices=N,
+                          team_mask=tm, device_mask=dm, comm=comm)
+        if ledger is not None:
+            ledger.log_round(
+                k_team=HP.k_team,
+                n_teams=M if tm is None else int(tm.sum()),
+                n_devices=M * N if dm is None else int(dm.sum()))
+        pm.append(float(eval_stacked(st, data, neg_loss, which="pm").mean()))
+        tm_acc.append(float(
+            eval_stacked(st, data, neg_loss, which="tm").mean()))
+        gm.append(float(eval_stacked(st, data, neg_loss, which="gm").mean()))
+    return st, dict(pm=pm, tm=tm_acc, gm=gm), ledger
+
+
+@pytest.mark.parametrize("team_frac,device_frac",
+                         [(1.0, 1.0), (0.5, 0.75)])
+def test_scanned_permfl_matches_legacy_loop(quad_data, team_frac,
+                                            device_frac):
+    st_ref, traj, _ = legacy_permfl_loop(quad_data, 6, team_frac=team_frac,
+                                         device_frac=device_frac, seed=3)
+    res = run_experiment(PerMFL(quad_loss, HP), jnp.zeros(D), quad_data,
+                         quad_data, metric_fn=neg_loss, rounds=6, m=M, n=N,
+                         team_frac=team_frac, device_frac=device_frac,
+                         seed=3)
+    np.testing.assert_allclose(res.pm_acc, traj["pm"], atol=1e-5)
+    np.testing.assert_allclose(res.tm_acc, traj["tm"], atol=1e-5)
+    np.testing.assert_allclose(res.gm_acc, traj["gm"], atol=1e-5)
+    for a, b in zip(jax.tree.leaves((res.state.x, res.state.w,
+                                     res.state.theta)),
+                    jax.tree.leaves((st_ref.x, st_ref.w, st_ref.theta))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_scanned_permfl_comm_matches_legacy_ledger(quad_data):
+    cfg = CommConfig("topk", k_frac=0.4)
+    st_ref, traj, led_ref = legacy_permfl_loop(
+        quad_data, 5, team_frac=0.5, seed=11, comm=cfg)
+    res = run_experiment(PerMFL(quad_loss, HP, comm=cfg), jnp.zeros(D),
+                         quad_data, quad_data, metric_fn=neg_loss, rounds=5,
+                         m=M, n=N, team_frac=0.5, seed=11)
+    np.testing.assert_allclose(res.pm_acc, traj["pm"], atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.state.x),
+                               np.asarray(st_ref.x), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(res.state.comm.ef_team),
+                               np.asarray(st_ref.comm.ef_team), atol=1e-6)
+    # byte totals identical between paths (sample_masks pre-gates devices,
+    # so the legacy counts happen to be correct here)
+    assert res.comm.total_bytes() == led_ref.total_bytes()
+    assert len(res.comm.rounds) == len(led_ref.rounds) == 5
+
+
+@pytest.mark.parametrize("runner,kw,fields", [
+    (FT.run_fedavg, dict(lr=0.1, local_steps=3), ("gm_acc",)),
+    (FT.run_ditto, dict(lr=0.05, lam=0.5, local_steps=3),
+     ("pm_acc", "gm_acc")),
+    (FT.run_l2gd, dict(lr=0.05, lam_c=0.5, lam_g=0.5, k_team=2, l_local=2),
+     ("pm_acc", "gm_acc")),
+])
+def test_scanned_baselines_match_dispatch(quad_data, runner, kw, fields):
+    common = dict(loss_fn=quad_loss, metric_fn=neg_loss, rounds=5, m=M, n=N)
+    scanned = runner(jnp.zeros(D), quad_data, quad_data, **common, **kw)
+    dispatch = runner(jnp.zeros(D), quad_data, quad_data, scan=False,
+                      **common, **kw)
+    for f in fields:
+        np.testing.assert_allclose(getattr(scanned, f), getattr(dispatch, f),
+                                   atol=1e-5)
+        assert len(getattr(scanned, f)) == 5
+    for a, b in zip(jax.tree.leaves(scanned.state),
+                    jax.tree.leaves(dispatch.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_all_algorithms_set_final_state(quad_data):
+    """Every ALGORITHMS entry runs through the engine and exposes its
+    final state (historically only permfl/fedavg did)."""
+    kws = {
+        "permfl": dict(hp=HP),
+        "fedavg": dict(lr=0.1, local_steps=2),
+        "perfedavg": dict(lr=0.05, inner_lr=0.05, local_steps=2),
+        "pfedme": dict(lr=0.5, inner_lr=0.05, lam=2.0, inner_steps=2,
+                       local_rounds=2),
+        "ditto": dict(lr=0.05, lam=0.5, local_steps=2),
+        "hsgd": dict(lr=0.05, k_team=2, l_local=2),
+        "l2gd": dict(lr=0.05, lam_c=0.5, lam_g=0.5, k_team=2, l_local=2),
+    }
+    assert set(kws) == set(FT.ALGORITHMS)
+    for name, runner in FT.ALGORITHMS.items():
+        res = runner(jnp.zeros(D), quad_data, quad_data, loss_fn=quad_loss,
+                     metric_fn=neg_loss, rounds=2, m=M, n=N, **kws[name])
+        assert res.state is not None, name
+        assert len(res.participation) == 2, name
+        assert all(np.isfinite(np.asarray(l)).all()
+                   for l in jax.tree.leaves(res.state)), name
+
+
+def test_eval_every_chunking_and_remainder(quad_data):
+    res = run_experiment(PerMFL(quad_loss, HP), jnp.zeros(D), quad_data,
+                         quad_data, metric_fn=neg_loss, rounds=7, m=M, n=N,
+                         eval_every=3)
+    # evals after rounds 3, 6 and the remainder round 7
+    assert len(res.pm_acc) == 3
+    assert len(res.participation) == 7
+    full = run_experiment(PerMFL(quad_loss, HP), jnp.zeros(D), quad_data,
+                          quad_data, metric_fn=neg_loss, rounds=7, m=M, n=N)
+    np.testing.assert_allclose(res.pm_acc[-1], full.pm_acc[-1], atol=1e-5)
+
+
+def test_ledger_counts_gated_by_team_mask(quad_data):
+    """Devices marked participating inside a masked-out team must not be
+    billed: the engine's counts come from device_mask * team_mask."""
+    cfg = CommConfig("topk", k_frac=0.4)
+    # with team_frac=0.5 one of M=3 teams drops per round (sample keeps
+    # max(1, round(1.5)) = 2): realized counts must be 2 teams, 2*N devices
+    res = run_experiment(PerMFL(quad_loss, HP, comm=cfg), jnp.zeros(D),
+                         quad_data, quad_data, metric_fn=neg_loss, rounds=3,
+                         m=M, n=N, team_frac=0.5, seed=1)
+    for n_teams, n_devices in res.participation:
+        assert n_teams == 2
+        assert n_devices == 2 * N
+    r = res.comm.rounds[0]
+    from repro.comm import model_bytes
+    assert r.wan_up == 2 * model_bytes(res.comm.leaf_sizes, cfg)
+    assert r.lan_up == HP.k_team * 2 * N * model_bytes(res.comm.leaf_sizes,
+                                                       cfg)
+
+
+def test_log_round_masks_gates_inconsistent_masks():
+    cfg = CommConfig("sign")
+    led = CommLedger.for_params(cfg, jnp.zeros(8))
+    led.log_round_masks(k_team=2,
+                        team_mask=np.array([1.0, 0.0]),
+                        device_mask=np.ones((2, 3)))  # team 1 ungated
+    ref = CommLedger.for_params(cfg, jnp.zeros(8))
+    ref.log_round(k_team=2, n_teams=1, n_devices=3)
+    assert led.total_bytes() == ref.total_bytes()
+
+
+def test_mask_none_vs_array_shares_one_trace(quad_data):
+    """Normalizing masks at the permfl_round boundary means flipping
+    between None and arrays across rounds never re-traces."""
+    from repro.core.permfl import _permfl_round
+    d2 = 7  # unique param dim -> first call below is a fresh trace
+    data = {"c": jnp.zeros((M, N, d2))}
+    n_before = _permfl_round._cache_size()
+    st = init_state(jnp.ones(d2), M, N)
+    st = permfl_round(st, data, HP, quad_loss, m_teams=M, n_devices=N)
+    assert _permfl_round._cache_size() == n_before + 1
+    tm = jnp.array([1.0, 0.0, 1.0])
+    dm = jnp.ones((M, N), jnp.float32) * tm[:, None]
+    st = permfl_round(st, data, HP, quad_loss, m_teams=M, n_devices=N,
+                      team_mask=tm, device_mask=dm)
+    assert _permfl_round._cache_size() == n_before + 1
+
+
+def test_algorithm_config_is_immutable_and_cache_safe(quad_data):
+    """The engine caches compiled programs per algo instance, so instances
+    must be frozen: reconfiguring means constructing a new instance (a
+    mutated one would silently reuse the stale compiled program)."""
+    import dataclasses
+
+    algo = PerMFL(quad_loss, HP)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        algo.hp = PerMFLHParams()
+    # equal config -> equal instances -> one shared compiled program
+    assert PerMFL(quad_loss, HP) == PerMFL(quad_loss, HP)
+    # different hp reaches the engine as a different program
+    hp2 = PerMFLHParams(alpha=0.2, eta=0.1, beta=0.5, lam=0.3, gamma=1.0,
+                        k_team=2, l_local=2)
+    kw = dict(metric_fn=neg_loss, rounds=2, m=M, n=N)
+    r1 = run_experiment(PerMFL(quad_loss, HP), jnp.zeros(D), quad_data,
+                        quad_data, **kw)
+    r2 = run_experiment(PerMFL(quad_loss, hp2), jnp.zeros(D), quad_data,
+                        quad_data, **kw)
+    assert r1.pm_acc != r2.pm_acc
+
+
+def test_partial_participation_rejected_for_mask_blind_baselines(quad_data):
+    """Baselines ignore the masks, so sampling them would make
+    FLResult.participation report an experiment that never ran."""
+    with pytest.raises(ValueError, match="participation"):
+        run_experiment(B.FedAvg(quad_loss, lr=0.1, local_steps=2),
+                       jnp.zeros(D), quad_data, quad_data,
+                       metric_fn=neg_loss, rounds=2, m=M, n=N,
+                       team_frac=0.5)
+
+
+def test_engine_learns_on_fed_data(small_fed_data):
+    """End-to-end through the unified API on real federated data: two
+    algorithms, PM/GM structure preserved."""
+    from repro.configs.paper_mclr import CONFIG as MCLR
+    from repro.models import paper_models as PM
+
+    fd = small_fed_data
+    params = PM.init_params(jax.random.PRNGKey(0), MCLR)
+    loss = lambda p, b: PM.loss_fn(p, MCLR, b)
+    met = lambda p, b: PM.accuracy(p, MCLR, b)
+    tr = {"x": jnp.asarray(fd.train_x), "y": jnp.asarray(fd.train_y)}
+    va = {"x": jnp.asarray(fd.val_x), "y": jnp.asarray(fd.val_y)}
+    kw = dict(metric_fn=met, rounds=6, m=fd.m_teams, n=fd.n_devices)
+
+    r_p = run_experiment(PerMFL(loss, PerMFLHParams(k_team=3, l_local=5)),
+                         params, tr, va, **kw)
+    r_f = run_experiment(B.FedAvg(loss, lr=0.05, local_steps=15),
+                         params, tr, va, **kw)
+    assert r_p.pm_acc[-1] > 0.85
+    assert r_p.pm_acc[-1] >= r_f.gm_acc[-1] - 0.02
+    assert r_p.train_loss[-1] < r_p.train_loss[0]
