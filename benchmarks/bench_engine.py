@@ -15,16 +15,23 @@ rounds/sec:
               program; rounds, in-graph sampling, and eval all live inside
               a chunked lax.scan
 
+plus a `sweep` mode comparing a multi-config hyperparameter grid run as a
+sequential loop of scanned experiments vs ONE vmapped program
+(train.sweep.run_sweep), reporting configs/sec for both.
+
 Reproduction target: the scanned path beats legacy per-round dispatch in
 rounds/sec (the paper's multi-algorithm sweeps were dispatch-bound, not
-hardware-bound, under the legacy model).
+hardware-bound, under the legacy model), and the vmapped sweep matches
+the sequential loop's trajectories bit-for-bit in a single dispatch.
 
     PYTHONPATH=src python -m benchmarks.bench_engine            # timed
     PYTHONPATH=src python -m benchmarks.bench_engine --smoke    # CI: 2
-        rounds through the scan path, no timing checks
+        rounds through the scan path + a 2-config sweep in one dispatch,
+        no timing checks
 """
 from __future__ import annotations
 
+import dataclasses
 import sys
 import time
 
@@ -35,6 +42,7 @@ from repro.core import PerMFL
 from repro.core.participation import sample_masks
 from repro.core.permfl import eval_stacked, init_state, permfl_round
 from repro.train.engine import run_experiment
+from repro.train.sweep import run_sweep
 
 from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
                                   make_fed_data, model_for, to_jax)
@@ -74,16 +82,27 @@ def _run_legacy(algo, p0, tr, va, met, m, n, rounds):
     return pm
 
 
+SWEEP_GRID = [dict(lam=0.3), dict(lam=0.5), dict(lam=0.8), dict(lam=1.2)]
+
+
 def smoke() -> list:
-    """2 rounds through the scanned path — the CI guard that keeps the
-    scan/jit path compiling (run with FORCE_PALLAS_INTERPRET=1 so the
-    Pallas prox kernel is exercised too)."""
+    """CI guard: 2 rounds through the scanned path, then a 2-config x
+    2-round sweep through the vmapped path — asserting both configs
+    executed in a single dispatch (run with FORCE_PALLAS_INTERPRET=1 so
+    the Pallas prox kernel is exercised too)."""
     algo, p0, tr, va, met, m, n = _setup()
     res = run_experiment(algo, p0, tr, va, metric_fn=met, rounds=2,
                          m=m, n=n, scan=True)
     assert len(res.pm_acc) == 2 and res.state is not None
     print(f"# bench_engine smoke: 2 scanned rounds OK, "
           f"pm={res.pm_acc[-1]:.3f}")
+
+    sw = run_sweep(algo, SWEEP_GRID[:2], (0,), p0, tr, va, metric_fn=met,
+                   rounds=2, m=m, n=n)
+    assert len(sw) == 2 and sw.dispatches == 1
+    assert all(np.isfinite(r.pm_acc).all() for r in sw)
+    print(f"# bench_engine smoke: {len(sw)} sweep configs in "
+          f"{sw.dispatches} dispatch OK, pm={[f'{r.pm_acc[-1]:.3f}' for r in sw]}")
     return []
 
 
@@ -134,7 +153,48 @@ def main(quick: bool = True, csv=print) -> list:
             f"({rps['scan'] / rps['legacy']:.2f}x)")
     if drift > 1e-4 or not np.isfinite(drift):
         failures.append(f"bench_engine: scan/legacy drift {drift:.2e}")
+    failures += _bench_sweep(algo, p0, tr, va, met, m, n,
+                             rounds=max(4, rounds // 4), csv=csv)
     return failures
+
+
+def _bench_sweep(algo, p0, tr, va, met, m, n, *, rounds, csv) -> list:
+    """Sweep mode: the SWEEP_GRID lambda grid as a sequential loop of
+    scanned experiments vs one vmapped run_sweep program, configs/sec."""
+    kw = dict(metric_fn=met, rounds=rounds, m=m, n=n)
+    n_cfg = len(SWEEP_GRID)
+
+    def sequential():
+        return [run_experiment(
+            dataclasses.replace(algo,
+                                hp=dataclasses.replace(algo.hp, **g)),
+            p0, tr, va, **kw).pm_acc for g in SWEEP_GRID]
+
+    def swept():
+        sw = run_sweep(algo, SWEEP_GRID, (0,), p0, tr, va, **kw)
+        assert sw.dispatches == 1
+        return [r.pm_acc for r in sw]
+
+    cps, pm = {}, {}
+    for name, fn in (("seq", sequential), ("sweep", swept)):
+        fn()                          # warm-up: populate the jit caches
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.time()
+            pm[name] = fn()
+            best = min(best, time.time() - t0)
+        cps[name] = n_cfg / best
+        csv(f"bench_engine,mnist,mclr,{name},configs_per_sec,,"
+            f"{cps[name]:.2f}")
+    csv(f"bench_engine,mnist,mclr,speedup,sweep_over_seq,,"
+        f"{cps['sweep'] / cps['seq']:.2f}")
+
+    drift = max(abs(a - b) for ps, pq in zip(pm["sweep"], pm["seq"])
+                for a, b in zip(ps, pq))
+    csv(f"bench_engine,mnist,mclr,max_sweep_drift,,,{drift:.2e}")
+    if drift > 1e-4 or not np.isfinite(drift):
+        return [f"bench_engine: sweep/sequential drift {drift:.2e}"]
+    return []
 
 
 if __name__ == "__main__":

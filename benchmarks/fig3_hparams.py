@@ -2,13 +2,17 @@
 
 Reproduction target: increasing each of beta/gamma/lambda (others fixed,
 within the Theorem-1 admissible ranges) speeds up PerMFL(PM) convergence —
-measured as personal-model accuracy after a fixed small round budget."""
+measured as personal-model accuracy after a fixed small round budget.
+
+All nine grid points run as ONE compiled program via run_sweep (the
+sequential per-value loop paid 9 dispatch+run cycles); per-value results
+are sliced out of the single FLSweepResult. Equivalence with the old
+per-value loop is pinned in tests/test_engine.py.
+"""
 from __future__ import annotations
 
-import dataclasses
-
 from repro.core import PerMFL
-from repro.train.engine import run_experiment
+from repro.train.sweep import run_sweep
 
 from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
                                   make_fed_data, model_for, to_jax)
@@ -23,6 +27,16 @@ SWEEPS = {
 }
 
 
+def sweep_grid() -> list:
+    """The 9 Fig-3 grid points as run_sweep config dicts (grid order is
+    SWEEPS order: 3 beta points, 3 gamma points, 3 lambda points)."""
+    grid = []
+    for hname, (values, fixed) in SWEEPS.items():
+        for v in values:
+            grid.append(dict(alpha=0.01, eta=0.03, **fixed, **{hname: v}))
+    return grid
+
+
 def run(dataset="mnist", convex=True, rounds=6, csv=print):
     cfg = model_for(dataset, convex)
     fd = make_fed_data(dataset, seed=2)
@@ -32,14 +46,18 @@ def run(dataset="mnist", convex=True, rounds=6, csv=print):
     m, n = fd.m_teams, fd.n_devices
     failures = []
 
+    sw = run_sweep(PerMFL(loss, HP_DEFAULT), sweep_grid(), (0,), p0, tr, va,
+                   metric_fn=met, rounds=rounds, m=m, n=n)
+    csv(f"# fig3: {len(sw)} grid points in {sw.dispatches} dispatch(es), "
+        f"{sw.seconds:.1f}s total")
+
+    i = 0
     for hname, (values, fixed) in SWEEPS.items():
         final_pm = []
         final_gm = []
         for v in values:
-            hp = dataclasses.replace(HP_DEFAULT, **fixed, **{hname: v},
-                                     alpha=0.01, eta=0.03)
-            r = run_experiment(PerMFL(loss, hp), p0, tr, va, metric_fn=met,
-                               rounds=rounds, m=m, n=n)
+            r = sw[i]
+            i += 1
             final_pm.append(r.pm_acc[-1])
             final_gm.append(r.gm_acc[-1])
             mdl = "mclr" if convex else "cnn"

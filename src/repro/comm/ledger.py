@@ -39,10 +39,13 @@ from repro.comm.compressors import leaf_k
 
 
 def full_leaf_bytes(p: int) -> int:
+    """Wire bytes of one fp32 leaf of p elements."""
     return 4 * p
 
 
 def compressed_leaf_bytes(cfg: CommConfig, p: int) -> int:
+    """Wire bytes of one compressed leaf of p elements (see the wire-format
+    byte model in the module docstring)."""
     name = cfg.compressor
     if name == "identity":
         return 4 * p
@@ -86,6 +89,7 @@ class CommLedger:
 
     @classmethod
     def for_params(cls, cfg: CommConfig, params) -> "CommLedger":
+        """Ledger sized from an (unstacked) model pytree's leaf shapes."""
         sizes = tuple(int(np.prod(l.shape, dtype=np.int64))
                       for l in jax.tree.leaves(params))
         return cls(cfg=cfg, leaf_sizes=sizes)
@@ -113,6 +117,7 @@ class CommLedger:
     # -- aggregates ---------------------------------------------------------
 
     def totals(self) -> RoundBytes:
+        """Sum of all logged rounds, per link-direction."""
         out = RoundBytes()
         for r in self.rounds:
             out.wan_up += r.wan_up
@@ -122,6 +127,7 @@ class CommLedger:
         return out
 
     def total_bytes(self) -> int:
+        """Grand total across links, directions, and rounds."""
         return self.totals().total
 
     def uncompressed_total(self) -> int:
@@ -133,6 +139,8 @@ class CommLedger:
         return t.wan_down + t.lan_down + up_models * full
 
     def summary(self) -> dict:
+        """Flat dict of per-direction totals, compressed-vs-fp32 totals,
+        and the uplink compression ratio — benchmark CSV material."""
         t = self.totals()
         return {"compressor": self.cfg.compressor,
                 "rounds": len(self.rounds),

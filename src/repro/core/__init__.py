@@ -1,3 +1,6 @@
+"""PerMFL core: Algorithm 1 (permfl), the unified FLAlgorithm API
+(algorithm), Table-1 baselines, participation sampling, team formation,
+and Theorem-1/2 rate helpers."""
 from repro.core.permfl import (PerMFLHParams, PerMFLState, eval_stacked,
                                init_state, normalize_masks, permfl_round)
 from repro.core.algorithm import FLAlgorithm, FLAlgorithmBase, PerMFL

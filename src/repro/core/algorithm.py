@@ -29,6 +29,7 @@ mutating one (mutation raises FrozenInstanceError).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
@@ -37,33 +38,79 @@ import jax
 from repro.comm import CommConfig, CommLedger
 from repro.core import permfl as P
 
+__all__ = ["FLAlgorithm", "FLAlgorithmBase", "PerMFL", "eval_global",
+           "eval_personal"]
+
 
 @runtime_checkable
 class FLAlgorithm(Protocol):
-    """Structural type the engine drives; see module docstring."""
+    """Structural type the engine drives; see module docstring.
+
+    Implementations are frozen dataclasses named by ``name``; state is an
+    arbitrary pytree with stacked (M, ...) / (M, N, ...) tiers; masks are
+    (M,) / (M, N) f32 participation arrays.
+    """
     name: str
 
-    def init_state(self, params, m: int, n: int) -> Any: ...
+    def init_state(self, params, m: int, n: int) -> Any:
+        """Build the initial state pytree from one model for M teams x N
+        devices."""
+        ...
 
-    def round(self, state, data, *, team_mask, device_mask) -> Any: ...
+    def round(self, state, data, *, team_mask, device_mask) -> Any:
+        """One traceable global round: state + (M, N, ...) data batches +
+        participation masks -> new state."""
+        ...
 
     def eval(self, state, train_data, val_data,
-             metric_fn: Callable) -> dict: ...
+             metric_fn: Callable) -> dict:
+        """Traced metrics: {'pm'|'tm'|'gm'|'train_loss': scalar}."""
+        ...
 
 
 class FLAlgorithmBase:
     """Defaults: no participation support (round ignores the masks — the
     engine refuses team_frac/device_frac < 1 so FLResult.participation
-    never reports sampling that didn't happen), no comm ledger."""
+    never reports sampling that didn't happen), no comm ledger, and a
+    generic float-field hyperparameter split for sweeps."""
 
     supports_participation = False
 
     def make_ledger(self, params) -> Optional[CommLedger]:
+        """Host-side byte ledger for this config, or None (no comm
+        accounting). params: an (unstacked) model pytree giving the wire
+        leaf sizes."""
         return None
 
     def log_comm_round(self, ledger: CommLedger, *, n_teams: int,
                        n_devices: int) -> None:
+        """Account one round's bytes from realized (team-gated)
+        participation counts. No-op unless the algorithm moves bytes."""
         pass
+
+    def tree_hparams(self):
+        """Split this config into sweepable leaves vs static structure.
+
+        Returns ``(leaves, rebuild)`` where ``leaves`` maps hyperparameter
+        name -> float for every float field of the dataclass (ints — loop
+        bounds — and callables stay static), and ``rebuild(values)``
+        returns an equivalent instance with those fields replaced.
+        ``rebuild`` accepts traced values, so ``run_sweep`` can stack a
+        grid into (S,) arrays and vmap one compiled program over it; the
+        rebuilt instance is only ever used inside that trace, never as a
+        compilation-cache key.
+        """
+        # select by annotation, not value type: a float-annotated field
+        # passed an int literal (lr=1) must still sweep; coercing also
+        # keeps the hparam skeleton cache key value-normalized
+        leaves = {f.name: float(getattr(self, f.name))
+                  for f in dataclasses.fields(self)
+                  if f.type in (float, "float")}
+
+        def rebuild(values):
+            return dataclasses.replace(self, **values)
+
+        return leaves, rebuild
 
 
 # ---------------------------------------------------------------------------
@@ -100,15 +147,33 @@ class PerMFL(FLAlgorithmBase):
     supports_participation = True   # paper modes 1-4 (§3.1)
 
     def init_state(self, params, m: int, n: int) -> P.PerMFLState:
+        """All tiers (x / w / theta) broadcast from one model; EF
+        residuals zeroed when comm is configured."""
         return P.init_state(params, m, n, comm=self.comm)
 
     def round(self, state, data, *, team_mask, device_mask):
+        """One Algorithm-1 global round (K team iters x L device steps)."""
         m, n = device_mask.shape
         return P.permfl_round(state, data, self.hp, self.loss_fn,
                               m_teams=m, n_devices=n, team_mask=team_mask,
                               device_mask=device_mask, comm=self.comm)
 
+    def tree_hparams(self):
+        """Sweepable leaves live one level down, inside ``hp``: the
+        SWEEPABLE_HPARAMS floats (alpha/eta/beta/lam/gamma). k_team and
+        l_local are loop bounds, momentum/weight_decay kernel-branch
+        selectors — all static structure."""
+        leaves = {k: float(getattr(self.hp, k))
+                  for k in P.SWEEPABLE_HPARAMS}
+
+        def rebuild(values):
+            return dataclasses.replace(
+                self, hp=dataclasses.replace(self.hp, **values))
+
+        return leaves, rebuild
+
     def eval(self, state, train_data, val_data, metric_fn):
+        """PM/TM/GM mean accuracy over all devices + mean train loss."""
         return {
             "pm": P.eval_stacked(state, val_data, metric_fn,
                                  which="pm").mean(),
@@ -123,10 +188,14 @@ class PerMFL(FLAlgorithmBase):
     # -- byte accounting (host side) ----------------------------------------
 
     def make_ledger(self, params):
+        """CommLedger sized from the model's leaf shapes; None when no
+        compression is configured."""
         if self.comm is None:
             return None
         return CommLedger.for_params(self.comm, params)
 
     def log_comm_round(self, ledger, *, n_teams, n_devices):
+        """Bill one round: K LAN uplinks per participating device, one WAN
+        uplink per participating team (counts pre-gated by the engine)."""
         ledger.log_round(k_team=self.hp.k_team, n_teams=n_teams,
                          n_devices=n_devices)

@@ -47,7 +47,10 @@ def _sgd_steps(theta, data, grad_fn, lr, steps):
 # FedAvg
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("loss_fn", "lr", "local_steps",
+# NOTE (here and below): float hyperparameters (lr, lam, ...) are traced
+# arguments, not static — one trace serves every value and run_sweep can
+# vmap stacked grids of them. Loop bounds and loss_fn stay static.
+@functools.partial(jax.jit, static_argnames=("loss_fn", "local_steps",
                                               "m", "n"))
 def fedavg_round(x, data, *, loss_fn: Callable, lr: float, local_steps: int,
                  m: int, n: int):
@@ -61,8 +64,8 @@ def fedavg_round(x, data, *, loss_fn: Callable, lr: float, local_steps: int,
 # Per-FedAvg (first-order MAML)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("loss_fn", "lr", "inner_lr",
-                                              "local_steps", "m", "n"))
+@functools.partial(jax.jit, static_argnames=("loss_fn", "local_steps",
+                                              "m", "n"))
 def perfedavg_round(x, data, *, loss_fn: Callable, lr: float,
                     inner_lr: float, local_steps: int, m: int, n: int):
     grad_fn = jax.grad(loss_fn)
@@ -96,8 +99,7 @@ def perfedavg_personalize(x, data, *, loss_fn, inner_lr, m: int, n: int):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=(
-    "loss_fn", "lr", "inner_lr", "lam", "inner_steps", "local_rounds",
-    "m", "n"))
+    "loss_fn", "inner_steps", "local_rounds", "m", "n"))
 def pfedme_round(x, data, *, loss_fn: Callable, lr: float, inner_lr: float,
                  lam: float, inner_steps: int, local_rounds: int,
                  m: int, n: int):
@@ -132,8 +134,8 @@ def pfedme_round(x, data, *, loss_fn: Callable, lr: float, inner_lr: float,
 # Ditto
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("loss_fn", "lr", "lam",
-                                              "local_steps", "m", "n"))
+@functools.partial(jax.jit, static_argnames=("loss_fn", "local_steps",
+                                              "m", "n"))
 def ditto_round(x, v, data, *, loss_fn: Callable, lr: float, lam: float,
                 local_steps: int, m: int, n: int):
     """Returns (new_x, new_v). v: personal models (M, N, ...)."""
@@ -155,7 +157,7 @@ def ditto_round(x, v, data, *, loss_fn: Callable, lr: float, lam: float,
 # h-SGD (hierarchical FedAvg)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("loss_fn", "lr", "k_team",
+@functools.partial(jax.jit, static_argnames=("loss_fn", "k_team",
                                               "l_local", "m", "n"))
 def hsgd_round(x, data, *, loss_fn: Callable, lr: float, k_team: int,
                l_local: int, m: int, n: int):
@@ -178,7 +180,7 @@ def hsgd_round(x, data, *, loss_fn: Callable, lr: float, k_team: int,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=(
-    "loss_fn", "lr", "lam_c", "lam_g", "k_team", "l_local", "m", "n"))
+    "loss_fn", "k_team", "l_local", "m", "n"))
 def l2gd_round(x, theta, data, *, loss_fn: Callable, lr: float,
                lam_c: float, lam_g: float, k_team: int, l_local: int,
                m: int, n: int):

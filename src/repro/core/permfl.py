@@ -28,8 +28,25 @@ from repro.comm import CommConfig, CommState, compress_tree, init_comm_state
 from repro.kernels.prox_update import prox_sgd_tree
 
 
+# The sweepable hyperparameters: the float knobs the paper's Fig 3 / §D.4
+# grids vary. They are the pytree *leaves* of PerMFLHParams, so a jitted
+# round traced once serves every value (and run_sweep can vmap a whole
+# grid); the loop bounds (k_team, l_local) and the structural knobs
+# (momentum, weight_decay — they select kernel branches) stay static.
+SWEEPABLE_HPARAMS = ("alpha", "eta", "beta", "lam", "gamma")
+
+
+@jax.tree_util.register_pytree_node_class
 @dataclass(frozen=True)
 class PerMFLHParams:
+    """Algorithm 1 hyperparameters (paper §3 / Theorem 1 notation).
+
+    A frozen dataclass registered as a pytree: the SWEEPABLE_HPARAMS
+    floats flatten to traced leaves (so compiled rounds are shared across
+    values and grids vmap), while k_team / l_local / momentum /
+    weight_decay ride in the static treedef. Instances built from plain
+    floats stay hashable and usable as cache keys.
+    """
     alpha: float = 0.01      # device LR
     eta: float = 0.03        # team LR
     beta: float = 0.6        # server LR
@@ -39,6 +56,18 @@ class PerMFLHParams:
     l_local: int = 20        # L: device iterations per team iteration
     momentum: float = 0.0    # optional heavy-ball on the device step
     weight_decay: float = 0.0
+
+    def tree_flatten(self):
+        """Sweepable floats as children; loop bounds/branch knobs as aux."""
+        children = tuple(getattr(self, k) for k in SWEEPABLE_HPARAMS)
+        aux = (self.k_team, self.l_local, self.momentum, self.weight_decay)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        k_team, l_local, momentum, weight_decay = aux
+        return cls(*children, k_team=k_team, l_local=l_local,
+                   momentum=momentum, weight_decay=weight_decay)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -143,9 +172,12 @@ def permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
                          device_mask=device_mask, comm=comm)
 
 
+# hp is NOT static: its float leaves trace, so one compiled round serves
+# every hyperparameter value (fig3's 9-point grid used to pay 9 compiles)
+# and run_sweep can vmap a stacked grid through the same program.
 @functools.partial(
     jax.jit,
-    static_argnames=("loss_fn", "hp", "m_teams", "n_devices", "comm"))
+    static_argnames=("loss_fn", "m_teams", "n_devices", "comm"))
 def _permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
                   loss_fn: Callable, *, m_teams: int, n_devices: int,
                   team_mask, device_mask,

@@ -14,12 +14,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128
 
 
-def _prox_kernel(t_ref, g_ref, a_ref, m_ref, t_out, m_out, *, alpha, lam,
+def _prox_kernel(s_ref, t_ref, g_ref, a_ref, m_ref, t_out, m_out, *,
                  momentum, weight_decay):
+    # alpha/lam ride in SMEM as a (1, 2) scalar operand: they are sweepable
+    # hyperparameters (run_sweep vmaps grids of them), so they must be
+    # runtime values, not compile-time constants. momentum/weight_decay
+    # select the kernel branch and stay static.
+    alpha = s_ref[0, 0]
+    lam = s_ref[0, 1]
     t = t_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
     a = a_ref[...].astype(jnp.float32)
@@ -35,11 +42,12 @@ def _prox_kernel(t_ref, g_ref, a_ref, m_ref, t_out, m_out, *, alpha, lam,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "alpha", "lam", "momentum", "weight_decay", "block_rows", "interpret"))
+    "momentum", "weight_decay", "block_rows", "interpret"))
 def prox_sgd_flat(theta, grad, anchor, mom_buf, *, alpha, lam,
                   momentum=0.0, weight_decay=0.0, block_rows: int = 256,
                   interpret: bool = False):
-    """1-D inputs (already flat). Returns (theta_new, mom_new)."""
+    """1-D inputs (already flat). alpha/lam may be traced scalars (they
+    enter the kernel via SMEM). Returns (theta_new, mom_new)."""
     (size,) = theta.shape
     rows = pl.cdiv(size, LANES)
     pad = rows * LANES - size
@@ -48,17 +56,21 @@ def prox_sgd_flat(theta, grad, anchor, mom_buf, *, alpha, lam,
             x = jnp.pad(x, (0, pad))
         return x.reshape(rows, LANES)
     t2, g2, a2, m2 = prep(theta), prep(grad), prep(anchor), prep(mom_buf)
+    scal = jnp.stack([jnp.asarray(alpha, jnp.float32),
+                      jnp.asarray(lam, jnp.float32)]).reshape(1, 2)
     block_rows = min(block_rows, rows)
     grid = (pl.cdiv(rows, block_rows),)
     spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
-    kernel = functools.partial(_prox_kernel, alpha=alpha, lam=lam,
-                               momentum=momentum, weight_decay=weight_decay)
+    sspec = pl.BlockSpec((1, 2), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM)
+    kernel = functools.partial(_prox_kernel, momentum=momentum,
+                               weight_decay=weight_decay)
     t_new, m_new = pl.pallas_call(
         kernel, grid=grid,
-        in_specs=[spec, spec, spec, spec],
+        in_specs=[sspec, spec, spec, spec, spec],
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct(t2.shape, theta.dtype),
                    jax.ShapeDtypeStruct(m2.shape, jnp.float32)],
         interpret=interpret,
-    )(t2, g2, a2, m2)
+    )(scal, t2, g2, a2, m2)
     return t_new.reshape(-1)[:size], m_new.reshape(-1)[:size]

@@ -16,9 +16,23 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod (data, model) or multi-pod (pod, data, model) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_sweep_mesh(n_sweep: int, *, n_data: int = 16, n_model: int = 16):
+    """(sweep, data, model) mesh for batched hyperparameter/seed sweeps.
+
+    The sweep axis takes the pod (DCN) tier: configs are embarrassingly
+    parallel — no cross-config collectives ever cross it — so the slowest
+    links carry zero sweep traffic, and each config's (M, N) state shards
+    over the fast in-pod (data, model) axes exactly as a single
+    experiment would (DESIGN.md §6).
+    """
+    return jax.make_mesh((n_sweep, n_data, n_model),
+                         ("sweep", "data", "model"))
 
 
 def batch_axes(mesh) -> tuple:
@@ -33,8 +47,12 @@ def mesh_batch_size(mesh) -> int:
     return out
 
 
-def make_host_mesh(n_data: int = 1, n_model: int = 1):
-    """Tiny mesh over whatever devices exist (CPU tests)."""
+def make_host_mesh(n_data: int = 1, n_model: int = 1,
+                   n_sweep: int = None):
+    """Tiny mesh over whatever devices exist (CPU tests). Passing
+    n_sweep prepends a sweep axis: (sweep, data, model)."""
+    if n_sweep is not None:
+        return make_sweep_mesh(n_sweep, n_data=n_data, n_model=n_model)
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 

@@ -184,3 +184,26 @@ def fl_pspecs(stacked_tree, *, team_axis="pod", device_axis="data"):
             return P(team_axis, device_axis, *([None] * (leaf.ndim - 2)))
         return P(team_axis)
     return jax.tree.map(spec_for, stacked_tree)
+
+
+def sweep_pspecs(sweep_tree, *, m: int, n: int, sweep_axis="sweep",
+                 team_axis="data", device_axis="model"):
+    """Sweep-stacked FL sharding (DESIGN.md §6): every leaf carries a
+    leading (S,) config axis, sharded over `sweep_axis` (the repurposed
+    pod/DCN tier — configs never talk to each other). Behind it, tiers are
+    recognized by shape: (S, M, N, ...) leaves additionally shard teams
+    over `team_axis` and devices over `device_axis`; (S, M, ...) leaves
+    shard teams; anything else (global models, PRNG keys, round counters)
+    shards only the config axis.
+
+    m, n disambiguate team/device axes from model dims. Route the result
+    through ``to_named(..., shape_tree=...)`` so non-dividing axes drop.
+    """
+    def spec_for(leaf):
+        if leaf.ndim >= 3 and leaf.shape[1] == m and leaf.shape[2] == n:
+            return P(sweep_axis, team_axis, device_axis,
+                     *([None] * (leaf.ndim - 3)))
+        if leaf.ndim >= 2 and leaf.shape[1] == m:
+            return P(sweep_axis, team_axis, *([None] * (leaf.ndim - 2)))
+        return P(sweep_axis, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(spec_for, sweep_tree)

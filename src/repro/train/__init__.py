@@ -1,8 +1,11 @@
-from repro.train import checkpoint, engine, fl_trainer, metrics, optim, trainer
+from repro.train import (checkpoint, engine, fl_trainer, metrics, optim,
+                         sweep, trainer)
 from repro.train.engine import FLResult, run_experiment
 from repro.train.optim import adamw, momentum, sgd
+from repro.train.sweep import FLSweepResult, grid_product, run_sweep
 from repro.train.train_state import TrainState
 
 __all__ = ["checkpoint", "engine", "fl_trainer", "metrics", "optim",
-           "trainer", "FLResult", "run_experiment", "adamw", "momentum",
-           "sgd", "TrainState"]
+           "sweep", "trainer", "FLResult", "run_experiment",
+           "FLSweepResult", "grid_product", "run_sweep", "adamw",
+           "momentum", "sgd", "TrainState"]

@@ -40,9 +40,14 @@ import numpy as np
 from repro.comm import CommLedger
 from repro.core.participation import sample_masks
 
+__all__ = ["FLResult", "run_experiment"]
+
 
 @dataclass
 class FLResult:
+    """One experiment's outcome: metric histories (one entry per eval
+    point), wall time, final algorithm state, optional per-tier byte
+    ledger, and realized (team-gated) per-round participation counts."""
     pm_acc: list = field(default_factory=list)   # per-eval personalized acc
     tm_acc: list = field(default_factory=list)
     gm_acc: list = field(default_factory=list)
@@ -53,16 +58,31 @@ class FLResult:
     participation: list = field(default_factory=list)  # (teams, devices)/rnd
 
     def last(self, which="pm"):
+        """Final-eval value of metric `which` ('pm'|'tm'|'gm'); NaN if the
+        algorithm never reported it."""
         hist = {"pm": self.pm_acc, "tm": self.tm_acc, "gm": self.gm_acc}[which]
         return hist[-1] if hist else float("nan")
 
     def best(self, which="pm"):
+        """Best eval value of metric `which` over the whole run."""
         hist = {"pm": self.pm_acc, "tm": self.tm_acc, "gm": self.gm_acc}[which]
         return max(hist) if hist else float("nan")
 
 
 _METRIC_FIELDS = {"pm": "pm_acc", "tm": "tm_acc", "gm": "gm_acc",
                   "train_loss": "train_loss"}
+
+
+def check_participation(algo, team_frac: float, device_frac: float):
+    """Reject sampled participation for algorithms that ignore the masks —
+    FLResult.participation must never report sampling that didn't gate
+    anything. Shared by run_experiment and train.sweep.run_sweep."""
+    if (team_frac < 1.0 or device_frac < 1.0) and \
+            not getattr(algo, "supports_participation", False):
+        raise ValueError(
+            f"{getattr(algo, 'name', type(algo).__name__)} ignores "
+            "participation masks; team_frac/device_frac < 1 would sample "
+            "masks that never gate anything")
 
 
 def _round_body(algo, m, n, team_frac, device_frac):
@@ -88,16 +108,27 @@ def _round_body(algo, m, n, team_frac, device_frac):
     return body
 
 
-# Compiled programs are cached per (algo instance, metric_fn, dims): a
-# sweep that reruns the same algorithm object pays one compile for its
-# first experiment and dispatches exactly once per experiment after that.
-@functools.lru_cache(maxsize=128)
-def _scan_program(algo, metric_fn, m, n, team_frac, device_frac):
-    body = _round_body(algo, m, n, team_frac, device_frac)
+def hparam_skeleton(algo):
+    """A value-independent cache key + the split for one algorithm: the
+    instance with every sweepable float zeroed (hashable, shared by all
+    hyperparameter values) plus its (leaves, rebuild) pair. Compiled
+    programs key on the skeleton and take the float leaves as traced
+    operands, so rerunning with new values never recompiles."""
+    leaves, rebuild = algo.tree_hparams()
+    return rebuild({k: 0.0 for k in leaves}), leaves
 
-    @functools.partial(jax.jit, static_argnames=("length", "n_steps"))
-    def scanned(state, key, tr, va, *, length, n_steps):
-        """`n_steps` chunks of `length` rounds, eval after each chunk."""
+
+def _chunk_runner(skel, metric_fn, m, n, team_frac, device_frac):
+    """The traceable heart of an experiment — shared verbatim by the
+    per-experiment program below and train.sweep's vmapped grid program:
+    rebuild the algorithm from its hparam leaves, then scan `n_steps`
+    chunks of `length` rounds with a traced eval after each chunk."""
+    _, rebuild = skel.tree_hparams()
+
+    def run_chunks(hleaves, state, key, tr, va, *, length, n_steps):
+        algo = rebuild(hleaves)
+        body = _round_body(algo, m, n, team_frac, device_frac)
+
         def chunk(carry, _):
             state, key = carry
             (state, key), counts = jax.lax.scan(
@@ -107,12 +138,25 @@ def _scan_program(algo, metric_fn, m, n, team_frac, device_frac):
 
         return jax.lax.scan(chunk, (state, key), length=n_steps)
 
-    return scanned
+    return run_chunks
+
+
+# Compiled programs are cached per (hparam skeleton, metric_fn, dims):
+# every experiment with the same static structure — whatever its float
+# hyperparameter values — shares one compile and pays one dispatch.
+@functools.lru_cache(maxsize=128)
+def _scan_program(skel, metric_fn, m, n, team_frac, device_frac):
+    run_chunks = _chunk_runner(skel, metric_fn, m, n, team_frac,
+                               device_frac)
+    return functools.partial(jax.jit, static_argnames=(
+        "length", "n_steps"))(run_chunks)
 
 
 @functools.lru_cache(maxsize=128)
-def _eval_program(algo, metric_fn):
-    return jax.jit(lambda state, tr, va: algo.eval(state, tr, va, metric_fn))
+def _eval_program(skel, metric_fn):
+    _, rebuild = skel.tree_hparams()
+    return jax.jit(lambda hleaves, state, tr, va: rebuild(hleaves).eval(
+        state, tr, va, metric_fn))
 
 
 def run_experiment(algo, params0, train_data, val_data, *,
@@ -128,19 +172,15 @@ def run_experiment(algo, params0, train_data, val_data, *,
     lax.scan); scan=False dispatches round-by-round from the host with
     identical semantics — same mask PRNG chain, same eval points.
     """
-    if (team_frac < 1.0 or device_frac < 1.0) and \
-            not getattr(algo, "supports_participation", False):
-        raise ValueError(
-            f"{getattr(algo, 'name', type(algo).__name__)} ignores "
-            "participation masks; team_frac/device_frac < 1 would sample "
-            "masks that never gate anything")
+    check_participation(algo, team_frac, device_frac)
     state = algo.init_state(params0, m, n)
     key = jax.random.PRNGKey(seed)
     n_chunks, rem = divmod(rounds, eval_every)
 
-    scanned = _scan_program(algo, metric_fn, m, n, team_frac, device_frac)
+    skel, hleaves = hparam_skeleton(algo)
+    scanned = _scan_program(skel, metric_fn, m, n, team_frac, device_frac)
     round_body = _round_body(algo, m, n, team_frac, device_frac)
-    eval_jit = _eval_program(algo, metric_fn)
+    eval_jit = _eval_program(skel, metric_fn)
 
     res = FLResult()
     ledger = algo.make_ledger(params0)
@@ -161,7 +201,7 @@ def run_experiment(algo, params0, train_data, val_data, *,
             if length == 0 or n_steps == 0:
                 continue
             (state, key), (metrics, counts) = scanned(
-                state, key, train_data, val_data, length=length,
+                hleaves, state, key, train_data, val_data, length=length,
                 n_steps=n_steps)
             record(metrics, counts)
     else:
@@ -171,7 +211,7 @@ def run_experiment(algo, params0, train_data, val_data, *,
             res.participation.append(
                 (int(counts[0]), int(counts[1])))
             if (t + 1) % eval_every == 0 or t == rounds - 1:
-                metrics = eval_jit(state, train_data, val_data)
+                metrics = eval_jit(hleaves, state, train_data, val_data)
                 for k, v in metrics.items():
                     getattr(res, _METRIC_FIELDS[k]).append(float(v))
 

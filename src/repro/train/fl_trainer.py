@@ -43,6 +43,7 @@ def run_permfl(params0, train_data, val_data, *, loss_fn, metric_fn,
                seed: int = 0, eval_every: int = 1,
                comm: Optional[CommConfig] = None,
                scan: bool = True) -> FLResult:
+    """PerMFL (Algorithm 1); optional comm compresses uplinks and fills FLResult.comm."""
     return run_experiment(
         PerMFL(loss_fn, hp, comm=comm), params0, train_data, val_data,
         metric_fn=metric_fn, rounds=rounds, m=m, n=n, team_frac=team_frac,
@@ -52,6 +53,7 @@ def run_permfl(params0, train_data, val_data, *, loss_fn, metric_fn,
 def run_fedavg(params0, train_data, val_data, *, loss_fn, metric_fn,
                lr: float, local_steps: int, rounds: int, m: int,
                n: int, eval_every: int = 1, scan: bool = True) -> FLResult:
+    """FedAvg: local SGD + global averaging; metrics report GM only."""
     return run_experiment(
         B.FedAvg(loss_fn, lr=lr, local_steps=local_steps),
         params0, train_data, val_data, metric_fn=metric_fn, rounds=rounds,
@@ -62,6 +64,7 @@ def run_perfedavg(params0, train_data, val_data, *, loss_fn, metric_fn,
                   lr: float, inner_lr: float, local_steps: int, rounds: int,
                   m: int, n: int, eval_every: int = 1,
                   scan: bool = True) -> FLResult:
+    """Per-FedAvg (first-order MAML); PM is one adaptation step from GM."""
     return run_experiment(
         B.PerFedAvg(loss_fn, lr=lr, inner_lr=inner_lr,
                     local_steps=local_steps),
@@ -73,6 +76,7 @@ def run_pfedme(params0, train_data, val_data, *, loss_fn, metric_fn,
                lr: float, inner_lr: float, lam: float, inner_steps: int,
                local_rounds: int, rounds: int, m: int, n: int,
                eval_every: int = 1, scan: bool = True) -> FLResult:
+    """pFedMe: Moreau-envelope personalization, single tier."""
     return run_experiment(
         B.PFedMe(loss_fn, lr=lr, inner_lr=inner_lr, lam=lam,
                  inner_steps=inner_steps, local_rounds=local_rounds),
@@ -84,6 +88,7 @@ def run_ditto(params0, train_data, val_data, *, loss_fn, metric_fn,
               lr: float, lam: float, local_steps: int, rounds: int,
               m: int, n: int, eval_every: int = 1,
               scan: bool = True) -> FLResult:
+    """Ditto: FedAvg GM + per-device prox-regularized PM."""
     return run_experiment(
         B.Ditto(loss_fn, lr=lr, lam=lam, local_steps=local_steps),
         params0, train_data, val_data, metric_fn=metric_fn, rounds=rounds,
@@ -94,6 +99,7 @@ def run_hsgd(params0, train_data, val_data, *, loss_fn, metric_fn,
              lr: float, k_team: int, l_local: int, rounds: int,
              m: int, n: int, eval_every: int = 1,
              scan: bool = True) -> FLResult:
+    """h-SGD: hierarchical local SGD (team avg every L, global every K*L)."""
     return run_experiment(
         B.HSGD(loss_fn, lr=lr, k_team=k_team, l_local=l_local),
         params0, train_data, val_data, metric_fn=metric_fn, rounds=rounds,
@@ -104,6 +110,7 @@ def run_l2gd(params0, train_data, val_data, *, loss_fn, metric_fn,
              lr: float, lam_c: float, lam_g: float, k_team: int,
              l_local: int, rounds: int, m: int, n: int,
              eval_every: int = 1, scan: bool = True) -> FLResult:
+    """L2GD (synchronous variant): global/cluster/personal mixture."""
     return run_experiment(
         B.L2GD(loss_fn, lr=lr, lam_c=lam_c, lam_g=lam_g, k_team=k_team,
                l_local=l_local),

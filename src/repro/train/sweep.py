@@ -1,0 +1,249 @@
+"""Batched sweep engine: a whole hyperparameter/seed grid as ONE program.
+
+The paper's empirical claims are sweeps — Fig 3 varies beta/gamma/lambda,
+Tables 1/2 average over seeds — and the scanned engine (engine.py) still
+dispatched them one configuration at a time: S sequential compiles+runs.
+This module runs all S configurations in a single compiled program:
+
+    jit( vmap over the (S,) config axis:
+           chunked scan over rounds (the engine's round program, verbatim)
+         -> per-config metric histories, final states, realized counts )
+
+What makes this possible is the hyperparameter split (`tree_hparams` on
+every FLAlgorithm): float hyperparameters are *sweepable leaves* that
+stack into (S,) f32 arrays and trace, while loop bounds, loss functions,
+and branch-selecting knobs stay static structure shared by every config.
+Each vmap lane rebuilds its own algorithm instance from its slice of the
+stacked leaves — same round code, S sets of values, one XLA program.
+
+Seeds ride the same axis. A seed contributes (a) the in-graph
+participation-sampling PRNG chain (exactly run_experiment's) and
+(b) optionally the model init, when ``params0`` is a callable
+``seed -> params`` evaluated per config on the host.
+
+On hardware, the (S,) axis shards over the mesh's ``sweep`` axis — the
+repurposed pod/DCN tier, since configs never communicate — while each
+config's (M, N) state shards over (data, model) as before; see
+``launch.mesh.make_sweep_mesh`` / ``sharding.specs.sweep_pspecs`` and
+DESIGN.md §6. Byte accounting stays on the host: realized participation
+counts come back per config and feed one CommLedger each.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.engine import (_METRIC_FIELDS, FLResult, _chunk_runner,
+                                check_participation, hparam_skeleton)
+
+__all__ = ["FLSweepResult", "grid_product", "run_sweep"]
+
+
+def grid_product(**axes) -> list:
+    """Cartesian product of named value lists as a list of config dicts.
+
+    ``grid_product(beta=[0.1, 0.5], lam=[1.0])`` ->
+    ``[{"beta": 0.1, "lam": 1.0}, {"beta": 0.5, "lam": 1.0}]``.
+    """
+    names = list(axes)
+    return [dict(zip(names, vals))
+            for vals in itertools.product(*axes.values())]
+
+
+@dataclass
+class FLSweepResult:
+    """One vmapped sweep: S = len(grid) * len(seeds) configurations.
+
+    configs: resolved per-config dicts — every sweepable hyperparameter
+        plus the config's ``seed`` — in grid-major order (all seeds of
+        grid[0], then grid[1], ...).
+    results: one FLResult per config (trajectories, final state slice,
+        participation, per-config CommLedger). ``FLResult.seconds`` is
+        the sweep wall time amortized over S.
+    state_stacked: final-state pytree with the leading (S,) config axis
+        intact (sharded over the mesh's sweep axis when one was given).
+    dispatches: jitted calls that executed the whole sweep (1, or 2 when
+        rounds % eval_every != 0 leaves a remainder chunk).
+    """
+    configs: list = field(default_factory=list)
+    results: list = field(default_factory=list)
+    state_stacked: Any = None
+    seconds: float = 0.0
+    dispatches: int = 0
+
+    def __len__(self):
+        return len(self.results)
+
+    def __getitem__(self, i) -> FLResult:
+        return self.results[i]
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def best(self, which="pm") -> list:
+        """Per-config best metric (see FLResult.best)."""
+        return [r.best(which) for r in self.results]
+
+    def final(self, which="pm") -> list:
+        """Per-config final-eval metric."""
+        return [r.last(which) for r in self.results]
+
+
+# One compiled program per (hparam skeleton, metric_fn, dims,
+# participation) — every grid/seed stacking with matching static
+# structure reuses it, whatever the hyperparameter values are (they are
+# traced operands), and each vmap lane runs the engine's chunk program
+# (_chunk_runner) verbatim.
+@functools.lru_cache(maxsize=64)
+def _sweep_program(skel, metric_fn, m, n, team_frac, device_frac):
+    run_chunks = _chunk_runner(skel, metric_fn, m, n, team_frac,
+                               device_frac)
+
+    @functools.partial(jax.jit, static_argnames=("length", "n_steps"))
+    def swept(hstack, states, keys, tr, va, *, length, n_steps):
+        """vmap over the (S,) axis of (hstack, states, keys)."""
+        return jax.vmap(lambda h, s, k: run_chunks(
+            h, s, k, tr, va, length=length, n_steps=n_steps))(
+                hstack, states, keys)
+
+    return swept
+
+
+def _stack_trees(trees):
+    """[pytree, ...] -> one pytree with a leading (S,) axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
+              metric_fn: Callable, rounds: int, m: int, n: int,
+              team_frac: float = 1.0, device_frac: float = 1.0,
+              eval_every: int = 1, mesh=None) -> FLSweepResult:
+    """Run ``len(grid) * len(seeds)`` experiments as one compiled program.
+
+    algo: the template FLAlgorithm instance — its float hyperparameters
+        (``algo.tree_hparams()``) are the sweepable names; static config
+        (loop bounds, loss_fn, comm) is shared by every configuration.
+    grid: list of {hparam: value} overrides, one per grid point (dicts may
+        set different keys — unset names keep the template's value), or a
+        {name: [values...]} dict taken as the full cartesian product.
+    seeds: int or sequence of ints; every grid point runs once per seed.
+        The seed drives the in-graph participation-sampling chain exactly
+        as ``run_experiment(seed=...)`` does.
+    params0: initial (unstacked) model pytree shared by all configs, or a
+        callable ``seed -> params`` for per-seed inits (multi-seed tables).
+    mesh: optional Mesh with a ``sweep`` axis — inputs are placed so the
+        (S,) config axis shards across it and XLA runs configurations on
+        disjoint devices (``launch.mesh.make_sweep_mesh``).
+    Remaining arguments match ``run_experiment``.
+
+    Returns an FLSweepResult; equivalence with the sequential loop
+    ``[run_experiment(rebuild(cfg), ...) for cfg in configs]`` is pinned
+    by tests/test_sweep.py.
+    """
+    if isinstance(grid, dict):
+        grid = grid_product(**grid)
+    grid = [dict(g) for g in grid]
+    if not grid:
+        raise ValueError("empty grid: pass [{}] for a seeds-only sweep")
+    if isinstance(seeds, int):
+        seeds = (seeds,)
+    seeds = tuple(int(s) for s in seeds)
+    if not seeds:
+        raise ValueError("empty seeds: pass at least one PRNG seed")
+    check_participation(algo, team_frac, device_frac)
+
+    leaves0, _ = algo.tree_hparams()
+    for g in grid:
+        unknown = set(g) - set(leaves0)
+        if unknown:
+            raise ValueError(
+                f"unknown sweepable hyperparameter(s) {sorted(unknown)}; "
+                f"{type(algo).__name__} sweeps over {sorted(leaves0)}")
+
+    combos = [(g, s) for g in grid for s in seeds]   # grid-major
+    configs = [dict(leaves0, **g, seed=s) for g, s in combos]
+    hstack = {k: jnp.asarray([float(dict(leaves0, **g)[k])
+                              for g, _ in combos], jnp.float32)
+              for k in leaves0}
+    keys = jnp.stack([jax.random.PRNGKey(s) for _, s in combos])
+
+    if callable(params0):
+        p_by_seed = {s: params0(s) for s in seeds}
+        # one init per seed, however many grid points share it
+        st_by_seed = {s: algo.init_state(p_by_seed[s], m, n)
+                      for s in seeds}
+        states = _stack_trees([st_by_seed[s] for _, s in combos])
+        ledger_params = p_by_seed[seeds[0]]
+    else:
+        state0 = algo.init_state(params0, m, n)
+        S = len(combos)
+        states = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), state0)
+        ledger_params = params0
+
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.sharding.specs import sweep_pspecs, to_named
+
+        def place(tree):
+            specs = to_named(sweep_pspecs(tree, m=m, n=n), mesh,
+                             shape_tree=tree)
+            return jax.tree.map(jax.device_put, tree, specs)
+
+        states, hstack = place(states), place(hstack)
+        # keys are (S, 2) uint32: place explicitly — the shape heuristic
+        # would mistake the 2 key words for a team axis when m == 2
+        keys = jax.device_put(keys, NamedSharding(mesh, P("sweep", None)))
+        repl = NamedSharding(mesh, P())
+        train_data = jax.tree.map(lambda x: jax.device_put(x, repl),
+                                  train_data)
+        val_data = jax.tree.map(lambda x: jax.device_put(x, repl),
+                                val_data)
+
+    skel, _ = hparam_skeleton(algo)
+    swept = _sweep_program(skel, metric_fn, m, n, team_frac, device_frac)
+    n_chunks, rem = divmod(rounds, eval_every)
+
+    metric_hist = {}           # field -> list of (S, n_steps) arrays
+    count_hist = []            # list of ((S, n_steps, len), (S, ...)) pairs
+    dispatches = 0
+    t0 = time.time()
+    for length, n_steps in ((eval_every, n_chunks), (rem, 1)):
+        if length == 0 or n_steps == 0:
+            continue
+        (states, keys), (metrics, counts) = swept(
+            hstack, states, keys, train_data, val_data, length=length,
+            n_steps=n_steps)
+        dispatches += 1
+        for k, v in metrics.items():
+            metric_hist.setdefault(k, []).append(np.asarray(v))
+        count_hist.append(tuple(np.asarray(c) for c in counts))
+    seconds = time.time() - t0
+
+    out = FLSweepResult(configs=configs, state_stacked=states,
+                        seconds=seconds, dispatches=dispatches)
+    for i in range(len(combos)):
+        res = FLResult(seconds=seconds / len(combos))
+        for k, segs in metric_hist.items():
+            getattr(res, _METRIC_FIELDS[k]).extend(
+                float(x) for seg in segs for x in seg[i])
+        for tc, dc in count_hist:
+            res.participation.extend(zip(tc[i].reshape(-1).tolist(),
+                                         dc[i].reshape(-1).tolist()))
+        res.state = jax.tree.map(lambda x: x[i], states)
+        ledger = algo.make_ledger(ledger_params)
+        if ledger is not None:
+            for n_teams, n_devices in res.participation:
+                algo.log_comm_round(ledger, n_teams=n_teams,
+                                    n_devices=n_devices)
+            res.comm = ledger
+        out.results.append(res)
+    return out

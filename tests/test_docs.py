@@ -1,0 +1,56 @@
+"""pydocstyle-lite: the public FL API must stay documented.
+
+Every module below must have a module docstring, and every symbol it
+exports via __all__ — plus the public methods those classes define in
+this repo — must carry a nonempty docstring. Pytree-protocol boilerplate
+(tree_flatten / tree_unflatten) is exempt.
+"""
+import importlib
+import inspect
+
+import pytest
+
+PUBLIC_MODULES = (
+    "repro.core",
+    "repro.core.algorithm",
+    "repro.comm",
+    "repro.train.engine",
+    "repro.train.sweep",
+    "repro.train.fl_trainer",
+)
+
+_EXEMPT_METHODS = {"tree_flatten", "tree_unflatten"}
+
+
+def _public_methods(cls):
+    for name, member in vars(cls).items():
+        if name.startswith("_") or name in _EXEMPT_METHODS:
+            continue
+        if inspect.isfunction(member):
+            yield name, member
+        elif isinstance(member, (classmethod, staticmethod)):
+            yield name, member.__func__
+
+
+@pytest.mark.parametrize("modname", PUBLIC_MODULES)
+def test_public_api_is_documented(modname):
+    mod = importlib.import_module(modname)
+    assert (mod.__doc__ or "").strip(), f"{modname}: no module docstring"
+    assert hasattr(mod, "__all__"), f"{modname}: no __all__"
+    missing = []
+    for name in mod.__all__:
+        obj = getattr(mod, name)
+        if inspect.ismodule(obj):
+            if not (obj.__doc__ or "").strip():
+                missing.append(f"{name} (module)")
+            continue
+        if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+            continue        # constants, dicts (e.g. ALGORITHMS)
+        if not (obj.__doc__ or "").strip():
+            missing.append(name)
+        if inspect.isclass(obj):
+            for mname, meth in _public_methods(obj):
+                if not (meth.__doc__ or "").strip():
+                    missing.append(f"{name}.{mname}")
+    assert not missing, (
+        f"{modname}: public symbols without docstrings: {missing}")

@@ -238,6 +238,34 @@ def test_partial_participation_rejected_for_mask_blind_baselines(quad_data):
                        team_frac=0.5)
 
 
+def test_fig3_sweep_matches_old_per_value_loop(quad_data):
+    """fig3_hparams now runs its 9 grid points as one run_sweep program;
+    pin one grid point against the old per-value loop (a fresh
+    dataclasses.replace(HP_DEFAULT, ...) + run_experiment per value)."""
+    import dataclasses
+
+    from benchmarks.fig3_hparams import SWEEPS, sweep_grid
+    from benchmarks.fl_common import HP_DEFAULT
+    from repro.train.sweep import run_sweep
+
+    grid = sweep_grid()
+    assert len(grid) == 9
+    # grid[3] is the first gamma point; rebuild its hp the way the old
+    # loop did and check the sweep lane computes the same trajectory
+    hname, (values, fixed) = "gamma", SWEEPS["gamma"]
+    hp_old = dataclasses.replace(HP_DEFAULT, **fixed, **{hname: values[0]},
+                                 alpha=0.01, eta=0.03)
+    data = {"c": quad_data["c"]}
+    ref = run_experiment(PerMFL(quad_loss, hp_old), jnp.zeros(D), data,
+                         data, metric_fn=neg_loss, rounds=3, m=M, n=N)
+    sw = run_sweep(PerMFL(quad_loss, HP_DEFAULT), grid, (0,), jnp.zeros(D),
+                   data, data, metric_fn=neg_loss, rounds=3, m=M, n=N)
+    np.testing.assert_allclose(sw[3].pm_acc, ref.pm_acc, atol=1e-5)
+    np.testing.assert_allclose(sw[3].gm_acc, ref.gm_acc, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sw[3].state.x),
+                               np.asarray(ref.state.x), atol=1e-6)
+
+
 def test_engine_learns_on_fed_data(small_fed_data):
     """End-to-end through the unified API on real federated data: two
     algorithms, PM/GM structure preserved."""
