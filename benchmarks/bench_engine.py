@@ -38,28 +38,28 @@ import time
 import jax
 import numpy as np
 
-from repro.core import PerMFL
 from repro.core.participation import sample_masks
 from repro.core.permfl import eval_stacked, init_state, permfl_round
 from repro.train.engine import run_experiment
 from repro.train.sweep import run_sweep
 
-from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
-                                  make_fed_data, model_for, to_jax)
+from repro.scenarios import DataSpec, FLScenario, build_scenario
 
 # per-round eval, as every figure/table benchmark runs (their default)
 EVAL_EVERY = 1
 TEAM_FRAC = DEVICE_FRAC = 0.5   # paper participation mode 4 (Fig. 4)
 
+# the benchmark workload as a declarative spec (not registered — this is
+# a system benchmark, not a paper cell)
+BENCH_SCENARIO = FLScenario(
+    name="bench/engine/mnist-mclr", data=DataSpec(dataset="mnist"),
+    team_frac=TEAM_FRAC, device_frac=DEVICE_FRAC, data_seed=9,
+    notes="engine rounds/sec + sweep configs/sec workload")
+
 
 def _setup():
-    cfg = model_for("mnist", True)
-    fd = make_fed_data("mnist", seed=9)
-    tr, va = to_jax(fd)
-    loss, met = fns_for(cfg)
-    p0 = init_model(cfg)
-    return PerMFL(loss, HP_DEFAULT), p0, tr, va, met, fd.m_teams, \
-        fd.n_devices
+    b = build_scenario(BENCH_SCENARIO)
+    return b.algo, b.params0, b.train, b.val, b.metric_fn, b.m, b.n
 
 
 def _run_legacy(algo, p0, tr, va, met, m, n, rounds):

@@ -1,54 +1,39 @@
 """Fig 2: convergence of PerMFL vs multi-tier SOTA (h-SGD, L2GD) — personal
-and global accuracy per global round, strongly convex + non-convex."""
+and global accuracy per global round, strongly convex + non-convex.
+
+Each curve is the registered scenario ``fig2/fmnist/{model}/{algo}``,
+run through the scanned engine (one compiled program per curve); quick
+mode shrinks the CNN cells via ``FLScenario.scaled``.
+"""
 from __future__ import annotations
 
-import dataclasses
+from repro.scenarios import SCENARIOS, run_scenario
 
-from repro.core import PerMFL
-from repro.core.baselines import HSGD, L2GD
-from repro.train.engine import run_experiment
-
-from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
-                                  make_fed_data, model_for, to_jax)
+# quick-mode shrink for the non-convex cells (orderings are scale-stable)
+_QUICK_ALGO = {"permfl": {"k_team": 3, "l_local": 5},
+               "hsgd": {"k_team": 3, "l_local": 5},
+               "l2gd": {"k_team": 3, "l_local": 5}}
 
 
 def run(dataset="fmnist", convex=True, rounds=12, csv=print, quick=True):
+    """One (dataset, model-class) panel; returns the t90 ordering check."""
+    kind = "mclr" if convex else "cnn"
     small = quick and not convex
-    # CNN cells are CPU-heavy: shrink in quick mode (orderings are
-    # scale-stable); --full restores the paper's 4x10 / K=5 / L=10.
-    hp = dataclasses.replace(HP_DEFAULT, k_team=3, l_local=5) if small \
-        else HP_DEFAULT
-    cfg = model_for(dataset, convex)
-    fd = make_fed_data(dataset, seed=1, m=2 if small else 4,
-                       n=5 if small else 10,
-                       samples_per_device=24 if small else 48)
-    tr, va = to_jax(fd)
-    loss, met = fns_for(cfg)
-    p0 = init_model(cfg)
-    m, n = fd.m_teams, fd.n_devices
-    lr = 0.03 if convex else 0.01
-
-    # all three algorithms run through the same scanned engine: one
-    # compiled program per curve (core.algorithm + train.engine)
-    algos = {
-        "permfl": PerMFL(loss, hp),
-        "hsgd": HSGD(loss, lr=lr, k_team=hp.k_team, l_local=hp.l_local),
-        "l2gd": L2GD(loss, lr=lr, lam_c=0.5, lam_g=0.5, k_team=hp.k_team,
-                     l_local=hp.l_local),
-    }
     curves = {}
-    for name, algo in algos.items():
-        r = run_experiment(algo, p0, tr, va, metric_fn=met,
-                           rounds=rounds, m=m, n=n)
+    for algo in ("permfl", "hsgd", "l2gd"):
+        s = SCENARIOS[f"fig2/{dataset}/{kind}/{algo}"]
+        if small:
+            s = s.scaled(m_teams=2, n_devices=5, samples_per_device=24,
+                         algo_overrides=_QUICK_ALGO[algo])
+        r = run_scenario(s, rounds=rounds)
         if r.pm_acc:
-            curves[f"{name}_pm"] = r.pm_acc
+            curves[f"{algo}_pm"] = r.pm_acc
         if r.gm_acc:
-            curves[f"{name}_gm"] = r.gm_acc
+            curves[f"{algo}_gm"] = r.gm_acc
 
-    mdl = "mclr" if convex else "cnn"
     for name, hist in curves.items():
         for t, acc in enumerate(hist):
-            csv(f"fig2,{dataset},{mdl},{name},{t},{acc:.4f}")
+            csv(f"fig2,{dataset},{kind},{name},{t},{acc:.4f}")
 
     # reproduction target ("the convergence of PerMFL(PM) is equivalent to
     # DemLearn and faster than h-SGD and AL2GD", §4.1.2): PerMFL(PM)
@@ -59,7 +44,7 @@ def run(dataset="fmnist", convex=True, rounds=12, csv=print, quick=True):
         return next(i for i, a in enumerate(hist) if a >= target)
 
     ok = t90(curves["permfl_pm"]) <= t90(curves["l2gd_pm"]) + 1
-    csv(f"# fig2 {dataset}/{mdl}: permfl t90={t90(curves['permfl_pm'])} "
+    csv(f"# fig2 {dataset}/{kind}: permfl t90={t90(curves['permfl_pm'])} "
         f"l2gd t90={t90(curves['l2gd_pm'])} equivalent_or_faster={ok}")
     return ok
 

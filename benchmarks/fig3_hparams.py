@@ -4,18 +4,15 @@ Reproduction target: increasing each of beta/gamma/lambda (others fixed,
 within the Theorem-1 admissible ranges) speeds up PerMFL(PM) convergence —
 measured as personal-model accuracy after a fixed small round budget.
 
-All nine grid points run as ONE compiled program via run_sweep (the
-sequential per-value loop paid 9 dispatch+run cycles); per-value results
-are sliced out of the single FLSweepResult. Equivalence with the old
-per-value loop is pinned in tests/test_engine.py.
+All nine grid points run as ONE compiled program via sweep_scenario on
+the registered ``fig3/mnist/mclr`` scenario (the sequential per-value
+loop paid 9 dispatch+run cycles); per-value results are sliced out of
+the single FLSweepResult. Equivalence with the old per-value loop is
+pinned in tests/test_engine.py.
 """
 from __future__ import annotations
 
-from repro.core import PerMFL
-from repro.train.sweep import run_sweep
-
-from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
-                                  make_fed_data, model_for, to_jax)
+from repro.scenarios import SCENARIOS, sweep_scenario
 
 SWEEPS = {
     # paper supplementary: beta in Fig 5-10 (gamma=3.0, lam=0.5)
@@ -28,7 +25,7 @@ SWEEPS = {
 
 
 def sweep_grid() -> list:
-    """The 9 Fig-3 grid points as run_sweep config dicts (grid order is
+    """The 9 Fig-3 grid points as sweep config dicts (grid order is
     SWEEPS order: 3 beta points, 3 gamma points, 3 lambda points)."""
     grid = []
     for hname, (values, fixed) in SWEEPS.items():
@@ -37,17 +34,11 @@ def sweep_grid() -> list:
     return grid
 
 
-def run(dataset="mnist", convex=True, rounds=6, csv=print):
-    cfg = model_for(dataset, convex)
-    fd = make_fed_data(dataset, seed=2)
-    tr, va = to_jax(fd)
-    loss, met = fns_for(cfg)
-    p0 = init_model(cfg)
-    m, n = fd.m_teams, fd.n_devices
+def run(dataset="mnist", rounds=6, csv=print):
+    """The nine-point sweep + monotone-speedup checks."""
     failures = []
-
-    sw = run_sweep(PerMFL(loss, HP_DEFAULT), sweep_grid(), (0,), p0, tr, va,
-                   metric_fn=met, rounds=rounds, m=m, n=n)
+    sw = sweep_scenario(SCENARIOS[f"fig3/{dataset}/mclr"], sweep_grid(),
+                        (0,), rounds=rounds)
     csv(f"# fig3: {len(sw)} grid points in {sw.dispatches} dispatch(es), "
         f"{sw.seconds:.1f}s total")
 
@@ -60,9 +51,8 @@ def run(dataset="mnist", convex=True, rounds=6, csv=print):
             i += 1
             final_pm.append(r.pm_acc[-1])
             final_gm.append(r.gm_acc[-1])
-            mdl = "mclr" if convex else "cnn"
-            csv(f"fig3,{dataset},{mdl},{hname}={v},pm,{r.pm_acc[-1]:.4f}")
-            csv(f"fig3,{dataset},{mdl},{hname}={v},gm,{r.gm_acc[-1]:.4f}")
+            csv(f"fig3,{dataset},mclr,{hname}={v},pm,{r.pm_acc[-1]:.4f}")
+            csv(f"fig3,{dataset},mclr,{hname}={v},gm,{r.gm_acc[-1]:.4f}")
         # monotone speedup (allow tiny noise)
         metric = final_gm if hname in ("beta", "gamma") else final_pm
         if not all(b >= a - 0.03 for a, b in zip(metric, metric[1:])):

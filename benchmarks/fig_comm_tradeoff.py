@@ -2,46 +2,31 @@
 
 Sweeps compressor x level on the paper's MNIST/MCLR setting and reports,
 per config, the final personalized accuracy against total bytes moved
-(per tier, from the CommLedger). Reproduction targets: (a) identity
-compression is accuracy-neutral; (b) top-10% with error feedback stays
-within 2 points of uncompressed PM accuracy while cutting uplink bytes
->4x; (c) every lossy compressor moves fewer uplink bytes than identity.
+(per tier, from the CommLedger). Each configuration is the registered
+scenario ``comm/mnist/mclr/{name}`` (the CommConfig lives in the spec).
+Reproduction targets: (a) identity compression is accuracy-neutral;
+(b) top-10% with error feedback stays within 2 points of uncompressed PM
+accuracy while cutting uplink bytes >4x; (c) every lossy compressor
+moves fewer uplink bytes than identity.
 """
 from __future__ import annotations
 
-from repro.comm import CommConfig
-from repro.train import fl_trainer as FT
+from repro.scenarios import SCENARIOS, run_scenario
 
-from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
-                                  make_fed_data, model_for, to_jax)
-
-SWEEP = [
-    ("identity", CommConfig("identity")),
-    ("topk_10", CommConfig("topk", k_frac=0.1)),
-    ("topk_25", CommConfig("topk", k_frac=0.25)),
-    ("randk_10", CommConfig("randk", k_frac=0.1)),
-    ("int8", CommConfig("int8")),
-    ("sign", CommConfig("sign")),
-]
+COMPRESSORS = ("identity", "topk_10", "topk_25", "randk_10", "int8", "sign")
 
 
 def main(quick=True, csv=print):
     rounds = 8 if quick else 40
-    cfg_model = model_for("mnist", True)
-    fd = make_fed_data("mnist", seed=6)
-    tr, va = to_jax(fd)
-    loss, met = fns_for(cfg_model)
-    p0 = init_model(cfg_model)
-    m, n = fd.m_teams, fd.n_devices
 
-    base = FT.run_permfl(p0, tr, va, loss_fn=loss, metric_fn=met,
-                         hp=HP_DEFAULT, rounds=rounds, m=m, n=n)
+    base = run_scenario(SCENARIOS["comm/mnist/mclr/uncompressed"],
+                        rounds=rounds)
     csv(f"fig_comm,mnist,mclr,uncompressed,pm,,{base.pm_acc[-1]:.4f}")
 
     results = {}
-    for name, ccfg in SWEEP:
-        r = FT.run_permfl(p0, tr, va, loss_fn=loss, metric_fn=met,
-                          hp=HP_DEFAULT, rounds=rounds, m=m, n=n, comm=ccfg)
+    for name in COMPRESSORS:
+        r = run_scenario(SCENARIOS[f"comm/mnist/mclr/{name}"],
+                         rounds=rounds)
         results[name] = r
         t = r.comm.totals()
         mb = t.total / 1e6

@@ -1,126 +1,70 @@
-"""Shared setup for the paper-reproduction benchmarks.
+"""Thin compatibility shims over `repro.scenarios` (the real source of
+truth for experiment assembly).
 
-Scale notes: the paper runs 4 teams x 10 devices for 400-800 global rounds
-on an A100. This container is a single CPU, so the default ("quick") scale
-is 4 teams x 10 devices with fewer rounds — enough for every qualitative
-claim (PM > GM orderings, convergence ranking, hyperparameter monotonicity)
-to reproduce; ``--full`` restores paper-scale round counts.
+Historically this module hand-assembled every benchmark experiment
+(datasets, models, paper tables, algorithm factories). All of that now
+lives in the declarative scenario layer — `repro.scenarios.spec` builds
+data/models/algorithms, `repro.scenarios.registry` names every cell, and
+`repro.scenarios.paper_refs` holds the paper's numbers. The shims below
+keep the historical signatures for external callers; the benchmarks
+themselves construct their experiments from `SCENARIOS` /
+`run_scenario` / `sweep_scenario`.
+
+Scale notes: the paper runs 4 teams x 10 devices for 400-800 global
+rounds on an A100. This container is a single CPU, so the default
+("quick") scale keeps the topology but fewer rounds — enough for every
+qualitative claim to reproduce; ``--full`` restores paper-scale rounds.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.paper_cnn import CONFIG as CNN
-from repro.configs.paper_dnn import CONFIG as DNN
-from repro.configs.paper_mclr import CONFIG as MCLR
-from repro.core import PerMFL
-from repro.core import baselines as B
-from repro.core.permfl import PerMFLHParams
-from repro.data.federated import partition_label_skew, partition_tabular
-from repro.data.synthetic import make_dataset, synthetic_tabular
-from repro.models import paper_models as PM
+# paper reference numbers (single source of truth: the scenario layer)
+from repro.scenarios.paper_refs import (PAPER_TABLE1_MCLR,   # noqa: F401
+                                        PAPER_TABLE1_NONCONVEX)
+# experiment-assembly helpers, re-exported for compatibility
+from repro.scenarios.spec import (PAPER_HP, AlgoSpec, DataSpec,  # noqa: F401
+                                  ModelSpec, fns_for, init_model, to_jax)
 
 M_TEAMS, N_DEVICES = 4, 10
 
-# paper §4.1.4 hyperparameters
-HP_DEFAULT = PerMFLHParams(alpha=0.01, eta=0.03, beta=0.6, lam=0.5,
-                           gamma=1.5, k_team=5, l_local=10)
+# paper §4.1.4 hyperparameters (repro.scenarios.spec.PAPER_HP)
+HP_DEFAULT = PAPER_HP
 
 DATASETS = ("mnist", "fmnist", "emnist10", "synthetic")
 
-# Paper Table 1 numbers (validation accuracy %) quoted for side-by-side
-# qualitative comparison in EXPERIMENTS.md. {dataset: {algo: acc}}
-PAPER_TABLE1_MCLR = {
-    "mnist": {"fedavg_gm": 84.87, "perfedavg_pm": 94.81, "pfedme_pm": 88.89,
-              "ditto_gm": 84.81, "hsgd_gm": 87.41, "al2gd_pm": 93.70,
-              "permfl_gm": 86.92, "permfl_pm": 96.87},
-    "synthetic": {"fedavg_gm": 79.80, "perfedavg_pm": 83.91,
-                  "pfedme_pm": 87.61, "ditto_gm": 74.02, "hsgd_gm": 84.29,
-                  "al2gd_pm": 84.75, "permfl_gm": 84.92, "permfl_pm": 87.94},
-    "fmnist": {"fedavg_gm": 84.87, "perfedavg_pm": 94.75, "pfedme_pm": 91.23,
-               "ditto_gm": 82.35, "hsgd_gm": 92.33, "al2gd_pm": 98.52,
-               "permfl_gm": 83.71, "permfl_pm": 96.77},
-    "emnist10": {"fedavg_gm": 91.60, "perfedavg_pm": 97.57,
-                 "pfedme_pm": 91.32, "ditto_gm": 91.03, "hsgd_gm": 81.65,
-                 "al2gd_pm": 98.72, "permfl_gm": 91.68, "permfl_pm": 96.49},
-}
-PAPER_TABLE1_NONCONVEX = {
-    "mnist": {"fedavg_gm": 93.17, "perfedavg_pm": 91.85, "pfedme_pm": 97.40,
-              "ditto_gm": 87.30, "hsgd_gm": 86.59, "al2gd_pm": 91.04,
-              "permfl_gm": 89.39, "permfl_pm": 98.15},
-    "synthetic": {"fedavg_gm": 84.53, "perfedavg_pm": 75.93,
-                  "pfedme_pm": 87.86, "ditto_gm": 81.12, "hsgd_gm": 87.42,
-                  "al2gd_pm": 84.92, "permfl_gm": 87.53, "permfl_pm": 87.89},
-    "fmnist": {"fedavg_gm": 84.14, "perfedavg_pm": 88.69, "pfedme_pm": 96.30,
-               "ditto_gm": 57.80, "hsgd_gm": 79.84, "al2gd_pm": 71.32,
-               "permfl_gm": 79.15, "permfl_pm": 98.67},
-    "emnist10": {"fedavg_gm": 92.73, "perfedavg_pm": 97.37,
-                 "pfedme_pm": 97.18, "ditto_gm": 90.58, "hsgd_gm": 96.03,
-                 "al2gd_pm": 92.94, "permfl_gm": 93.12, "permfl_pm": 98.79},
-}
-
 
 def model_for(dataset: str, convex: bool):
-    if dataset == "synthetic":
-        cfg = MCLR if convex else DNN
-        if convex:
-            cfg = dataclasses.replace(cfg, input_shape=(60,))
-        return cfg
-    return MCLR if convex else CNN
+    """PaperModelConfig for a (dataset, model-class) cell — shim over
+    ModelSpec.config."""
+    kind = "mclr" if convex else ("dnn" if dataset == "synthetic" else "cnn")
+    return ModelSpec(kind).config(DataSpec(
+        dataset=dataset,
+        partitioner="tabular" if dataset == "synthetic" else "label_skew"))
 
 
 def make_fed_data(dataset: str, seed: int = 0, *, m=M_TEAMS, n=N_DEVICES,
                   samples_per_device: int = 48, strategy: str = "random"):
-    rng = np.random.default_rng(seed)
-    if dataset == "synthetic":
-        devs = synthetic_tabular(rng, m * n, min_samples=samples_per_device,
-                                 max_samples=samples_per_device * 8)
-        return partition_tabular(devs, m_teams=m, n_devices=n,
-                                 samples_per_device=samples_per_device)
-    x, y = make_dataset(dataset, rng, n_per_class=40 * n)
-    return partition_label_skew(rng, x, y, m_teams=m, n_devices=n,
-                                classes_per_device=2,
-                                samples_per_device=samples_per_device,
-                                strategy=strategy)
-
-
-def fns_for(cfg):
-    loss = lambda p, b: PM.loss_fn(p, cfg, b)
-    met = lambda p, b: PM.accuracy(p, cfg, b)
-    return loss, met
+    """Stacked FederatedData for a paper cell — shim over DataSpec.build."""
+    return DataSpec(
+        dataset=dataset,
+        partitioner="tabular" if dataset == "synthetic" else "label_skew",
+        m_teams=m, n_devices=n, samples_per_device=samples_per_device,
+        strategy=strategy).build(seed)
 
 
 def make_algorithm(name: str, loss, *, hp=HP_DEFAULT, lr: float = 0.03,
                    comm=None):
-    """Paper-default FLAlgorithm instances for the unified engine, keyed by
-    the Table-1 names. lr is the baselines' device learning rate."""
-    builders = {
-        "permfl": lambda: PerMFL(loss, hp, comm=comm),
-        "fedavg": lambda: B.FedAvg(loss, lr=lr,
-                                   local_steps=hp.k_team * hp.l_local),
-        "perfedavg": lambda: B.PerFedAvg(loss, lr=lr, inner_lr=lr,
-                                         local_steps=20),
-        "pfedme": lambda: B.PFedMe(loss, lr=1.0, inner_lr=lr, lam=15.0,
-                                   inner_steps=10, local_rounds=5),
-        "ditto": lambda: B.Ditto(loss, lr=lr, lam=0.5, local_steps=20),
-        "hsgd": lambda: B.HSGD(loss, lr=lr, k_team=hp.k_team,
-                               l_local=hp.l_local),
-        "l2gd": lambda: B.L2GD(loss, lr=lr, lam_c=0.5, lam_g=0.5,
-                               k_team=hp.k_team, l_local=hp.l_local),
-    }
-    return builders[name]()
-
-
-def to_jax(fd):
-    tr = {"x": jnp.asarray(fd.train_x), "y": jnp.asarray(fd.train_y)}
-    va = {"x": jnp.asarray(fd.val_x), "y": jnp.asarray(fd.val_y)}
-    return tr, va
-
-
-def init_model(cfg, seed: int = 0):
-    return PM.init_params(jax.random.PRNGKey(seed), cfg)
+    """Paper-default FLAlgorithm instances for the unified engine, keyed
+    by the Table-1 names — shim over AlgoSpec.build. lr is the baselines'
+    device learning rate."""
+    overrides = {
+        "permfl": {k: getattr(hp, k) for k in
+                   ("alpha", "eta", "beta", "lam", "gamma", "k_team",
+                    "l_local", "momentum", "weight_decay")},
+        "fedavg": {"lr": lr, "local_steps": hp.k_team * hp.l_local},
+        "perfedavg": {"lr": lr, "inner_lr": lr},
+        "pfedme": {"inner_lr": lr},
+        "ditto": {"lr": lr},
+        "hsgd": {"lr": lr, "k_team": hp.k_team, "l_local": hp.l_local},
+        "l2gd": {"lr": lr, "k_team": hp.k_team, "l_local": hp.l_local},
+    }[name]
+    return AlgoSpec(name, tuple(overrides.items())).build(loss, comm=comm)

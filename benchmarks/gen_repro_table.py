@@ -1,5 +1,9 @@
 """Summarize bench_output.txt table1 lines into the EXPERIMENTS.md §Repro
-markdown table (ours vs the paper's A100 numbers, qualitative)."""
+markdown table (ours vs the paper's A100 numbers, qualitative).
+
+The paper column comes from the scenario layer's single source of truth
+(`repro.scenarios.paper_refs.table1_ref`), not from whatever the CSV
+happened to carry."""
 from __future__ import annotations
 
 import os
@@ -8,6 +12,9 @@ from collections import defaultdict
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 BENCH = os.path.join(HERE, "..", "bench_output.txt")
+sys.path.insert(0, os.path.join(HERE, "..", "src"))
+
+from repro.scenarios.paper_refs import table1_ref  # noqa: E402
 
 SHOW = ["fedavg_gm", "perfedavg_pm", "pfedme_pm", "ditto_pm", "hsgd_gm",
         "l2gd_pm", "permfl_gm", "permfl_pm"]
@@ -18,8 +25,10 @@ def gen():
     for line in open(BENCH):
         if not line.startswith("table1,"):
             continue
-        _, ds, mdl, algo, acc, paper = line.strip().split(",")
-        rows[(ds, mdl)][algo] = (float(acc), paper)
+        _, ds, mdl, algo, acc, _ = line.strip().split(",")
+        paper = table1_ref(ds, convex=(mdl == "mclr"), key=algo)
+        rows[(ds, mdl)][algo] = (float(acc), paper if paper is not None
+                                 else "")
     out = ["### Table-1 analogue (ours, quick scale / paper A100 values)\n"]
     out.append("| dataset | model | " + " | ".join(SHOW) + " |")
     out.append("|---" * (len(SHOW) + 2) + "|")

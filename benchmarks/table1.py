@@ -1,14 +1,14 @@
 """Table 1: PerMFL vs conventional + multi-tier baselines.
 
 Per (dataset x model-class): runs PerMFL and six baselines on identical
-non-IID partitions and reports validation accuracy for PM and GM. The
-paper's A100 numbers are attached for qualitative comparison (data here is
-the offline synthetic re-materialization; orderings, not absolute values,
-are the reproduction target).
+non-IID partitions and reports validation accuracy for PM and GM. Every
+cell is a named scenario (``table1/{dataset}/{model}/{algo}`` in
+`repro.scenarios.SCENARIOS`) carrying its paper reference number; quick
+mode derives shrunken CNN variants via ``FLScenario.scaled``.
 
 Each algorithm's multi-seed runs (different model inits) execute as ONE
-vmapped program via run_sweep — the reported cell is the seed-mean of the
-best metric; quick mode keeps 2 seeds per cell, --full 3.
+vmapped program via sweep_scenario — the reported cell is the seed-mean
+of the best metric; quick mode keeps 2 seeds per cell, --full 3.
 """
 from __future__ import annotations
 
@@ -16,69 +16,48 @@ import time
 
 import numpy as np
 
-from repro.core import PerMFL
-from repro.core import baselines as B
-from repro.train.sweep import run_sweep
+from repro.scenarios import (SCENARIOS, TABLE1_ALGOS, TABLE1_DATASETS,
+                             sweep_scenario)
 
-from benchmarks.fl_common import (DATASETS, HP_DEFAULT, M_TEAMS, N_DEVICES,
-                                  PAPER_TABLE1_MCLR, PAPER_TABLE1_NONCONVEX,
-                                  fns_for, init_model, make_fed_data,
-                                  model_for, to_jax)
+DATASETS = TABLE1_DATASETS
+
+# quick-mode shrink for the CPU-heavy non-convex (CNN) cells: 2 teams x 5
+# devices, K=3 (keep L=10: theta re-initializes from w every team
+# iteration per Algorithm 1, so PM quality needs enough consecutive
+# device steps), and fewer inner steps for the multi-step baselines
+_QUICK_ALGO = {
+    "permfl": {"k_team": 3},
+    "fedavg": {"local_steps": 30},
+    "perfedavg": {"local_steps": 5},
+    "pfedme": {"inner_steps": 5, "local_rounds": 3},
+    "ditto": {"local_steps": 5},
+    "hsgd": {"k_team": 3},
+    "l2gd": {"k_team": 3},
+}
 
 
-def _seed_mean_best(algo, seeds, init_fn, tr, va, met, rounds, m, n,
-                    fields):
-    """All seeds of one algorithm as a single vmapped sweep; returns
+def _seed_mean_best(scenario, seeds, rounds, fields):
+    """All seeds of one scenario as a single vmapped sweep; returns
     {field: mean over seeds of the best-eval value}."""
-    sw = run_sweep(algo, [{}], seeds, init_fn, tr, va, metric_fn=met,
-                   rounds=rounds, m=m, n=n)
+    sw = sweep_scenario(scenario, [{}], seeds, rounds=rounds)
     return {f: float(np.mean([r.best(f) for r in sw])) for f in fields}
 
 
 def run_all_algorithms(dataset: str, convex: bool, rounds: int,
                        seeds=(0, 1), quick: bool = True):
-    # quick mode shrinks the expensive non-convex (CNN) cells: 2 teams x 5
-    # devices and K=3/L=10 — the qualitative orderings are scale-stable;
-    # --full restores the paper's 4x10 and K=5/L=10.
-    import dataclasses
+    """One (dataset x model-class) row: every Table-1 scenario cell,
+    multi-seeded; returns {algo_metric: seed-mean best accuracy}."""
+    kind = "mclr" if convex else ("dnn" if dataset == "synthetic" else "cnn")
     small = quick and not convex and dataset != "synthetic"
-    m_, n_ = (2, 5) if small else (M_TEAMS, N_DEVICES)
-    # keep L=10: theta re-initializes from w every team iteration
-    # (Algorithm 1), so PM quality needs enough consecutive device steps
-    hp = dataclasses.replace(HP_DEFAULT, k_team=3, l_local=10) if small \
-        else HP_DEFAULT
-    cfg = model_for(dataset, convex)
-    fd = make_fed_data(dataset, 0, m=m_, n=n_,
-                       samples_per_device=24 if small else 48)
-    tr, va = to_jax(fd)
-    loss, met = fns_for(cfg)
-    init_fn = lambda seed: init_model(cfg, seed)   # per-seed model init
-    m, n = fd.m_teams, fd.n_devices
-    lr = 0.03 if convex else 0.01
     out = {}
-
-    def cell(prefix, algo, fields):
-        res = _seed_mean_best(algo, seeds, init_fn, tr, va, met, rounds,
-                              m, n, fields)
-        for f in fields:
-            out[f"{prefix}_{f}"] = res[f]
-
-    cell("permfl", PerMFL(loss, hp), ("pm", "tm", "gm"))
-    cell("fedavg", B.FedAvg(loss, lr=lr,
-                            local_steps=hp.k_team * hp.l_local), ("gm",))
-    cell("perfedavg", B.PerFedAvg(loss, lr=lr, inner_lr=lr,
-                                  local_steps=5 if small else 20),
-         ("pm", "gm"))
-    cell("pfedme", B.PFedMe(loss, lr=1.0, inner_lr=lr, lam=15.0,
-                            inner_steps=5 if small else 10,
-                            local_rounds=3 if small else 5), ("pm", "gm"))
-    cell("ditto", B.Ditto(loss, lr=lr, lam=0.5,
-                          local_steps=5 if small else 20), ("pm", "gm"))
-    cell("hsgd", B.HSGD(loss, lr=lr, k_team=hp.k_team,
-                        l_local=hp.l_local), ("gm",))
-    cell("l2gd", B.L2GD(loss, lr=lr, lam_c=0.5, lam_g=0.5,
-                        k_team=hp.k_team, l_local=hp.l_local),
-         ("pm", "gm"))
+    for algo in TABLE1_ALGOS:
+        s = SCENARIOS[f"table1/{dataset}/{kind}/{algo}"]
+        if small:
+            s = s.scaled(m_teams=2, n_devices=5, samples_per_device=24,
+                         algo_overrides=_QUICK_ALGO[algo])
+        res = _seed_mean_best(s, seeds, rounds, s.algo.metrics)
+        for f in s.algo.metrics:
+            out[f"{algo}_{f}"] = res[f]
     return out
 
 
@@ -91,17 +70,21 @@ def main(quick: bool = True, csv=print):
     seeds_ncx = (0,) if quick else (0, 1, 2)
     csv("table,dataset,model,algorithm,acc,paper_acc")
     failures = []
-    for convex, rounds, seeds, paper in (
-            (True, rounds_cx, seeds_cx, PAPER_TABLE1_MCLR),
-            (False, rounds_ncx, seeds_ncx, PAPER_TABLE1_NONCONVEX)):
+    for convex, rounds, seeds in ((True, rounds_cx, seeds_cx),
+                                  (False, rounds_ncx, seeds_ncx)):
         mdl = "mclr" if convex else "cnn/dnn"
         for ds in DATASETS:
             t0 = time.time()
             res = run_all_algorithms(ds, convex, rounds, seeds=seeds,
                                      quick=quick)
-            for algo, acc in sorted(res.items()):
-                ref = paper.get(ds, {}).get(algo, "")
-                csv(f"table1,{ds},{mdl},{algo},{acc:.4f},{ref}")
+            kind = "mclr" if convex else ("dnn" if ds == "synthetic"
+                                          else "cnn")
+            for key, acc in sorted(res.items()):
+                algo, metric = key.rsplit("_", 1)
+                refs = dict(SCENARIOS[f"table1/{ds}/{kind}/{algo}"]
+                            .paper_ref)
+                ref = refs.get(metric, "")
+                csv(f"table1,{ds},{mdl},{key},{acc:.4f},{ref}")
             # qualitative checks (the reproduction targets)
             if not res["permfl_pm"] >= res["permfl_gm"]:
                 failures.append((ds, mdl, "PM < GM"))

@@ -3,37 +3,29 @@
 Reproduction targets (paper §4.1.4): the personalized model is mostly
 unaffected by formation; the global model degrades in the worst case.
 
-Per formation strategy, the multi-seed runs (different model inits) go
-through run_sweep as one vmapped program; reported numbers are seed-means
-of the best PM/GM.
+Each (dataset, strategy) cell is the registered scenario
+``table2/{dataset}/{strategy}``; per strategy, the multi-seed runs
+(different model inits) go through sweep_scenario as one vmapped
+program; reported numbers are seed-means of the best PM/GM.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import PerMFL
-from repro.train.sweep import run_sweep
-
-from benchmarks.fl_common import (HP_DEFAULT, fns_for, init_model,
-                                  make_fed_data, model_for, to_jax)
+from repro.scenarios import SCENARIOS, sweep_scenario
 
 
-def run(dataset="fmnist", convex=True, rounds=10, seeds=(0, 1), csv=print):
-    cfg = model_for(dataset, convex)
-    loss, met = fns_for(cfg)
-    init_fn = lambda seed: init_model(cfg, seed)
+def run(dataset="fmnist", rounds=10, seeds=(0, 1), csv=print):
+    """Worst vs average formation on one dataset; returns failed checks."""
     res = {}
     for strategy in ("worst", "average"):
-        fd = make_fed_data(dataset, seed=3, m=2, n=10, strategy=strategy)
-        tr, va = to_jax(fd)
-        sw = run_sweep(PerMFL(loss, HP_DEFAULT), [{}], seeds, init_fn,
-                       tr, va, metric_fn=met, rounds=rounds, m=2, n=10)
+        sw = sweep_scenario(SCENARIOS[f"table2/{dataset}/{strategy}"],
+                            [{}], seeds, rounds=rounds)
         pm = float(np.mean([r.best("pm") for r in sw]))
         gm = float(np.mean([r.best("gm") for r in sw]))
         res[strategy] = (pm, gm)
-        mdl = "mclr" if convex else "cnn"
-        csv(f"table2,{dataset},{mdl},{strategy},pm,{pm:.4f}")
-        csv(f"table2,{dataset},{mdl},{strategy},gm,{gm:.4f}")
+        csv(f"table2,{dataset},mclr,{strategy},pm,{pm:.4f}")
+        csv(f"table2,{dataset},mclr,{strategy},gm,{gm:.4f}")
 
     failures = []
     pm_w, gm_w = res["worst"]
@@ -48,7 +40,7 @@ def run(dataset="fmnist", convex=True, rounds=10, seeds=(0, 1), csv=print):
 def main(quick=True, csv=print):
     fails = []
     for ds in ("mnist", "fmnist"):
-        fails += run(ds, True, rounds=8 if quick else 30,
+        fails += run(ds, rounds=8 if quick else 30,
                      seeds=(0, 1) if quick else (0, 1, 2), csv=csv)
     return fails
 

@@ -12,7 +12,7 @@ import numpy as np
 from repro.core.permfl import PerMFLHParams, init_state, permfl_round
 from repro.core.theory import (mclr_constants, pick_hparams_strongly_convex)
 
-from benchmarks.fl_common import make_fed_data, to_jax
+from repro.scenarios import DataSpec, FLScenario, ModelSpec, build_scenario
 
 
 def quad_loss(p, b):
@@ -47,14 +47,13 @@ def strongly_convex_rate(csv=print, T=30):
 def nonconvex_rate(csv=print, T=12):
     """DNN on synthetic tabular: mean ||grad phi|| over rounds ~ decreasing;
     report the min-so-far curve (Theorem 2 guarantees min over t)."""
-    from benchmarks.fl_common import fns_for, init_model, model_for
-
-    cfg = model_for("synthetic", convex=False)
-    fd = make_fed_data("synthetic", seed=6)
-    tr, va = to_jax(fd)
-    loss, _ = fns_for(cfg)
-    p0 = init_model(cfg)
-    m, n = fd.m_teams, fd.n_devices
+    b = build_scenario(FLScenario(
+        name="theory/nonconvex/synthetic-dnn",
+        data=DataSpec(dataset="synthetic", partitioner="tabular"),
+        model=ModelSpec("dnn"), data_seed=6,
+        notes="Theorem-2 rate validation workload"))
+    tr, loss, p0 = b.train, b.loss_fn, b.params0
+    m, n = b.m, b.n
     hp = PerMFLHParams(alpha=0.01, eta=0.03, beta=0.1, lam=0.5, gamma=1.5,
                        k_team=5, l_local=10)
     st = init_state(p0, m, n)

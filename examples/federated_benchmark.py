@@ -3,54 +3,41 @@
     PYTHONPATH=src python examples/federated_benchmark.py \
         --dataset fmnist --model cnn --rounds 30 --teams 4 --devices 10
 
-Trains PerMFL *and* FedAvg on the same non-IID partition for a few hundred
-aggregate optimization steps (rounds x K x L device steps), evaluates the
-personalized/team/global models each round, and writes a CSV of the
-convergence curves plus a final comparison line. This is the "train a
-model for a few hundred steps" end-to-end example; `--full` scales to the
-paper's 4x10 devices x 400-round setting if you have the time budget.
+Builds an ad-hoc `FLScenario` from the CLI arguments (the same spec type
+the registry holds — dump it with --dump-spec), trains PerMFL *and*
+FedAvg on the same non-IID partition, evaluates the personalized/team/
+global models each round, and writes a CSV of the convergence curves
+plus a final comparison line. ``--partitioner dirichlet --alpha 0.3``
+switches to Dirichlet label skew; ``--formation worst`` exercises the
+team-formation ablation.
 """
 import argparse
 import csv
+import dataclasses
+import json
 import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.paper_cnn import CONFIG as CNN
-from repro.configs.paper_dnn import CONFIG as DNN
-from repro.configs.paper_mclr import CONFIG as MCLR
-from repro.core.permfl import PerMFLHParams
 from repro.core.theory import mclr_constants, pick_hparams_strongly_convex
-from repro.data.federated import partition_label_skew, partition_tabular
-from repro.data.synthetic import make_dataset, synthetic_tabular
-from repro.models import paper_models as PM
-from repro.train.fl_trainer import run_fedavg, run_permfl
+from repro.scenarios import (AlgoSpec, DataSpec, FLScenario, ModelSpec,
+                             build_scenario, run_scenario)
 
 
-def build(args):
-    rng = np.random.default_rng(args.seed)
-    if args.dataset == "synthetic":
-        devs = synthetic_tabular(rng, args.teams * args.devices,
-                                 min_samples=48, max_samples=400)
-        fed = partition_tabular(devs, m_teams=args.teams,
-                                n_devices=args.devices,
-                                samples_per_device=48)
-        cfg = {"mclr": MCLR, "dnn": DNN}[args.model]
-        if args.model == "mclr":
-            import dataclasses
-            cfg = dataclasses.replace(cfg, input_shape=(60,))
-    else:
-        x, y = make_dataset(args.dataset, rng,
-                            n_per_class=40 * args.devices)
-        fed = partition_label_skew(rng, x, y, m_teams=args.teams,
-                                   n_devices=args.devices,
-                                   classes_per_device=2,
-                                   samples_per_device=48,
-                                   strategy=args.formation)
-        cfg = {"mclr": MCLR, "cnn": CNN}[args.model]
-    return fed, cfg
+def scenario_from_args(args) -> FLScenario:
+    """The CLI arguments as one declarative spec."""
+    tabular = args.dataset == "synthetic"
+    if args.model == "cnn" and tabular:
+        sys.exit("--model cnn needs an image dataset")
+    data = DataSpec(
+        dataset=args.dataset,
+        partitioner="tabular" if tabular else args.partitioner,
+        m_teams=args.teams, n_devices=args.devices,
+        samples_per_device=48, strategy=args.formation, alpha=args.alpha)
+    return FLScenario(
+        name=f"cli/{args.dataset}/{args.model}",
+        data=data, model=ModelSpec(args.model), algo=AlgoSpec("permfl"),
+        rounds=args.rounds, team_frac=args.team_frac,
+        device_frac=args.device_frac, data_seed=args.seed,
+        notes="ad-hoc scenario from examples/federated_benchmark.py")
 
 
 def main(argv=None):
@@ -59,6 +46,10 @@ def main(argv=None):
                     choices=["mnist", "fmnist", "emnist10", "synthetic"])
     ap.add_argument("--model", default="mclr",
                     choices=["mclr", "cnn", "dnn"])
+    ap.add_argument("--partitioner", default="label_skew",
+                    choices=["label_skew", "dirichlet", "quantity"])
+    ap.add_argument("--alpha", type=float, default=0.5,
+                    help="dirichlet concentration (with --partitioner)")
     ap.add_argument("--rounds", type=int, default=15)
     ap.add_argument("--teams", type=int, default=4)
     ap.add_argument("--devices", type=int, default=10)
@@ -70,36 +61,36 @@ def main(argv=None):
                     help="derive (alpha,eta,beta,lam,gamma) from Theorem 1")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="CSV path for curves")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the scenario spec as JSON and exit")
     args = ap.parse_args(argv)
 
-    fed, cfg = build(args)
-    loss = lambda p, b: PM.loss_fn(p, cfg, b)
-    met = lambda p, b: PM.accuracy(p, cfg, b)
-    tr = {"x": jnp.asarray(fed.train_x), "y": jnp.asarray(fed.train_y)}
-    va = {"x": jnp.asarray(fed.val_x), "y": jnp.asarray(fed.val_y)}
-    p0 = PM.init_params(jax.random.PRNGKey(args.seed), cfg)
+    scn = scenario_from_args(args)
+    if args.dump_spec:
+        print(json.dumps(scn.to_dict(), indent=2))
+        return
 
     if args.theory_hparams and args.model == "mclr":
-        mu, lf = mclr_constants(fed.train_x.reshape(-1, *cfg.input_shape),
-                                cfg.l2_reg)
+        b = build_scenario(scn, args.seed)
+        cfg = b.config
+        mu, lf = mclr_constants(
+            b.fd.train_x.reshape(-1, *cfg.input_shape), cfg.l2_reg)
         th = pick_hparams_strongly_convex(mu, lf, safety=0.9)
-        hp = PerMFLHParams(alpha=th["alpha"], eta=th["eta"], beta=th["beta"],
-                           lam=th["lam"], gamma=th["gamma"], k_team=5,
-                           l_local=10)
         print(f"theory hparams: {th}")
-    else:
-        hp = PerMFLHParams(alpha=0.01, eta=0.03, beta=0.6, lam=0.5,
-                           gamma=1.5, k_team=5, l_local=10)
+        scn = dataclasses.replace(
+            scn, algo=AlgoSpec("permfl", tuple(th.items())))
+    hp = scn.algo.hparams()
 
-    print(f"== PerMFL: {args.rounds} rounds x K={hp.k_team} x L={hp.l_local}"
-          f" = {args.rounds * hp.k_team * hp.l_local} device steps ==")
-    res = run_permfl(p0, tr, va, loss_fn=loss, metric_fn=met, hp=hp,
-                     rounds=args.rounds, m=fed.m_teams, n=fed.n_devices,
-                     team_frac=args.team_frac, device_frac=args.device_frac)
+    print(f"== PerMFL: {scn.rounds} rounds x K={hp.k_team} x L={hp.l_local}"
+          f" = {scn.rounds * hp.k_team * hp.l_local} device steps ==")
+    res = run_scenario(scn, seed=args.seed)
     print(f"== FedAvg baseline ==")
-    ref = run_fedavg(p0, tr, va, loss_fn=loss, metric_fn=met,
-                     lr=hp.alpha * 3, local_steps=hp.k_team * hp.l_local,
-                     rounds=args.rounds, m=fed.m_teams, n=fed.n_devices)
+    fedavg = dataclasses.replace(
+        scn, algo=AlgoSpec("fedavg", (("lr", hp.alpha * 3),
+                                      ("local_steps",
+                                       hp.k_team * hp.l_local))),
+        team_frac=1.0, device_frac=1.0)
+    ref = run_scenario(fedavg, seed=args.seed)
 
     rows = [("round", "permfl_pm", "permfl_tm", "permfl_gm", "fedavg_gm")]
     for t in range(len(res.pm_acc)):

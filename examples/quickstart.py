@@ -1,47 +1,27 @@
-"""Quickstart: PerMFL on a non-IID federated image problem in ~40 lines.
+"""Quickstart: PerMFL on a non-IID federated image problem in ~30 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the paper's setting — 4 teams x 10 devices, each device holding two
-classes — runs a few PerMFL global rounds, and prints the three models'
-accuracies (personalized / team / global) per round.
-"""
-import jax
-import jax.numpy as jnp
-import numpy as np
+Every experiment in this repo is a named *scenario* — one serializable
+spec covering data x topology x model x algorithm x comm. The paper's
+setting (4 teams x 10 devices, each device holding two classes) is
+``table1/mnist/mclr/permfl`` in the registry; running it through
+``run_scenario`` compiles the whole experiment — rounds, evals — into a
+single program. Browse the catalog:
 
-from repro.comm import CommConfig
-from repro.configs.paper_mclr import CONFIG as MCLR
-from repro.core import PerMFL
-from repro.core.permfl import PerMFLHParams
-from repro.data.federated import partition_label_skew
-from repro.data.synthetic import make_dataset
-from repro.models import paper_models as PM
-from repro.train.engine import run_experiment
+    PYTHONPATH=src python -m repro.scenarios list
+"""
+from repro.scenarios import SCENARIOS, build_scenario, run_scenario
 
 
 def main():
-    rng = np.random.default_rng(0)
-    x, y = make_dataset("mnist", rng, n_per_class=400)
-    fed = partition_label_skew(rng, x, y, m_teams=4, n_devices=10,
-                               classes_per_device=2, samples_per_device=48)
-    print(f"teams={fed.m_teams} devices/team={fed.n_devices} "
-          f"train shape={fed.train_x.shape}")
+    scn = SCENARIOS["table1/mnist/mclr/permfl"]
+    b = build_scenario(scn)
+    print(f"scenario {scn.name} (hash {scn.spec_hash()}): "
+          f"teams={b.m} devices/team={b.n} "
+          f"train shape={b.fd.train_x.shape}")
 
-    params = PM.init_params(jax.random.PRNGKey(0), MCLR)
-    hp = PerMFLHParams(alpha=0.01, eta=0.03, beta=0.6, lam=0.5, gamma=1.5,
-                       k_team=5, l_local=10)   # paper §4.1.4 values
-    train = {"x": jnp.asarray(fed.train_x), "y": jnp.asarray(fed.train_y)}
-    val = {"x": jnp.asarray(fed.val_x), "y": jnp.asarray(fed.val_y)}
-
-    loss = lambda p, b: PM.loss_fn(p, MCLR, b)
-    metric = lambda p, b: PM.accuracy(p, MCLR, b)
-
-    # the whole experiment — 10 rounds + evals — is one compiled program
-    res = run_experiment(PerMFL(loss, hp), params, train, val,
-                         metric_fn=metric, rounds=10,
-                         m=fed.m_teams, n=fed.n_devices)
-
+    res = run_scenario(scn, rounds=10)
     for t, (pm, tm, gm) in enumerate(zip(res.pm_acc, res.tm_acc,
                                          res.gm_acc)):
         print(f"round {t:2d}: PM={pm:.3f} TM={tm:.3f} GM={gm:.3f}")
@@ -49,12 +29,10 @@ def main():
           f"{100 * (res.pm_acc[-1] - res.gm_acc[-1]):.1f} points "
           f"({res.seconds:.1f}s)")
 
-    # Same run, but the uplinks ship top-10% sparsified deltas with error
-    # feedback; the CommLedger accounts bytes per tier per round.
-    res_c = run_experiment(
-        PerMFL(loss, hp, comm=CommConfig(compressor="topk", k_frac=0.1)),
-        params, train, val, metric_fn=metric, rounds=10,
-        m=fed.m_teams, n=fed.n_devices)
+    # Same setting, but the uplinks ship top-10% sparsified deltas with
+    # error feedback (scenario ``comm/.../topk_10`` differs only in its
+    # CommConfig and data seed); the CommLedger accounts bytes per tier.
+    res_c = run_scenario(SCENARIOS["comm/mnist/mclr/topk_10"], rounds=10)
     s = res_c.comm.summary()
     print(f"\ncompressed uplinks (top-10% + EF): PM={res_c.pm_acc[-1]:.3f} "
           f"(vs {res.pm_acc[-1]:.3f} uncompressed)")

@@ -1,0 +1,31 @@
+"""Declarative scenario layer: one serializable spec per experiment.
+
+The paper's claims are scenario claims — this package makes the scenario
+a first-class, named, hashable value (`FLScenario` = data x topology x
+model x algorithm x participation x comm), keeps every paper cell plus
+the new heterogeneity families in the `SCENARIOS` registry, and routes
+execution through the scanned engine (`run_scenario`) and the vmapped
+sweep (`sweep_scenario`) with spec-hash-keyed build caching.
+
+    from repro.scenarios import SCENARIOS, run_scenario
+    res = run_scenario("table1/mnist/mclr/permfl", rounds=10)
+
+CLI: ``python -m repro.scenarios list|describe|dump|run`` (DESIGN.md §7).
+"""
+from repro.scenarios.paper_refs import (PAPER_TABLE1_MCLR,
+                                        PAPER_TABLE1_NONCONVEX, table1_ref)
+from repro.scenarios.registry import (SCENARIOS, TABLE1_ALGOS,
+                                      TABLE1_DATASETS, families,
+                                      get_scenario, register)
+from repro.scenarios.runner import (ScenarioBuild, build_scenario,
+                                    run_scenario, sweep_scenario)
+from repro.scenarios.spec import (ALGO_METRICS, AlgoSpec, DataSpec,
+                                  FLScenario, ModelSpec, PAPER_HP, fns_for,
+                                  init_model, to_jax)
+
+__all__ = ["ALGO_METRICS", "AlgoSpec", "DataSpec", "FLScenario",
+           "ModelSpec", "PAPER_HP", "PAPER_TABLE1_MCLR",
+           "PAPER_TABLE1_NONCONVEX", "SCENARIOS", "ScenarioBuild",
+           "TABLE1_ALGOS", "TABLE1_DATASETS", "build_scenario", "families",
+           "fns_for", "get_scenario", "init_model", "register",
+           "run_scenario", "sweep_scenario", "table1_ref", "to_jax"]

@@ -1,0 +1,129 @@
+"""CLI for the scenario registry.
+
+    PYTHONPATH=src python -m repro.scenarios list [--family F]
+    PYTHONPATH=src python -m repro.scenarios describe NAME
+    PYTHONPATH=src python -m repro.scenarios dump NAME
+    PYTHONPATH=src python -m repro.scenarios run NAME [--rounds R]
+        [--seed S] [--eval-every E] [--smoke]
+
+``list`` prints one line per registered scenario (name, topology,
+partitioner, algorithm, default rounds, spec hash); ``describe`` shows
+the full spec plus paper references and a reproduce one-liner; ``dump``
+emits the spec as JSON (feed it back via FLScenario.from_dict);
+``run`` executes through the scanned engine and prints the final
+metrics. ``--smoke`` shrinks the scenario to 2 teams x 3 devices x 16
+samples for 2 rounds — the CI liveness check (pair with
+FORCE_PALLAS_INTERPRET=1 on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cmd_list(args) -> int:
+    from repro.scenarios import SCENARIOS, families
+
+    rows = [s for s in SCENARIOS.values()
+            if not args.family or s.family == args.family]
+    if not rows:
+        print(f"no scenarios in family {args.family!r}; "
+              f"families: {families()}")
+        return 1
+    print(f"{'name':44} {'M x N':7} {'partition':10} {'model':5} "
+          f"{'algo':9} {'rounds':6} hash")
+    for s in rows:
+        d = s.data
+        print(f"{s.name:44} {d.m_teams}x{d.n_devices:<5} "
+              f"{d.partitioner:10} {s.model.kind:5} {s.algo.name:9} "
+              f"{s.rounds:<6} {s.spec_hash()}")
+    print(f"\n{len(rows)} scenario(s)"
+          + ("" if args.family else f" in {len(families())} families"))
+    return 0
+
+
+def _cmd_describe(args) -> int:
+    from repro.scenarios import get_scenario
+
+    s = get_scenario(args.name)
+    print(f"{s.name}  [{s.family}]  hash={s.spec_hash()}")
+    if s.notes:
+        print(f"  {s.notes}")
+    print(f"  data:  {s.data}")
+    print(f"  model: {s.model.kind} -> {s.model_config().name}")
+    print(f"  algo:  {s.algo.name} {dict(s.algo.overrides) or '(paper defaults)'}")
+    print(f"  rounds={s.rounds} team_frac={s.team_frac} "
+          f"device_frac={s.device_frac} data_seed={s.data_seed}")
+    if s.comm is not None:
+        print(f"  comm:  {s.comm}")
+    for metric, acc in s.paper_ref:
+        print(f"  paper: {metric} = {acc}%")
+    print(f"\n  reproduce: PYTHONPATH=src python -m repro.scenarios "
+          f"run {s.name}")
+    return 0
+
+
+def _cmd_dump(args) -> int:
+    from repro.scenarios import get_scenario
+
+    print(json.dumps(get_scenario(args.name).to_dict(), indent=2))
+    return 0
+
+
+def _cmd_run(args) -> int:
+    from repro.scenarios import get_scenario, run_scenario
+
+    s = get_scenario(args.name)
+    if args.smoke:
+        s = s.scaled(m_teams=2, n_devices=3, samples_per_device=16,
+                     rounds=2)
+    res = run_scenario(s, rounds=args.rounds, seed=args.seed,
+                       eval_every=args.eval_every)
+    finals = []
+    for metric in ("pm", "tm", "gm"):
+        hist = getattr(res, f"{metric}_acc")
+        if hist:
+            finals.append(f"{metric}={hist[-1]:.4f}")
+    print(f"{args.name}: rounds={args.rounds or s.rounds} "
+          + " ".join(finals) + f" train_loss={res.train_loss[-1]:.4f} "
+          f"({res.seconds:.1f}s)")
+    if res.comm is not None:
+        t = res.comm.totals()
+        print(f"  comm: {t.total / 1e6:.2f} MB total "
+              f"(wan_up {t.wan_up / 1e6:.2f} MB, "
+              f"lan_up {t.lan_up / 1e6:.2f} MB)")
+    for metric, acc in s.paper_ref:
+        print(f"  paper {metric}: {acc}% (A100, full rounds)")
+    return 0
+
+
+def main(argv=None) -> int:
+    """Entry point: dispatch list / describe / dump / run."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.scenarios",
+        description="Browse and run the declarative scenario registry.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p = sub.add_parser("list", help="list registered scenarios")
+    p.add_argument("--family", default=None)
+    p.set_defaults(fn=_cmd_list)
+    p = sub.add_parser("describe", help="show one scenario's full spec")
+    p.add_argument("name")
+    p.set_defaults(fn=_cmd_describe)
+    p = sub.add_parser("dump", help="print one scenario as JSON")
+    p.add_argument("name")
+    p.set_defaults(fn=_cmd_dump)
+    p = sub.add_parser("run", help="run a scenario via the scanned engine")
+    p.add_argument("name")
+    p.add_argument("--rounds", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--eval-every", type=int, default=1)
+    p.add_argument("--smoke", action="store_true",
+                   help="2x3x16 topology, 2 rounds (CI liveness)")
+    p.set_defaults(fn=_cmd_run)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,424 @@
+"""The declarative `FLScenario` spec: data x topology x model x algorithm
+x participation x comm as one frozen, serializable value.
+
+Every experiment in the repo is a *scenario* — the paper's claims are all
+scenario claims (PerMFL wins under known team structures, label-skew
+dissemination, partial participation, constrained uplinks), and every
+future workload is added as a new spec, not a new benchmark script. A
+scenario is four nested frozen dataclasses:
+
+    FLScenario
+      ├── DataSpec   dataset + partitioner + (M, N) topology + team
+      │              formation strategy + heterogeneity knobs
+      ├── ModelSpec  which paper model (mclr | cnn | dnn)
+      └── AlgoSpec   algorithm name + hyperparameter overrides
+      plus rounds, team/device participation fractions, an optional
+      CommConfig, the data seed, and presentation metadata (family,
+      paper reference numbers, notes).
+
+Being frozen and built from hashable fields, a scenario is usable as a
+cache key end-to-end: `spec_hash()` digests the physical fields (name
+and presentation metadata excluded), and `repro.scenarios.runner` keys
+its build cache on it so repeated runs of one scenario share loss/metric
+closures — which is exactly what lets the engine's compiled-program
+cache (`train.engine`, DESIGN.md §5/§7) hit across calls.
+
+`to_dict()` / `from_dict()` round-trip through plain JSON-able dicts, so
+specs can be dumped, diffed, and checked into experiment configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommConfig
+from repro.configs.base import PaperModelConfig
+from repro.core import PerMFL
+from repro.core import baselines as B
+from repro.core.permfl import PerMFLHParams
+from repro.data.federated import (FederatedData, partition_dirichlet,
+                                  partition_label_skew,
+                                  partition_quantity_skew, partition_tabular)
+from repro.data.synthetic import (feature_shift_tabular, make_dataset,
+                                  synthetic_tabular)
+from repro.models import paper_models as PM
+
+__all__ = ["ALGO_METRICS", "AlgoSpec", "DataSpec", "FLScenario",
+           "ModelSpec", "PAPER_HP", "fns_for", "init_model", "to_jax"]
+
+# paper §4.1.4 hyperparameters — the PerMFL defaults every scenario
+# starts from (AlgoSpec overrides replace individual fields)
+PAPER_HP = PerMFLHParams(alpha=0.01, eta=0.03, beta=0.6, lam=0.5,
+                         gamma=1.5, k_team=5, l_local=10)
+
+# metrics each algorithm reports (keys of FLAlgorithm.eval): the Table-1
+# columns — personalized/team/global for PerMFL, GM-only for the purely
+# global baselines, PM+GM for the personalized ones
+ALGO_METRICS = {
+    "permfl": ("pm", "tm", "gm"),
+    "fedavg": ("gm",),
+    "perfedavg": ("pm", "gm"),
+    "pfedme": ("pm", "gm"),
+    "ditto": ("pm", "gm"),
+    "hsgd": ("gm",),
+    "l2gd": ("pm", "gm"),
+}
+
+_TABULAR_DATASETS = ("synthetic", "featshift")
+_PARTITIONERS = ("label_skew", "dirichlet", "quantity", "tabular")
+
+
+# ---------------------------------------------------------------------------
+# helpers shared with the benchmarks (historically benchmarks/fl_common.py)
+# ---------------------------------------------------------------------------
+
+def fns_for(cfg: PaperModelConfig):
+    """(loss_fn, metric_fn) closures over one paper model config."""
+    loss = lambda p, b: PM.loss_fn(p, cfg, b)
+    met = lambda p, b: PM.accuracy(p, cfg, b)
+    return loss, met
+
+
+def init_model(cfg: PaperModelConfig, seed: int = 0):
+    """Model parameters for `cfg` from PRNG seed `seed`."""
+    return PM.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def to_jax(fd: FederatedData):
+    """FederatedData -> (train, val) dicts of stacked jnp arrays."""
+    tr = {"x": jnp.asarray(fd.train_x), "y": jnp.asarray(fd.train_y)}
+    va = {"x": jnp.asarray(fd.val_x), "y": jnp.asarray(fd.val_y)}
+    return tr, va
+
+
+# ---------------------------------------------------------------------------
+# DataSpec
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DataSpec:
+    """What the federation holds: dataset, partitioner, and topology.
+
+    dataset: "mnist" | "fmnist" | "emnist10" (image sets), "synthetic"
+        (the paper's §D.2.6 tabular set), or "featshift" (covariate-shift
+        tabular — shared concept, team-shifted features).
+    partitioner: "label_skew" (paper §4.1.4), "dirichlet" (Dir(alpha)
+        class mixes), "quantity" (power-law effective sizes), or
+        "tabular" (per-device tabular stacking; implied by the tabular
+        datasets).
+    m_teams / n_devices: the (M, N) topology.
+    samples_per_device: S — stacked sample slots per device.
+    classes_per_device: label-skew classes per device.
+    strategy: team-formation label pools ("random" | "worst" | "average").
+    alpha: Dirichlet concentration (partitioner="dirichlet").
+    min_frac: minimum unique-sample fraction (partitioner="quantity").
+    shift: team feature-shift magnitude (dataset="featshift").
+    n_per_class: image-dataset pool size per class; 0 = auto
+        (40 * n_devices, the benchmarks' historical sizing).
+    """
+    dataset: str = "mnist"
+    partitioner: str = "label_skew"
+    m_teams: int = 4
+    n_devices: int = 10
+    samples_per_device: int = 48
+    classes_per_device: int = 2
+    strategy: str = "random"
+    alpha: float = 0.5
+    min_frac: float = 0.25
+    shift: float = 2.0
+    n_per_class: int = 0
+
+    def __post_init__(self):
+        if self.partitioner not in _PARTITIONERS:
+            raise ValueError(f"unknown partitioner {self.partitioner!r}; "
+                             f"expected one of {_PARTITIONERS}")
+        if (self.dataset in _TABULAR_DATASETS) != \
+                (self.partitioner == "tabular"):
+            raise ValueError(
+                f"partitioner 'tabular' and the tabular datasets "
+                f"{_TABULAR_DATASETS} go together; got dataset="
+                f"{self.dataset!r} with partitioner={self.partitioner!r}")
+
+    def build(self, seed: int) -> FederatedData:
+        """Materialize the stacked FederatedData for PRNG seed `seed`
+        (deterministic: same spec + seed -> identical arrays)."""
+        rng = np.random.default_rng(seed)
+        m, n, spd = self.m_teams, self.n_devices, self.samples_per_device
+        if self.dataset == "synthetic":
+            devs = synthetic_tabular(rng, m * n, min_samples=spd,
+                                     max_samples=spd * 8)
+            return partition_tabular(devs, m_teams=m, n_devices=n,
+                                     samples_per_device=spd)
+        if self.dataset == "featshift":
+            devs = feature_shift_tabular(rng, m, n, shift=self.shift,
+                                         samples_per_device=spd)
+            return partition_tabular(devs, m_teams=m, n_devices=n,
+                                     samples_per_device=spd)
+        x, y = make_dataset(self.dataset, rng,
+                            n_per_class=self.n_per_class or 40 * n)
+        if self.partitioner == "label_skew":
+            return partition_label_skew(
+                rng, x, y, m_teams=m, n_devices=n,
+                classes_per_device=self.classes_per_device,
+                samples_per_device=spd, strategy=self.strategy)
+        if self.partitioner == "dirichlet":
+            return partition_dirichlet(
+                rng, x, y, m_teams=m, n_devices=n, alpha=self.alpha,
+                samples_per_device=spd, strategy=self.strategy)
+        assert self.partitioner == "quantity", self.partitioner
+        return partition_quantity_skew(
+            rng, x, y, m_teams=m, n_devices=n, samples_per_device=spd,
+            min_frac=self.min_frac)
+
+
+# ---------------------------------------------------------------------------
+# ModelSpec
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Which paper model trains on the scenario: "mclr" (strongly convex)
+    | "cnn" | "dnn" (non-convex). The concrete PaperModelConfig is
+    resolved against the DataSpec (input shape follows the dataset)."""
+    kind: str = "mclr"
+
+    def config(self, data: DataSpec) -> PaperModelConfig:
+        """Resolve to the concrete paper config for `data`'s shapes."""
+        from repro.configs.paper_cnn import CONFIG as CNN
+        from repro.configs.paper_dnn import CONFIG as DNN
+        from repro.configs.paper_mclr import CONFIG as MCLR
+
+        tabular = data.dataset in _TABULAR_DATASETS
+        if self.kind == "mclr":
+            return dataclasses.replace(MCLR, input_shape=(60,)) if tabular \
+                else MCLR
+        if self.kind == "dnn":
+            return DNN
+        if self.kind == "cnn":
+            if tabular:
+                raise ValueError("cnn needs image data, got "
+                                 f"{data.dataset!r}")
+            return CNN
+        raise ValueError(f"unknown model kind {self.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# AlgoSpec
+# ---------------------------------------------------------------------------
+
+# paper-default constructor arguments per algorithm (Table-1 settings);
+# AlgoSpec.overrides replaces individual entries
+_ALGO_DEFAULTS = {
+    "permfl": dict(alpha=0.01, eta=0.03, beta=0.6, lam=0.5, gamma=1.5,
+                   k_team=5, l_local=10, momentum=0.0, weight_decay=0.0),
+    "fedavg": dict(lr=0.03, local_steps=50),
+    "perfedavg": dict(lr=0.03, inner_lr=0.03, local_steps=20),
+    "pfedme": dict(lr=1.0, inner_lr=0.03, lam=15.0, inner_steps=10,
+                   local_rounds=5),
+    "ditto": dict(lr=0.03, lam=0.5, local_steps=20),
+    "hsgd": dict(lr=0.03, k_team=5, l_local=10),
+    "l2gd": dict(lr=0.03, lam_c=0.5, lam_g=0.5, k_team=5, l_local=10),
+}
+
+
+@dataclass(frozen=True)
+class AlgoSpec:
+    """Algorithm name + hyperparameter overrides on the paper defaults.
+
+    overrides: sorted tuple of (field, value) pairs replacing entries of
+    the algorithm's paper-default constructor arguments (PerMFLHParams
+    fields for "permfl", constructor kwargs for the baselines) — a tuple
+    so the spec stays hashable and JSON-round-trippable.
+    """
+    name: str = "permfl"
+    overrides: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        if self.name not in _ALGO_DEFAULTS:
+            raise ValueError(f"unknown algorithm {self.name!r}; expected "
+                             f"one of {sorted(_ALGO_DEFAULTS)}")
+        unknown = set(dict(self.overrides)) - set(_ALGO_DEFAULTS[self.name])
+        if unknown:
+            raise ValueError(
+                f"unknown {self.name} override(s) {sorted(unknown)}; "
+                f"valid: {sorted(_ALGO_DEFAULTS[self.name])}")
+        # normalize: sorted, tuple-of-tuples (from_dict hands us lists)
+        object.__setattr__(self, "overrides", tuple(
+            sorted((str(k), v) for k, v in self.overrides)))
+
+    def resolved(self) -> dict:
+        """Paper defaults with this spec's overrides applied."""
+        kw = dict(_ALGO_DEFAULTS[self.name])
+        kw.update(dict(self.overrides))
+        return kw
+
+    def hparams(self) -> PerMFLHParams:
+        """The resolved PerMFLHParams ("permfl" only)."""
+        if self.name != "permfl":
+            raise ValueError(f"{self.name} has no PerMFLHParams")
+        return PerMFLHParams(**self.resolved())
+
+    def build(self, loss_fn: Callable,
+              comm: Optional[CommConfig] = None):
+        """Construct the frozen FLAlgorithm instance for the engine."""
+        kw = self.resolved()
+        if self.name == "permfl":
+            return PerMFL(loss_fn, PerMFLHParams(**kw), comm=comm)
+        if comm is not None:
+            raise ValueError(f"comm compression is a PerMFL feature; "
+                             f"{self.name} does not route tiered uplinks")
+        cls = {"fedavg": B.FedAvg, "perfedavg": B.PerFedAvg,
+               "pfedme": B.PFedMe, "ditto": B.Ditto, "hsgd": B.HSGD,
+               "l2gd": B.L2GD}[self.name]
+        return cls(loss_fn, **kw)
+
+    @property
+    def metrics(self) -> tuple:
+        """Eval metrics this algorithm reports (Table-1 columns)."""
+        return ALGO_METRICS[self.name]
+
+
+# ---------------------------------------------------------------------------
+# FLScenario
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FLScenario:
+    """One named, reproducible experiment: the unit the registry stores,
+    `run_scenario` / `sweep_scenario` execute, and the build cache keys.
+
+    data / model / algo: the nested physical specs.
+    rounds: default global-round budget (overridable at run time).
+    team_frac / device_frac: participation fractions (paper §3.1 modes).
+    comm: optional CommConfig — compressed uplinks + byte accounting.
+    data_seed: PRNG seed the federated partition is built from (model
+        init / participation seeds are run-time arguments, so one data
+        universe serves multi-seed sweeps — the paper's table protocol).
+    family / paper_ref / notes: presentation metadata — excluded from
+        `spec_hash()` and from the build cache key. paper_ref holds
+        (metric, paper accuracy %) pairs for cells quoted in the paper.
+    """
+    name: str
+    data: DataSpec = field(default_factory=DataSpec)
+    model: ModelSpec = field(default_factory=ModelSpec)
+    algo: AlgoSpec = field(default_factory=AlgoSpec)
+    rounds: int = 10
+    team_frac: float = 1.0
+    device_frac: float = 1.0
+    comm: Optional[CommConfig] = None
+    data_seed: int = 0
+    family: str = ""
+    paper_ref: Tuple[Tuple[str, float], ...] = ()
+    notes: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "paper_ref", tuple(
+            (str(k), float(v)) for k, v in self.paper_ref))
+
+    # -- identity ----------------------------------------------------------
+
+    def canonical(self) -> "FLScenario":
+        """The physics only: presentation metadata stripped. Two registry
+        entries with equal canonical() forms share builds and compiled
+        programs."""
+        return dataclasses.replace(self, name="", family="", paper_ref=(),
+                                   notes="")
+
+    def spec_hash(self) -> str:
+        """Stable 16-hex digest of the canonical spec — the key the
+        runner's build cache (and through it the engine's compiled-
+        program cache) is organized around."""
+        blob = json.dumps(self.canonical().to_dict(), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    # -- (de)serialization -------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """Plain JSON-able dict; `from_dict` inverts it exactly."""
+        return {
+            "name": self.name,
+            "data": dataclasses.asdict(self.data),
+            "model": dataclasses.asdict(self.model),
+            "algo": {"name": self.algo.name,
+                     "overrides": [[k, v] for k, v in self.algo.overrides]},
+            "rounds": self.rounds,
+            "team_frac": self.team_frac,
+            "device_frac": self.device_frac,
+            "comm": dataclasses.asdict(self.comm) if self.comm else None,
+            "data_seed": self.data_seed,
+            "family": self.family,
+            "paper_ref": [[k, v] for k, v in self.paper_ref],
+            "notes": self.notes,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FLScenario":
+        """Rebuild a spec from `to_dict()` output (or hand-written JSON);
+        `from_dict(to_dict(s)) == s` for every registered scenario."""
+        return cls(
+            name=d["name"],
+            data=DataSpec(**d["data"]),
+            model=ModelSpec(**d["model"]),
+            algo=AlgoSpec(d["algo"]["name"],
+                          tuple(tuple(p) for p in d["algo"]["overrides"])),
+            rounds=d["rounds"],
+            team_frac=d["team_frac"],
+            device_frac=d["device_frac"],
+            comm=CommConfig(**d["comm"]) if d.get("comm") else None,
+            data_seed=d["data_seed"],
+            family=d.get("family", ""),
+            paper_ref=tuple(tuple(p) for p in d.get("paper_ref", ())),
+            notes=d.get("notes", ""),
+        )
+
+    # -- derivation --------------------------------------------------------
+
+    def scaled(self, *, m_teams: Optional[int] = None,
+               n_devices: Optional[int] = None,
+               samples_per_device: Optional[int] = None,
+               rounds: Optional[int] = None,
+               algo_overrides: Optional[dict] = None) -> "FLScenario":
+        """A derived scenario at a different scale (the benchmarks' quick
+        mode shrinks CNN cells this way). Unset arguments keep the
+        spec's values; `algo_overrides` merge over `algo.overrides`."""
+        data = dataclasses.replace(
+            self.data,
+            m_teams=m_teams if m_teams is not None else self.data.m_teams,
+            n_devices=(n_devices if n_devices is not None
+                       else self.data.n_devices),
+            samples_per_device=(samples_per_device
+                                if samples_per_device is not None
+                                else self.data.samples_per_device))
+        algo = self.algo
+        if algo_overrides:
+            merged = dict(algo.overrides)
+            merged.update(algo_overrides)
+            algo = AlgoSpec(algo.name, tuple(merged.items()))
+        return dataclasses.replace(
+            self, data=data, algo=algo,
+            rounds=rounds if rounds is not None else self.rounds)
+
+    # -- materialization ---------------------------------------------------
+
+    def model_config(self) -> PaperModelConfig:
+        """The resolved PaperModelConfig for this scenario's data."""
+        return self.model.config(self.data)
+
+    def build(self, seed: int = 0):
+        """Materialize (FederatedData, FLAlgorithm, params0, metric_fn)
+        for model-init seed `seed` (data comes from `data_seed`).
+
+        Thin uncached wrapper around `runner.build_scenario` — prefer
+        that entry point inside loops; it shares data, closures, and
+        thereby compiled programs across calls.
+        """
+        from repro.scenarios.runner import build_scenario
+        b = build_scenario(self, seed)
+        return b.fd, b.algo, b.params0, b.metric_fn

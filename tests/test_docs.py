@@ -17,6 +17,10 @@ PUBLIC_MODULES = (
     "repro.train.engine",
     "repro.train.sweep",
     "repro.train.fl_trainer",
+    "repro.scenarios",
+    "repro.scenarios.spec",
+    "repro.scenarios.registry",
+    "repro.scenarios.runner",
 )
 
 _EXEMPT_METHODS = {"tree_flatten", "tree_unflatten"}

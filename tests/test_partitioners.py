@@ -1,0 +1,160 @@
+"""Partitioner invariants across label-skew, Dirichlet, and quantity
+skew: per-device class caps, stable shapes/dtypes, per-device train/val
+disjointness, and the class-pool exhaustion warning (the silent sample
+reuse fix)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.data.federated import (partition_dirichlet, partition_label_skew,
+                                  partition_quantity_skew)
+from repro.data.synthetic import make_dataset
+
+M, N, SPD = 3, 4, 32
+
+
+def _make(n_per_class=200, seed=0):
+    rng = np.random.default_rng(seed)
+    x, y = make_dataset("mnist", rng, n_per_class=n_per_class)
+    return rng, x, y
+
+
+PARTITIONERS = {
+    "label_skew": lambda rng, x, y: partition_label_skew(
+        rng, x, y, m_teams=M, n_devices=N, classes_per_device=2,
+        samples_per_device=SPD),
+    "dirichlet": lambda rng, x, y: partition_dirichlet(
+        rng, x, y, m_teams=M, n_devices=N, alpha=0.5,
+        samples_per_device=SPD),
+    "quantity": lambda rng, x, y: partition_quantity_skew(
+        rng, x, y, m_teams=M, n_devices=N, samples_per_device=SPD,
+        min_frac=0.25),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PARTITIONERS))
+def test_shapes_dtypes_and_split(name):
+    rng, x, y = _make()
+    fd = PARTITIONERS[name](rng, x, y)
+    n_val = SPD // 4
+    assert fd.train_x.shape == (M, N, SPD - n_val) + x.shape[1:]
+    assert fd.val_x.shape == (M, N, n_val) + x.shape[1:]
+    assert fd.train_y.shape == (M, N, SPD - n_val)
+    assert fd.train_x.dtype == np.float32 and fd.train_y.dtype == np.int32
+    assert fd.val_x.dtype == np.float32 and fd.val_y.dtype == np.int32
+    assert fd.m_teams == M and fd.n_devices == N
+
+
+@pytest.mark.parametrize("name", sorted(PARTITIONERS))
+def test_train_val_disjoint_per_device(name):
+    """With ample pools, no validation row may appear among a device's
+    train rows — duplicated train/val samples inflate accuracy."""
+    rng, x, y = _make(n_per_class=400)
+    fd = PARTITIONERS[name](rng, x, y)
+    for i in range(M):
+        for j in range(N):
+            tr = {r.tobytes() for r in fd.train_x[i, j]}
+            va = {r.tobytes() for r in fd.val_x[i, j]}
+            assert tr.isdisjoint(va), f"device ({i},{j}) shares rows"
+
+
+def test_label_skew_class_cap():
+    rng, x, y = _make()
+    fd = PARTITIONERS["label_skew"](rng, x, y)
+    for i in range(M):
+        for j in range(N):
+            labels = set(np.unique(fd.train_y[i, j])) | \
+                set(np.unique(fd.val_y[i, j]))
+            assert len(labels) <= 2, f"device ({i},{j}) has {labels}"
+
+
+def test_dirichlet_respects_team_pools():
+    """Dirichlet skew composes with worst-case team formation: device
+    labels stay inside their team's label pool."""
+    from repro.core.team_formation import label_pools
+
+    rng, x, y = _make(n_per_class=400)
+    fd = partition_dirichlet(rng, x, y, m_teams=2, n_devices=N, alpha=0.5,
+                             samples_per_device=SPD, strategy="worst")
+    pools = label_pools("worst", 2, 10)
+    for i in range(2):
+        labels = set(np.unique(fd.train_y[i])) | set(np.unique(fd.val_y[i]))
+        assert labels <= set(pools[i]), (i, labels)
+
+
+def test_dirichlet_alpha_controls_concentration():
+    """Small alpha concentrates devices on few classes; large alpha
+    approaches a uniform class mix."""
+    def mean_classes(alpha):
+        rng, x, y = _make(n_per_class=600, seed=1)
+        fd = partition_dirichlet(rng, x, y, m_teams=M, n_devices=N,
+                                 alpha=alpha, samples_per_device=SPD)
+        counts = [len(np.unique(np.concatenate(
+            [fd.train_y[i, j], fd.val_y[i, j]])))
+            for i in range(M) for j in range(N)]
+        return float(np.mean(counts))
+
+    assert mean_classes(0.05) < mean_classes(100.0) - 2.0
+
+
+def test_quantity_skew_heterogeneous_effective_sizes():
+    """Devices must differ in unique-sample counts (that is the skew),
+    and every unique row a device's val split holds is unique."""
+    rng, x, y = _make(n_per_class=400)
+    fd = PARTITIONERS["quantity"](rng, x, y)
+    uniq = np.array([[len({r.tobytes() for r in
+                           np.concatenate([fd.train_x[i, j],
+                                           fd.val_x[i, j]])})
+                      for j in range(N)] for i in range(M)])
+    assert uniq.min() >= int(0.25 * SPD)
+    assert uniq.max() <= SPD
+    assert uniq.std() > 0, "no quantity skew"
+    # val rows are never duplicated
+    for i in range(M):
+        for j in range(N):
+            va = [r.tobytes() for r in fd.val_x[i, j]]
+            assert len(set(va)) == len(va)
+
+
+def test_exhaustion_warns_on_sample_reuse():
+    """Demanding more samples of a class than its pool holds must warn
+    (the historical code wrapped modulo the pool silently)."""
+    rng, x, y = _make(n_per_class=20)   # tiny pools: 20 per class
+    with pytest.warns(UserWarning, match="exhausted"):
+        partition_label_skew(rng, x, y, m_teams=4, n_devices=4,
+                             classes_per_device=2, samples_per_device=64)
+
+
+def test_quantity_skew_warns_on_realized_pool_wrap():
+    """The exhaustion check must use the realized power-law draws, not
+    the minimum-demand lower bound: many devices on a small pool wrap
+    the global sample order and must warn."""
+    rng, x, y = _make(n_per_class=30)    # pool of 300 samples
+    with pytest.warns(UserWarning, match="reused across devices"):
+        partition_quantity_skew(rng, x, y, m_teams=4, n_devices=10,
+                                samples_per_device=48, min_frac=0.8)
+
+
+def test_no_warning_with_ample_pools():
+    rng, x, y = _make(n_per_class=600)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        partition_label_skew(rng, x, y, m_teams=2, n_devices=3,
+                             classes_per_device=2, samples_per_device=16)
+        partition_dirichlet(rng, x, y, m_teams=2, n_devices=3, alpha=0.5,
+                            samples_per_device=16)
+
+
+def test_label_skew_unchanged_by_exhaustion_accounting():
+    """The warning is accounting-only: partitions must be bit-identical
+    to the historical selection (benchmark trajectories must not move)."""
+    rng1, x, y = _make(n_per_class=300, seed=5)
+    fd1 = partition_label_skew(rng1, x, y, m_teams=2, n_devices=3,
+                               samples_per_device=24)
+    rng2 = np.random.default_rng(5)
+    x2, y2 = make_dataset("mnist", rng2, n_per_class=300)
+    fd2 = partition_label_skew(rng2, x2, y2, m_teams=2, n_devices=3,
+                               samples_per_device=24)
+    np.testing.assert_array_equal(fd1.train_x, fd2.train_x)
+    np.testing.assert_array_equal(fd1.val_y, fd2.val_y)
