@@ -28,10 +28,16 @@ the sequential loop's trajectories bit-for-bit in a single dispatch.
     PYTHONPATH=src python -m benchmarks.bench_engine --smoke    # CI: 2
         rounds through the scan path + a 2-config sweep in one dispatch,
         no timing checks
+
+Either mode writes ``BENCH_engine.json`` at the repo root — the perf
+trajectory marker future PRs diff against (rounds/sec, configs/sec,
+dispatch counts, compile-vs-run seconds).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 import sys
 import time
 
@@ -84,16 +90,29 @@ def _run_legacy(algo, p0, tr, va, met, m, n, rounds):
 
 SWEEP_GRID = [dict(lam=0.3), dict(lam=0.5), dict(lam=0.8), dict(lam=1.2)]
 
+_BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_engine.json"
+
+
+def write_bench_json(payload: dict) -> None:
+    """Persist the perf-trajectory marker at the repo root; future PRs
+    diff BENCH_engine.json to catch engine regressions."""
+    _BENCH_JSON.write_text(json.dumps(payload, indent=2, sort_keys=True)
+                           + "\n")
+    print(f"# bench_engine: wrote {_BENCH_JSON.name}")
+
 
 def smoke() -> list:
     """CI guard: 2 rounds through the scanned path, then a 2-config x
     2-round sweep through the vmapped path — asserting both configs
     executed in a single dispatch (run with FORCE_PALLAS_INTERPRET=1 so
-    the Pallas prox kernel is exercised too)."""
+    the Pallas prox kernel is exercised too). Writes BENCH_engine.json
+    (steady-state numbers from a second, compile-cache-warm run)."""
     algo, p0, tr, va, met, m, n = _setup()
-    res = run_experiment(algo, p0, tr, va, metric_fn=met, rounds=2,
-                         m=m, n=n, scan=True)
+    kw = dict(metric_fn=met, rounds=2, m=m, n=n, scan=True)
+    res = run_experiment(algo, p0, tr, va, **kw)
     assert len(res.pm_acc) == 2 and res.state is not None
+    warm = run_experiment(algo, p0, tr, va, **kw)   # compile cache hot
     print(f"# bench_engine smoke: 2 scanned rounds OK, "
           f"pm={res.pm_acc[-1]:.3f}")
 
@@ -101,8 +120,25 @@ def smoke() -> list:
                    rounds=2, m=m, n=n)
     assert len(sw) == 2 and sw.dispatches == 1
     assert all(np.isfinite(r.pm_acc).all() for r in sw)
+    sw_warm = run_sweep(algo, SWEEP_GRID[:2], (0,), p0, tr, va,
+                        metric_fn=met, rounds=2, m=m, n=n)
     print(f"# bench_engine smoke: {len(sw)} sweep configs in "
           f"{sw.dispatches} dispatch OK, pm={[f'{r.pm_acc[-1]:.3f}' for r in sw]}")
+
+    write_bench_json({
+        "mode": "smoke",
+        "engine": {"rounds": 2,
+                   "rounds_per_sec": round(2 / max(warm.seconds, 1e-9), 2),
+                   "cold_seconds": round(res.seconds, 3),
+                   "steady_seconds": round(warm.seconds, 3),
+                   "dispatches": 1},
+        "sweep": {"configs": len(sw_warm),
+                  "configs_per_sec": round(
+                      len(sw_warm) / max(sw_warm.seconds, 1e-9), 2),
+                  "cold_seconds": round(sw.seconds, 3),
+                  "steady_seconds": round(sw_warm.seconds, 3),
+                  "dispatches": sw_warm.dispatches},
+    })
     return []
 
 
@@ -153,14 +189,29 @@ def main(quick: bool = True, csv=print) -> list:
             f"({rps['scan'] / rps['legacy']:.2f}x)")
     if drift > 1e-4 or not np.isfinite(drift):
         failures.append(f"bench_engine: scan/legacy drift {drift:.2e}")
-    failures += _bench_sweep(algo, p0, tr, va, met, m, n,
-                             rounds=max(4, rounds // 4), csv=csv)
+    sweep_failures, cps = _bench_sweep(algo, p0, tr, va, met, m, n,
+                                       rounds=max(4, rounds // 4), csv=csv)
+    failures += sweep_failures
+    write_bench_json({
+        "mode": "quick" if quick else "full",
+        "engine": {"rounds": rounds,
+                   "rounds_per_sec": {k: round(v, 2)
+                                      for k, v in rps.items()},
+                   "scan_over_legacy": round(rps["scan"] / rps["legacy"],
+                                             2),
+                   "dispatches": 1},
+        "sweep": {"configs": len(SWEEP_GRID),
+                  "configs_per_sec": {k: round(v, 2)
+                                      for k, v in cps.items()},
+                  "dispatches": 1},
+    })
     return failures
 
 
-def _bench_sweep(algo, p0, tr, va, met, m, n, *, rounds, csv) -> list:
+def _bench_sweep(algo, p0, tr, va, met, m, n, *, rounds, csv):
     """Sweep mode: the SWEEP_GRID lambda grid as a sequential loop of
-    scanned experiments vs one vmapped run_sweep program, configs/sec."""
+    scanned experiments vs one vmapped run_sweep program, configs/sec.
+    Returns (failures, configs_per_sec dict)."""
     kw = dict(metric_fn=met, rounds=rounds, m=m, n=n)
     n_cfg = len(SWEEP_GRID)
 
@@ -193,8 +244,8 @@ def _bench_sweep(algo, p0, tr, va, met, m, n, *, rounds, csv) -> list:
                 for a, b in zip(ps, pq))
     csv(f"bench_engine,mnist,mclr,max_sweep_drift,,,{drift:.2e}")
     if drift > 1e-4 or not np.isfinite(drift):
-        return [f"bench_engine: sweep/sequential drift {drift:.2e}"]
-    return []
+        return [f"bench_engine: sweep/sequential drift {drift:.2e}"], cps
+    return [], cps
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ MODULES = [
     ("table2", "benchmarks.table2_teams"),      # Table 2 team formation
     ("fig4", "benchmarks.fig4_participation"),  # Fig 4 participation
     ("fig_comm", "benchmarks.fig_comm_tradeoff"),  # acc-vs-MB comm sweep
+    ("fig_tta", "benchmarks.fig_time_to_accuracy"),  # acc-vs-sim-seconds
     ("engine", "benchmarks.bench_engine"),      # scan vs dispatch rounds/s
     ("theory", "benchmarks.theory_rates"),      # Thm 1/2 rate validation
     ("roofline", "benchmarks.roofline_table"),  # §Roofline from dry-run

@@ -42,6 +42,21 @@ def main():
           f"WAN up {s['wan_up_bytes'] / 1e6:.2f} MB, "
           f"LAN up {s['lan_up_bytes'] / 1e6:.2f} MB)")
 
+    # Bytes are a proxy — price the same two runs in simulated wall-clock
+    # seconds on a cellular-WAN system profile (repro.system): the
+    # compressed uplinks buy *time*, and accuracy-vs-seconds curves fall
+    # out of res.sim_seconds.
+    t_full = run_scenario(SCENARIOS["comm/mnist/mclr/uncompressed"],
+                          rounds=10, system="wan-cellular")
+    t_comp = run_scenario(SCENARIOS["comm/mnist/mclr/topk_10"],
+                          rounds=10, system="wan-cellular")
+    print(f"\non wan-cellular: fp32 uplinks take "
+          f"{t_full.timeline.total_seconds():.1f} simulated s, top-10% "
+          f"takes {t_comp.timeline.total_seconds():.1f}s to the same "
+          f"round budget")
+    t, pm = t_comp.sim_seconds[-1], t_comp.pm_acc[-1]
+    print(f"time-to-accuracy curve tail: PM={pm:.3f} @ {t:.1f}s simulated")
+
 
 if __name__ == "__main__":
     main()

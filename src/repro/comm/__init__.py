@@ -4,9 +4,10 @@ from repro.comm.compressors import compress_tree, leaf_k, make_leaf_compressor
 from repro.comm.config import (COMPRESSORS, CommConfig, CommState,
                                init_comm_state)
 from repro.comm.ledger import (CommLedger, RoundBytes, compressed_leaf_bytes,
-                               full_leaf_bytes, model_bytes)
+                               downlink_uplink_bytes, full_leaf_bytes,
+                               model_bytes)
 
 __all__ = ["CommConfig", "CommState", "CommLedger", "RoundBytes",
            "COMPRESSORS", "init_comm_state", "compress_tree",
            "make_leaf_compressor", "leaf_k", "compressed_leaf_bytes",
-           "full_leaf_bytes", "model_bytes"]
+           "downlink_uplink_bytes", "full_leaf_bytes", "model_bytes"]

@@ -67,6 +67,14 @@ def model_bytes(leaf_sizes, cfg: Optional[CommConfig] = None) -> int:
     return sum(compressed_leaf_bytes(cfg, p) for p in leaf_sizes)
 
 
+def downlink_uplink_bytes(leaf_sizes, cfg: Optional[CommConfig] = None):
+    """(downlink, uplink) wire bytes of one model/delta: downlinks always
+    carry fp32 anchors, uplinks carry the compressed delta (cfg=None means
+    uncompressed both ways). The pairing the wall-clock system simulator
+    (`repro.system`) prices links with."""
+    return model_bytes(leaf_sizes), model_bytes(leaf_sizes, cfg)
+
+
 @dataclass
 class RoundBytes:
     """One global round's traffic, bytes per link-direction."""

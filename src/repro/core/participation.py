@@ -33,6 +33,29 @@ def sample_masks(key, m_teams: int, n_devices: int, *,
     return team_mask, device_mask
 
 
+def keep_fastest(team_mask, device_mask, score, candidates):
+    """Guarantee a non-empty round after mask-thinning (e.g. deadline
+    straggler drops, `repro.system`): if ``device_mask * team_mask[:,N]``
+    kept nobody, fall back to the single (team, device) pair with the
+    smallest ``score`` among ``candidates`` — the same "at least one
+    participant" contract ``sample_masks`` provides by construction.
+
+    team_mask (M,) / device_mask (M, N): the thinned masks.
+    score (M, N): per-device priority (lower wins), e.g. chain times.
+    candidates (M, N): {0,1} mask of pairs eligible for the fallback.
+    Returns (team_mask, device_mask) with device_mask team-gated.
+    """
+    gated = device_mask * team_mask[:, None]
+    alive = jnp.sum(gated) > 0
+    masked = jnp.where(candidates > 0, score, jnp.inf)
+    idx = jnp.argmin(masked.reshape(-1))
+    one = jnp.zeros((masked.size,), jnp.float32).at[idx].set(1.0)
+    one = one.reshape(masked.shape)
+    fb_tm = jnp.clip(jnp.sum(one, axis=1), 0.0, 1.0)
+    return (jnp.where(alive, team_mask, fb_tm),
+            jnp.where(alive, gated, one))
+
+
 MODES = {
     "full": dict(team_frac=1.0, device_frac=1.0),
     "partial_devices": dict(team_frac=1.0, device_frac=0.5),

@@ -3,15 +3,20 @@
     PYTHONPATH=src python -m repro.scenarios list [--family F]
     PYTHONPATH=src python -m repro.scenarios describe NAME
     PYTHONPATH=src python -m repro.scenarios dump NAME
+    PYTHONPATH=src python -m repro.scenarios profiles
     PYTHONPATH=src python -m repro.scenarios run NAME [--rounds R]
-        [--seed S] [--eval-every E] [--smoke]
+        [--seed S] [--eval-every E] [--system PROFILE]
+        [--deadline SECONDS] [--smoke]
 
 ``list`` prints one line per registered scenario (name, topology,
 partitioner, algorithm, default rounds, spec hash); ``describe`` shows
 the full spec plus paper references and a reproduce one-liner; ``dump``
 emits the spec as JSON (feed it back via FLScenario.from_dict);
+``profiles`` lists the wall-clock system profiles (`repro.system`);
 ``run`` executes through the scanned engine and prints the final
-metrics. ``--smoke`` shrinks the scenario to 2 teams x 3 devices x 16
+metrics — with ``--system`` the run is priced on that device/link
+profile (simulated time-to-accuracy, optional ``--deadline`` straggler
+drops). ``--smoke`` shrinks the scenario to 2 teams x 3 devices x 16
 samples for 2 rounds — the CI liveness check (pair with
 FORCE_PALLAS_INTERPRET=1 on CPU).
 """
@@ -57,6 +62,8 @@ def _cmd_describe(args) -> int:
           f"device_frac={s.device_frac} data_seed={s.data_seed}")
     if s.comm is not None:
         print(f"  comm:  {s.comm}")
+    if s.system is not None:
+        print(f"  system: {s.system}")
     for metric, acc in s.paper_ref:
         print(f"  paper: {metric} = {acc}%")
     print(f"\n  reproduce: PYTHONPATH=src python -m repro.scenarios "
@@ -71,6 +78,22 @@ def _cmd_dump(args) -> int:
     return 0
 
 
+def _cmd_profiles(args) -> int:
+    from repro.system import SYSTEM_PROFILES
+
+    print(f"{'profile':14} {'compute':16} {'LAN':22} {'WAN':22}")
+    for name, p in SYSTEM_PROFILES.items():
+        print(f"{name:14} "
+              f"{p.compute_gflops:g}GF/s s={p.compute_sigma:g}   "
+              f"{p.lan_mbps:g}Mbps {p.lan_latency_ms:g}ms "
+              f"s={p.lan_sigma:<5g} "
+              f"{p.wan_mbps:g}Mbps {p.wan_latency_ms:g}ms "
+              f"s={p.wan_sigma:g}")
+    print("\nattach one with: run NAME --system PROFILE "
+          "[--deadline SECONDS]")
+    return 0
+
+
 def _cmd_run(args) -> int:
     from repro.scenarios import get_scenario, run_scenario
 
@@ -78,6 +101,14 @@ def _cmd_run(args) -> int:
     if args.smoke:
         s = s.scaled(m_teams=2, n_devices=3, samples_per_device=16,
                      rounds=2)
+    if args.system:
+        s = s.with_system(args.system)
+    if args.deadline:
+        if s.system is None:
+            print("error: --deadline needs a system model (pass --system "
+                  "PROFILE, or run a scenario whose spec carries one)")
+            return 2
+        s = s.with_system(s.system.with_deadline(args.deadline))
     res = run_scenario(s, rounds=args.rounds, seed=args.seed,
                        eval_every=args.eval_every)
     finals = []
@@ -93,6 +124,12 @@ def _cmd_run(args) -> int:
         print(f"  comm: {t.total / 1e6:.2f} MB total "
               f"(wan_up {t.wan_up / 1e6:.2f} MB, "
               f"lan_up {t.lan_up / 1e6:.2f} MB)")
+    if res.timeline is not None:
+        tl = res.timeline.summary()
+        print(f"  system[{tl['profile']}]: {tl['sim_seconds']:.2f} "
+              f"simulated s over {tl['rounds']} rounds "
+              f"(mean {tl['mean_round_seconds']:.3f}s/round, "
+              f"{tl['dropped_devices']} device straggler drops)")
     for metric, acc in s.paper_ref:
         print(f"  paper {metric}: {acc}% (A100, full rounds)")
     return 0
@@ -113,11 +150,18 @@ def main(argv=None) -> int:
     p = sub.add_parser("dump", help="print one scenario as JSON")
     p.add_argument("name")
     p.set_defaults(fn=_cmd_dump)
+    p = sub.add_parser("profiles",
+                       help="list wall-clock system profiles")
+    p.set_defaults(fn=_cmd_profiles)
     p = sub.add_parser("run", help="run a scenario via the scanned engine")
     p.add_argument("name")
     p.add_argument("--rounds", type=int, default=None)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--eval-every", type=int, default=1)
+    p.add_argument("--system", default=None,
+                   help="wall-clock profile (see `profiles`)")
+    p.add_argument("--deadline", type=float, default=None,
+                   help="per-round straggler deadline, simulated seconds")
     p.add_argument("--smoke", action="store_true",
                    help="2x3x16 topology, 2 rounds (CI liveness)")
     p.set_defaults(fn=_cmd_run)

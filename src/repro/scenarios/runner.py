@@ -15,6 +15,7 @@ instead of retracing (DESIGN.md §7).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
@@ -26,6 +27,11 @@ from repro.train.sweep import FLSweepResult, run_sweep
 
 __all__ = ["ScenarioBuild", "build_scenario", "run_scenario",
            "sweep_scenario"]
+
+# default for the run/sweep `system` argument: "not passed — keep the
+# spec's own system model". Distinct from None, which explicitly
+# disables simulation on a system-bearing spec.
+_KEEP_SPEC_SYSTEM = object()
 
 
 @dataclass
@@ -100,7 +106,11 @@ def build_scenario(name_or_spec, seed: int = 0) -> ScenarioBuild:
     is what keys the engine's compiled-program cache across calls.
     """
     s = get_scenario(name_or_spec)
-    fd, cfg, train, val, loss, metric, algo = _materialize(s.canonical())
+    # the system model is pure measurement — it never changes what gets
+    # built, so strip it from the cache key: every profile of one
+    # scenario shares data, closures, and the algorithm template
+    canon = dataclasses.replace(s.canonical(), system=None)
+    fd, cfg, train, val, loss, metric, algo = _materialize(canon)
     return ScenarioBuild(scenario=s, fd=fd, config=cfg, train=train,
                          val=val, loss_fn=loss, metric_fn=metric,
                          algo=algo, params0=_params0(cfg, seed))
@@ -108,7 +118,8 @@ def build_scenario(name_or_spec, seed: int = 0) -> ScenarioBuild:
 
 def run_scenario(name_or_spec, *, rounds: Optional[int] = None,
                  seed: int = 0, init_seed: Optional[int] = None,
-                 eval_every: int = 1, scan: bool = True) -> FLResult:
+                 eval_every: int = 1, scan: bool = True,
+                 system=_KEEP_SPEC_SYSTEM) -> FLResult:
     """Run one scenario through the scanned engine.
 
     rounds: override the spec's default round budget.
@@ -116,6 +127,10 @@ def run_scenario(name_or_spec, *, rounds: Optional[int] = None,
         default) the model init.
     init_seed: separate model-init seed when it must differ from the
         participation seed (fig4 reproduces the paper this way).
+    system: wall-clock model (SystemSpec / profile name / spec dict)
+        overriding the scenario's own ``system`` field; pass None to
+        disable simulation on a system-bearing spec. Unpassed, the
+        spec's own model (if any) applies.
     Remaining arguments match ``train.engine.run_experiment``.
     """
     s = get_scenario(name_or_spec)
@@ -124,12 +139,13 @@ def run_scenario(name_or_spec, *, rounds: Optional[int] = None,
         b.algo, b.params0, b.train, b.val, metric_fn=b.metric_fn,
         rounds=s.rounds if rounds is None else rounds, m=b.m, n=b.n,
         team_frac=s.team_frac, device_frac=s.device_frac, seed=seed,
-        eval_every=eval_every, scan=scan)
+        eval_every=eval_every, scan=scan,
+        system=s.system if system is _KEEP_SPEC_SYSTEM else system)
 
 
 def sweep_scenario(name_or_spec, grid=({},), seeds=(0,), *,
                    rounds: Optional[int] = None, eval_every: int = 1,
-                   mesh=None) -> FLSweepResult:
+                   mesh=None, system=_KEEP_SPEC_SYSTEM) -> FLSweepResult:
     """Run a hyperparameter grid x seeds over one scenario as a single
     vmapped program (``train.sweep.run_sweep``).
 
@@ -139,6 +155,10 @@ def sweep_scenario(name_or_spec, grid=({},), seeds=(0,), *,
     seeds: each seed gets its own model init (the tables' multi-seed
         protocol) and participation chain; the shared data comes from
         the spec's ``data_seed``.
+    system: wall-clock model(s) — one profile, or a sequence batching a
+        *system profile axis* into the same dispatch (run_sweep); None
+        disables simulation on a system-bearing spec, and unpassed the
+        scenario's own ``system`` field applies.
     """
     s = get_scenario(name_or_spec)
     if isinstance(seeds, int):
@@ -150,4 +170,5 @@ def sweep_scenario(name_or_spec, grid=({},), seeds=(0,), *,
         b.train, b.val, metric_fn=b.metric_fn,
         rounds=s.rounds if rounds is None else rounds, m=b.m, n=b.n,
         team_frac=s.team_frac, device_frac=s.device_frac,
-        eval_every=eval_every, mesh=mesh)
+        eval_every=eval_every, mesh=mesh,
+        system=s.system if system is _KEEP_SPEC_SYSTEM else system)

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.comm import CommConfig
 from repro.configs.base import PaperModelConfig
+from repro.system import SystemSpec, get_profile
 from repro.core import PerMFL
 from repro.core import baselines as B
 from repro.core.permfl import PerMFLHParams
@@ -298,6 +299,10 @@ class FLScenario:
     rounds: default global-round budget (overridable at run time).
     team_frac / device_frac: participation fractions (paper §3.1 modes).
     comm: optional CommConfig — compressed uplinks + byte accounting.
+    system: optional SystemSpec — wall-clock simulation on a named
+        device/link profile (`repro.system`); results gain a Timeline +
+        sim_seconds, and a deadline_s drops stragglers from the masks.
+        Serialized only when set, so legacy specs hash unchanged.
     data_seed: PRNG seed the federated partition is built from (model
         init / participation seeds are run-time arguments, so one data
         universe serves multi-seed sweeps — the paper's table protocol).
@@ -313,6 +318,7 @@ class FLScenario:
     team_frac: float = 1.0
     device_frac: float = 1.0
     comm: Optional[CommConfig] = None
+    system: Optional[SystemSpec] = None
     data_seed: int = 0
     family: str = ""
     paper_ref: Tuple[Tuple[str, float], ...] = ()
@@ -325,11 +331,14 @@ class FLScenario:
     # -- identity ----------------------------------------------------------
 
     def canonical(self) -> "FLScenario":
-        """The physics only: presentation metadata stripped. Two registry
-        entries with equal canonical() forms share builds and compiled
-        programs."""
+        """The physics only: presentation metadata stripped (including
+        the system profile's label — two identically-parameterized
+        profiles are one world). Two registry entries with equal
+        canonical() forms share builds and compiled programs."""
+        system = (dataclasses.replace(self.system, name="")
+                  if self.system is not None else None)
         return dataclasses.replace(self, name="", family="", paper_ref=(),
-                                   notes="")
+                                   notes="", system=system)
 
     def spec_hash(self) -> str:
         """Stable 16-hex digest of the canonical spec — the key the
@@ -341,8 +350,10 @@ class FLScenario:
     # -- (de)serialization -------------------------------------------------
 
     def to_dict(self) -> dict:
-        """Plain JSON-able dict; `from_dict` inverts it exactly."""
-        return {
+        """Plain JSON-able dict; `from_dict` inverts it exactly. The
+        ``system`` key appears only when a system model is attached, so
+        pre-existing specs (and their spec_hash) are byte-stable."""
+        d = {
             "name": self.name,
             "data": dataclasses.asdict(self.data),
             "model": dataclasses.asdict(self.model),
@@ -357,6 +368,9 @@ class FLScenario:
             "paper_ref": [[k, v] for k, v in self.paper_ref],
             "notes": self.notes,
         }
+        if self.system is not None:
+            d["system"] = self.system.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "FLScenario":
@@ -372,6 +386,8 @@ class FLScenario:
             team_frac=d["team_frac"],
             device_frac=d["device_frac"],
             comm=CommConfig(**d["comm"]) if d.get("comm") else None,
+            system=(SystemSpec.from_dict(d["system"])
+                    if d.get("system") else None),
             data_seed=d["data_seed"],
             family=d.get("family", ""),
             paper_ref=tuple(tuple(p) for p in d.get("paper_ref", ())),
@@ -404,6 +420,13 @@ class FLScenario:
         return dataclasses.replace(
             self, data=data, algo=algo,
             rounds=rounds if rounds is not None else self.rounds)
+
+    def with_system(self, profile) -> "FLScenario":
+        """This scenario on a wall-clock system model: `profile` is a
+        SystemSpec, a named profile ("wan-cellular", ...), a spec dict,
+        or None to detach."""
+        return dataclasses.replace(
+            self, system=None if profile is None else get_profile(profile))
 
     # -- materialization ---------------------------------------------------
 

@@ -1,0 +1,27 @@
+"""Wall-clock system simulator: heterogeneous devices and links, straggler
+deadlines, and time-to-accuracy (DESIGN.md §8).
+
+The repo's other subsystems count rounds and bytes; this one converts
+them into simulated *seconds*. A frozen ``SystemSpec`` models per-device
+compute rates and per-tier LAN/WAN links (sampled per round, in-graph);
+``simulate_round`` prices each round along the hierarchy's critical path
+from the comm subsystem's static byte model, and — in deadline mode —
+drops stragglers from the engine's participation masks before the
+algorithm round runs. The engine assembles the emitted times into a
+host-side ``Timeline`` next to the ``CommLedger``:
+
+    from repro.scenarios import run_scenario
+    res = run_scenario("table1/mnist/mclr/permfl", system="wan-cellular")
+    res.sim_seconds        # cumulative simulated time at each eval point
+    res.timeline.summary()
+
+Profiles: ``uniform`` | ``lan-campus`` | ``wan-cellular`` | ``edge-iot``
+(``SYSTEM_PROFILES``), each ``with_deadline(s)``-able.
+"""
+from repro.system.simulate import sample_links, simulate_round
+from repro.system.spec import (SYSTEM_PROFILES, RoundWorkload, SystemSpec,
+                               get_profile, workload_for)
+from repro.system.timeline import Timeline
+
+__all__ = ["SYSTEM_PROFILES", "RoundWorkload", "SystemSpec", "Timeline",
+           "get_profile", "sample_links", "simulate_round", "workload_for"]

@@ -1,0 +1,109 @@
+"""In-graph wall-clock simulation of one global round (DESIGN.md §8).
+
+Everything here is traceable: the engine calls ``simulate_round`` inside
+its ``lax.scan`` round body, with the SystemSpec's float leaves as traced
+operands (so sweeps can vmap over system profiles) and the per-round PRNG
+key from the scan carry (so timelines are deterministic given
+(SystemSpec, seed) and stragglers decorrelate across rounds).
+
+The hierarchy-aware critical-path model prices one round as
+
+    t_round =  max_i  [ wan_lat + full_bytes / wan_bw_i ]        broadcast
+             + max_i  K * max_j [ compute_ij
+                                  + 2 lan_lat
+                                  + (full + comp bytes) / lan_bw_ij ]
+             + max_i  [ wan_lat + comp_bytes / wan_bw_i ]        uplink
+
+with i over *participating* teams and j over *participating* devices:
+the server broadcast completes when the slowest surviving team has the
+model, each team repeats K LAN phases paced by its slowest surviving
+device (downlink anchor + L local steps of compute + compressed uplink),
+and the round closes when the slowest surviving team's compressed WAN
+uplink lands. Wire sizes come from the comm subsystem's static byte
+model (``RoundWorkload``), so every compressor changes *time*.
+
+Deadline mode: when ``deadline_s > 0``, any device whose own critical
+chain (its team's WAN down + its K LAN phases + its team's WAN up) would
+finish after the deadline is dropped from the participation masks before
+the algorithm round runs; teams whose devices all miss are dropped with
+them. If everyone would miss, the single fastest chain is kept so the
+round stays well-defined (``core.participation.keep_fastest``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.participation import keep_fastest
+from repro.system.spec import RoundWorkload
+
+__all__ = ["sample_links", "simulate_round"]
+
+_MBPS_TO_BPS = 125_000.0   # megabits/s -> bytes/s
+
+
+def _lognormal(key, mean, sigma, shape):
+    # mean-preserving lognormal: E[mean * exp(sigma z - sigma^2/2)] = mean
+    z = jax.random.normal(key, shape)
+    return mean * jnp.exp(sigma * z - 0.5 * sigma * sigma)
+
+
+def sample_links(leaves: dict, key, m: int, n: int):
+    """One round's draws from a SystemSpec's distributions.
+
+    leaves: the spec's ``tree_floats()`` dict (traced or concrete).
+    Returns (rate (M, N) FLOP/s, lan_bps (M, N), wan_bps (M,)).
+    """
+    kc, kl, kw = jax.random.split(key, 3)
+    rate = _lognormal(kc, leaves["compute_gflops"] * 1e9,
+                      leaves["compute_sigma"], (m, n))
+    lan = _lognormal(kl, leaves["lan_mbps"] * _MBPS_TO_BPS,
+                     leaves["lan_sigma"], (m, n))
+    wan = _lognormal(kw, leaves["wan_mbps"] * _MBPS_TO_BPS,
+                     leaves["wan_sigma"], (m,))
+    return rate, lan, wan
+
+
+def simulate_round(leaves: dict, wl: RoundWorkload, key, team_mask,
+                   device_mask):
+    """Simulate one round: deadline-thinned masks + critical-path time.
+
+    leaves: SystemSpec float leaves (traced operands).
+    wl: the static RoundWorkload (loop counts, wire bytes).
+    key: this round's PRNG key (fresh split from the scan carry).
+    team_mask (M,) / device_mask (M, N): sampled participation in {0,1}.
+
+    Returns ``(team_mask', device_mask', t_round, dropped_teams,
+    dropped_devices)`` — masks after deadline drops (device mask
+    team-gated), the realized round time in simulated seconds over the
+    survivors, and int32 counts of deadline casualties. With
+    ``deadline_s == 0`` the masks pass through bit-identically.
+    """
+    m, n = device_mask.shape
+    rate, lan_bps, wan_bps = sample_links(leaves, key, m, n)
+    lan_lat = leaves["lan_latency_ms"] * 1e-3
+    wan_lat = leaves["wan_latency_ms"] * 1e-3
+
+    work = wl.local_steps * wl.n_params * leaves["flops_per_param"]
+    t_iter = (work / rate
+              + 2.0 * lan_lat
+              + (wl.full_bytes + wl.comp_bytes) / lan_bps)   # (M, N)
+    t_down = wan_lat + wl.full_bytes / wan_bps               # (M,)
+    t_up = wan_lat + wl.comp_bytes / wan_bps                 # (M,)
+    chain = t_down[:, None] + wl.k_team * t_iter + t_up[:, None]
+
+    gated = device_mask * team_mask[:, None]
+    deadline = jnp.where(leaves["deadline_s"] > 0.0,
+                         leaves["deadline_s"], jnp.inf)
+    ok = (chain <= deadline).astype(jnp.float32)
+    dm = gated * ok
+    tm = team_mask * (jnp.sum(dm, axis=1) > 0).astype(jnp.float32)
+    tm, dm = keep_fastest(tm, dm, chain, gated)
+
+    t_bcast = jnp.max(t_down * tm)
+    t_lan = jnp.max(wl.k_team * jnp.max(t_iter * dm, axis=1) * tm)
+    t_round = t_bcast + t_lan + jnp.max(t_up * tm)
+
+    dropped_t = (jnp.sum(team_mask) - jnp.sum(tm)).astype(jnp.int32)
+    dropped_d = (jnp.sum(gated) - jnp.sum(dm)).astype(jnp.int32)
+    return tm, dm, t_round, dropped_t, dropped_d

@@ -1,0 +1,60 @@
+"""Host-side `Timeline`: per-round simulated time, next to `CommLedger`.
+
+The split mirrors the byte accounting (DESIGN.md §3/§8): the in-graph
+round program emits one simulated round time and the deadline casualty
+counts as scan outputs, and the engine assembles them into a Timeline on
+the host after the dispatch — nothing here runs on the hot path. Where
+``CommLedger`` answers "what did the run cost in bytes", ``Timeline``
+answers "what did it cost in seconds" — and joining it with a metric
+history gives time-to-accuracy curves (``FLResult.sim_seconds``,
+``benchmarks/fig_time_to_accuracy.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["Timeline"]
+
+
+@dataclass
+class Timeline:
+    """One run's simulated clock: per-round durations and deadline drops.
+
+    profile: the SystemSpec's name (presentation).
+    round_seconds: simulated duration of each global round.
+    dropped_teams / dropped_devices: per-round counts of participants
+        removed by the straggler deadline (all zeros without one).
+    """
+    profile: str = ""
+    round_seconds: list = field(default_factory=list)
+    dropped_teams: list = field(default_factory=list)
+    dropped_devices: list = field(default_factory=list)
+
+    def __len__(self):
+        return len(self.round_seconds)
+
+    def total_seconds(self) -> float:
+        """Simulated wall-clock of the whole run."""
+        return float(np.sum(self.round_seconds))
+
+    def cum_seconds(self) -> np.ndarray:
+        """Cumulative simulated time after each round (monotone
+        non-decreasing — round durations are strictly positive)."""
+        return np.cumsum(np.asarray(self.round_seconds, dtype=np.float64))
+
+    def stragglers(self) -> int:
+        """Total device drops across the run (deadline casualties)."""
+        return int(np.sum(self.dropped_devices))
+
+    def summary(self) -> dict:
+        """Flat dict of totals — benchmark CSV material."""
+        rs = np.asarray(self.round_seconds, dtype=np.float64)
+        return {"profile": self.profile,
+                "rounds": len(self),
+                "sim_seconds": float(rs.sum()),
+                "mean_round_seconds": float(rs.mean()) if len(rs) else 0.0,
+                "max_round_seconds": float(rs.max()) if len(rs) else 0.0,
+                "dropped_teams": int(np.sum(self.dropped_teams)),
+                "dropped_devices": int(np.sum(self.dropped_devices))}

@@ -22,6 +22,15 @@ outputs and feed `CommLedger` post-hoc, counting only devices whose team
 also participated (device_mask * team_mask[:, None] — the legacy loop's
 ungated `dm.sum()` overcounted).
 
+A wall-clock system model (`repro.system`) rides the same machinery:
+when one is given, the round body simulates each round's duration along
+the hierarchy's critical path (and, in deadline mode, thins the
+participation masks by dropping stragglers *before* the algorithm round
+runs), the simulated times come back as scan outputs exactly like the
+gated mask counts, and the host assembles a `Timeline` next to the
+`CommLedger` — `FLResult.sim_seconds` holds the cumulative simulated
+time at each eval point, so accuracy-vs-seconds curves fall out.
+
 ``scan=False`` runs the same semantics as a per-round host-dispatch loop
 (the legacy execution model) — kept for equivalence tests and for
 benchmarks/bench_engine.py to quantify the dispatch win.
@@ -39,6 +48,8 @@ import numpy as np
 
 from repro.comm import CommLedger
 from repro.core.participation import sample_masks
+from repro.system import (Timeline, get_profile, simulate_round,
+                          workload_for)
 
 __all__ = ["FLResult", "run_experiment"]
 
@@ -46,16 +57,30 @@ __all__ = ["FLResult", "run_experiment"]
 @dataclass
 class FLResult:
     """One experiment's outcome: metric histories (one entry per eval
-    point), wall time, final algorithm state, optional per-tier byte
-    ledger, and realized (team-gated) per-round participation counts."""
+    point), wall time (compile vs steady-state split), final algorithm
+    state, optional per-tier byte ledger and simulated-time `Timeline`,
+    and realized (team-gated) per-round participation counts.
+
+    ``seconds = compile_seconds + run_seconds`` always holds:
+    ``compile_seconds`` is wall time until the first jitted dispatch
+    returns — dominated by trace+compile on a cold program cache, by
+    that dispatch's execution on a warm one — and ``run_seconds`` is
+    everything after. A scanned experiment issues only 1-2 dispatches,
+    so ``run_seconds`` is near 0 there (and on a cold cache a remainder
+    chunk's own compile lands in it); steady-state throughput is a warm
+    rerun's ``seconds`` (what benchmarks/bench_engine.py reports)."""
     pm_acc: list = field(default_factory=list)   # per-eval personalized acc
     tm_acc: list = field(default_factory=list)
     gm_acc: list = field(default_factory=list)
     train_loss: list = field(default_factory=list)
-    seconds: float = 0.0
+    seconds: float = 0.0                 # total wall time (compile + run)
+    compile_seconds: float = 0.0         # first dispatch (trace/compile)
+    run_seconds: float = 0.0             # post-first-dispatch remainder
     state: Any = None    # final algorithm state (set for every algorithm)
     comm: Optional[CommLedger] = None    # per-tier byte ledger (comm runs)
     participation: list = field(default_factory=list)  # (teams, devices)/rnd
+    timeline: Optional[Timeline] = None  # per-round simulated clock
+    sim_seconds: list = field(default_factory=list)  # cum sim time @ evals
 
     def last(self, which="pm"):
         """Final-eval value of metric `which` ('pm'|'tm'|'gm'); NaN if the
@@ -72,6 +97,10 @@ class FLResult:
 _METRIC_FIELDS = {"pm": "pm_acc", "tm": "tm_acc", "gm": "gm_acc",
                   "train_loss": "train_loss"}
 
+# fold_in constant separating the system simulator's per-round PRNG
+# stream from the participation-sampling stream (ASCII "SYST")
+_SYSTEM_SALT = 0x53595354
+
 
 def check_participation(algo, team_frac: float, device_frac: float):
     """Reject sampled participation for algorithms that ignore the masks —
@@ -85,25 +114,50 @@ def check_participation(algo, team_frac: float, device_frac: float):
             "masks that never gate anything")
 
 
-def _round_body(algo, m, n, team_frac, device_frac):
-    """Scan step: in-graph mask sampling (key in the carry), one algorithm
-    round, realized gated participation counts as outputs."""
+def _round_body(algo, m, n, team_frac, device_frac, system=None):
+    """Scan step: in-graph mask sampling (key in the carry), optional
+    system simulation (round time + deadline mask thinning), one
+    algorithm round, and a dict of realized per-round outputs — gated
+    participation counts, plus simulated time and straggler counts when
+    a system model is active.
+
+    system: None, or a static ``(SystemSpec skeleton, RoundWorkload)``
+    pair; the spec's float values arrive as the traced ``sleaves``
+    operand (see `repro.system.spec.SystemSpec.tree_floats`).
+    """
     sampled = team_frac < 1.0 or device_frac < 1.0
 
-    def body(carry, _, data):
+    def body(carry, _, data, sleaves=None):
         state, key = carry
         if sampled:
             key, sub = jax.random.split(key)
             tm, dm = sample_masks(sub, m, n, team_frac=team_frac,
                                   device_frac=device_frac)
         else:
+            sub = None
             tm = jnp.ones((m,), jnp.float32)
             dm = jnp.ones((m, n), jnp.float32)
+        out = {}
+        if system is not None:
+            _, workload = system
+            if sampled:
+                # fold the system stream out of this round's mask key
+                # instead of advancing the carry chain: the sampled mask
+                # sequence stays bit-identical to a system-free run, so
+                # a no-deadline system model is pure measurement under
+                # every participation mode
+                skey = jax.random.fold_in(sub, _SYSTEM_SALT)
+            else:
+                key, skey = jax.random.split(key)
+            tm, dm, t_round, drop_t, drop_d = simulate_round(
+                sleaves, workload, skey, tm, dm)
+            out.update(t_round=t_round, dropped_teams=drop_t,
+                       dropped_devices=drop_d)
         state = algo.round(state, data, team_mask=tm, device_mask=dm)
         gated = dm * tm[:, None]
-        counts = (jnp.sum(tm).astype(jnp.int32),
-                  jnp.sum(gated).astype(jnp.int32))
-        return (state, key), counts
+        out.update(teams=jnp.sum(tm).astype(jnp.int32),
+                   devices=jnp.sum(gated).astype(jnp.int32))
+        return (state, key), out
 
     return body
 
@@ -118,36 +172,45 @@ def hparam_skeleton(algo):
     return rebuild({k: 0.0 for k in leaves}), leaves
 
 
-def _chunk_runner(skel, metric_fn, m, n, team_frac, device_frac):
+def _chunk_runner(skel, metric_fn, m, n, team_frac, device_frac,
+                  system=None):
     """The traceable heart of an experiment — shared verbatim by the
     per-experiment program below and train.sweep's vmapped grid program:
     rebuild the algorithm from its hparam leaves, then scan `n_steps`
-    chunks of `length` rounds with a traced eval after each chunk."""
+    chunks of `length` rounds with a traced eval after each chunk.
+    ``sleaves`` (the system model's float values, when `system` names a
+    static skeleton/workload pair) is a traced operand like the hparam
+    leaves — sweeps stack system profiles the same way they stack
+    hyperparameters."""
     _, rebuild = skel.tree_hparams()
 
-    def run_chunks(hleaves, state, key, tr, va, *, length, n_steps):
+    def run_chunks(hleaves, state, key, tr, va, *, sleaves=None, length,
+                   n_steps):
         algo = rebuild(hleaves)
-        body = _round_body(algo, m, n, team_frac, device_frac)
+        body = _round_body(algo, m, n, team_frac, device_frac, system)
 
         def chunk(carry, _):
             state, key = carry
-            (state, key), counts = jax.lax.scan(
-                lambda c, x: body(c, x, tr), (state, key), length=length)
+            (state, key), outs = jax.lax.scan(
+                lambda c, x: body(c, x, tr, sleaves), (state, key),
+                length=length)
             return (state, key), (algo.eval(state, tr, va, metric_fn),
-                                  counts)
+                                  outs)
 
         return jax.lax.scan(chunk, (state, key), length=n_steps)
 
     return run_chunks
 
 
-# Compiled programs are cached per (hparam skeleton, metric_fn, dims):
-# every experiment with the same static structure — whatever its float
-# hyperparameter values — shares one compile and pays one dispatch.
+# Compiled programs are cached per (hparam skeleton, metric_fn, dims,
+# system skeleton): every experiment with the same static structure —
+# whatever its float hyperparameter or system-profile values — shares
+# one compile and pays one dispatch.
 @functools.lru_cache(maxsize=128)
-def _scan_program(skel, metric_fn, m, n, team_frac, device_frac):
+def _scan_program(skel, metric_fn, m, n, team_frac, device_frac,
+                  system=None):
     run_chunks = _chunk_runner(skel, metric_fn, m, n, team_frac,
-                               device_frac)
+                               device_frac, system)
     return functools.partial(jax.jit, static_argnames=(
         "length", "n_steps"))(run_chunks)
 
@@ -159,11 +222,35 @@ def _eval_program(skel, metric_fn):
         state, tr, va, metric_fn))
 
 
+def eval_points(rounds: int, eval_every: int) -> list:
+    """1-based round indices at which the engine evaluates: every
+    `eval_every` rounds plus the final round. Shared with train.sweep so
+    `FLResult.sim_seconds` aligns with the metric histories."""
+    n_chunks, rem = divmod(rounds, eval_every)
+    return [eval_every * (k + 1) for k in range(n_chunks)] \
+        + ([rounds] if rem else [])
+
+
+def assemble_timeline(res: FLResult, profile: str, round_times, drop_t,
+                      drop_d, rounds: int, eval_every: int) -> None:
+    """Attach a host-side Timeline (and the cumulative simulated time at
+    each eval point) to `res` from per-round scan outputs. Shared with
+    train.sweep."""
+    res.timeline = Timeline(
+        profile=profile,
+        round_seconds=[float(x) for x in round_times],
+        dropped_teams=[int(x) for x in drop_t],
+        dropped_devices=[int(x) for x in drop_d])
+    cum = res.timeline.cum_seconds()
+    res.sim_seconds = [float(cum[p - 1]) for p in
+                       eval_points(rounds, eval_every)]
+
+
 def run_experiment(algo, params0, train_data, val_data, *,
                    metric_fn: Callable, rounds: int, m: int, n: int,
                    team_frac: float = 1.0, device_frac: float = 1.0,
-                   seed: int = 0, eval_every: int = 1,
-                   scan: bool = True) -> FLResult:
+                   seed: int = 0, eval_every: int = 1, scan: bool = True,
+                   system=None) -> FLResult:
     """Drive `algo` for `rounds` global rounds, evaluating every
     `eval_every` rounds (and after the final round). Returns an FLResult
     whose metric histories hold one entry per eval point.
@@ -171,52 +258,83 @@ def run_experiment(algo, params0, train_data, val_data, *,
     scan=True compiles the whole experiment into one program (chunked
     lax.scan); scan=False dispatches round-by-round from the host with
     identical semantics — same mask PRNG chain, same eval points.
+    system: optional wall-clock model (a `repro.system.SystemSpec`, a
+    profile name, or a spec dict): simulate each round's duration and —
+    in deadline mode — drop stragglers from the participation masks;
+    the result grows a `Timeline` and `sim_seconds` history.
     """
     check_participation(algo, team_frac, device_frac)
     state = algo.init_state(params0, m, n)
     key = jax.random.PRNGKey(seed)
     n_chunks, rem = divmod(rounds, eval_every)
 
+    sys_key = sleaves = None
+    if system is not None:
+        system = get_profile(system)
+        sys_key = (system.skeleton(), workload_for(algo, params0))
+        sleaves, _ = system.tree_floats()
+
     skel, hleaves = hparam_skeleton(algo)
-    scanned = _scan_program(skel, metric_fn, m, n, team_frac, device_frac)
-    round_body = _round_body(algo, m, n, team_frac, device_frac)
+    scanned = _scan_program(skel, metric_fn, m, n, team_frac, device_frac,
+                            sys_key)
+    round_body = _round_body(algo, m, n, team_frac, device_frac, sys_key)
     eval_jit = _eval_program(skel, metric_fn)
 
     res = FLResult()
     ledger = algo.make_ledger(params0)
+    outs_flat = {}          # output name -> flat per-round list
     t0 = time.time()
+    t_first = None
 
-    def record(metrics_hist, counts_hist):
-        """metrics_hist: dict of (chunks,) arrays; counts: (chunks, len)."""
+    def record(metrics_hist, outs):
+        """metrics_hist: dict of (chunks,) arrays; outs: dict of
+        (chunks, length) per-round output arrays."""
         for k, v in metrics_hist.items():
             getattr(res, _METRIC_FIELDS[k]).extend(
                 float(x) for x in np.asarray(v))
-        tc, dc = counts_hist
-        res.participation.extend(
-            zip(np.asarray(tc).reshape(-1).tolist(),
-                np.asarray(dc).reshape(-1).tolist()))
+        for k, v in outs.items():
+            outs_flat.setdefault(k, []).extend(
+                np.asarray(v).reshape(-1).tolist())
 
     if scan:
         for length, n_steps in ((eval_every, n_chunks), (rem, 1)):
             if length == 0 or n_steps == 0:
                 continue
-            (state, key), (metrics, counts) = scanned(
-                hleaves, state, key, train_data, val_data, length=length,
-                n_steps=n_steps)
-            record(metrics, counts)
+            (state, key), (metrics, outs) = scanned(
+                hleaves, state, key, train_data, val_data,
+                sleaves=sleaves, length=length, n_steps=n_steps)
+            if t_first is None:
+                jax.block_until_ready(state)
+                t_first = time.time()
+            record(metrics, outs)
     else:
         for t in range(rounds):
-            (state, key), counts = round_body((state, key), None,
-                                              train_data)
-            res.participation.append(
-                (int(counts[0]), int(counts[1])))
+            (state, key), outs = round_body((state, key), None,
+                                            train_data, sleaves)
+            if t_first is None:
+                jax.block_until_ready(state)
+                t_first = time.time()
+            for k, v in outs.items():
+                outs_flat.setdefault(k, []).append(
+                    float(v) if k == "t_round" else int(v))
             if (t + 1) % eval_every == 0 or t == rounds - 1:
                 metrics = eval_jit(hleaves, state, train_data, val_data)
                 for k, v in metrics.items():
                     getattr(res, _METRIC_FIELDS[k]).append(float(v))
 
-    res.seconds = time.time() - t0
+    t_end = time.time()
+    res.compile_seconds = (t_first if t_first is not None else t_end) - t0
+    res.run_seconds = t_end - (t_first if t_first is not None else t_end)
+    res.seconds = res.compile_seconds + res.run_seconds
     res.state = state
+
+    res.participation = list(zip(
+        [int(x) for x in outs_flat.get("teams", [])],
+        [int(x) for x in outs_flat.get("devices", [])]))
+    if system is not None:
+        assemble_timeline(res, system.name, outs_flat["t_round"],
+                          outs_flat["dropped_teams"],
+                          outs_flat["dropped_devices"], rounds, eval_every)
 
     if ledger is not None:
         for n_teams, n_devices in res.participation:

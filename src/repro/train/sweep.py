@@ -21,6 +21,16 @@ participation-sampling PRNG chain (exactly run_experiment's) and
 (b) optionally the model init, when ``params0`` is a callable
 ``seed -> params`` evaluated per config on the host.
 
+System profiles (`repro.system.SystemSpec`) ride the axis too: a spec
+splits into float leaves exactly like hyperparameters
+(``tree_floats``), so ``system=[...]`` stacks several wall-clock worlds
+— LAN campus vs cellular WAN vs IoT edge — into (S,) operands of the
+same program, and each config comes back with its own simulated
+`Timeline` (DESIGN.md §8). For grids whose *static* structure differs —
+e.g. different compressors, which change the round graph itself —
+``run_multi_sweep`` fuses several prepared sweeps into one jitted
+program so they still cost a single dispatch.
+
 On hardware, the (S,) axis shards over the mesh's ``sweep`` axis — the
 repurposed pod/DCN tier, since configs never communicate — while each
 config's (M, N) state shards over (data, model) as before; see
@@ -40,10 +50,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.train.engine import (_METRIC_FIELDS, FLResult, _chunk_runner,
+from repro.system import get_profile
+from repro.train.engine import (_METRIC_FIELDS, FLResult,
+                                assemble_timeline, _chunk_runner,
                                 check_participation, hparam_skeleton)
 
-__all__ = ["FLSweepResult", "grid_product", "run_sweep"]
+__all__ = ["FLSweepResult", "grid_product", "run_multi_sweep", "run_sweep"]
 
 
 def grid_product(**axes) -> list:
@@ -59,14 +71,18 @@ def grid_product(**axes) -> list:
 
 @dataclass
 class FLSweepResult:
-    """One vmapped sweep: S = len(grid) * len(seeds) configurations.
+    """One vmapped sweep: S = len(grid) * len(seeds) * len(profiles)
+    configurations.
 
     configs: resolved per-config dicts — every sweepable hyperparameter
-        plus the config's ``seed`` — in grid-major order (all seeds of
-        grid[0], then grid[1], ...).
+        plus the config's ``seed`` (and ``system`` profile name when
+        system models ride the axis) — in grid-major order (all seeds of
+        grid[0], then grid[1], ...; profiles innermost).
     results: one FLResult per config (trajectories, final state slice,
-        participation, per-config CommLedger). ``FLResult.seconds`` is
-        the sweep wall time amortized over S.
+        participation, per-config CommLedger and Timeline). Wall times
+        on each FLResult are the sweep's, amortized over S, with the
+        same ``seconds = compile_seconds + run_seconds`` split as
+        ``run_experiment``.
     state_stacked: final-state pytree with the leading (S,) config axis
         intact (sharded over the mesh's sweep axis when one was given).
     dispatches: jitted calls that executed the whole sweep (1, or 2 when
@@ -76,6 +92,8 @@ class FLSweepResult:
     results: list = field(default_factory=list)
     state_stacked: Any = None
     seconds: float = 0.0
+    compile_seconds: float = 0.0
+    run_seconds: float = 0.0
     dispatches: int = 0
 
     def __len__(self):
@@ -97,21 +115,26 @@ class FLSweepResult:
 
 
 # One compiled program per (hparam skeleton, metric_fn, dims,
-# participation) — every grid/seed stacking with matching static
-# structure reuses it, whatever the hyperparameter values are (they are
-# traced operands), and each vmap lane runs the engine's chunk program
-# (_chunk_runner) verbatim.
+# participation, system skeleton) — every grid/seed/profile stacking
+# with matching static structure reuses it, whatever the hyperparameter
+# or system values are (they are traced operands), and each vmap lane
+# runs the engine's chunk program (_chunk_runner) verbatim.
 @functools.lru_cache(maxsize=64)
-def _sweep_program(skel, metric_fn, m, n, team_frac, device_frac):
+def _sweep_program(skel, metric_fn, m, n, team_frac, device_frac,
+                   sys_key=None):
     run_chunks = _chunk_runner(skel, metric_fn, m, n, team_frac,
-                               device_frac)
+                               device_frac, sys_key)
 
     @functools.partial(jax.jit, static_argnames=("length", "n_steps"))
-    def swept(hstack, states, keys, tr, va, *, length, n_steps):
-        """vmap over the (S,) axis of (hstack, states, keys)."""
-        return jax.vmap(lambda h, s, k: run_chunks(
-            h, s, k, tr, va, length=length, n_steps=n_steps))(
-                hstack, states, keys)
+    def swept(hstack, states, keys, sstack, tr, va, *, length, n_steps):
+        """vmap over the (S,) axis of (hstack, states, keys[, sstack])."""
+        if sys_key is None:
+            return jax.vmap(lambda h, s, k: run_chunks(
+                h, s, k, tr, va, length=length, n_steps=n_steps))(
+                    hstack, states, keys)
+        return jax.vmap(lambda h, s, k, sl: run_chunks(
+            h, s, k, tr, va, sleaves=sl, length=length,
+            n_steps=n_steps))(hstack, states, keys, sstack)
 
     return swept
 
@@ -121,11 +144,154 @@ def _stack_trees(trees):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
+@dataclass
+class _Prepared:
+    """One sweep's validated, stacked operands + static program key."""
+    algo: Any
+    skel: Any
+    sys_key: Any               # (SystemSpec skeleton, RoundWorkload) | None
+    team_frac: float
+    device_frac: float
+    hstack: dict
+    sstack: Optional[dict]
+    states: Any
+    keys: Any
+    configs: list
+    profiles: list             # per-combo SystemSpec | None
+    ledger_params: Any
+
+
+def _prepare(algo, grid, seeds, params0, m, n, team_frac, device_frac,
+             system) -> _Prepared:
+    """Validate one sweep and stack its (S,) operands (shared by
+    run_sweep and run_multi_sweep)."""
+    if isinstance(grid, dict):
+        grid = grid_product(**grid)
+    grid = [dict(g) for g in grid]
+    if not grid:
+        raise ValueError("empty grid: pass [{}] for a seeds-only sweep")
+    if isinstance(seeds, int):
+        seeds = (seeds,)
+    seeds = tuple(int(s) for s in seeds)
+    if not seeds:
+        raise ValueError("empty seeds: pass at least one PRNG seed")
+    check_participation(algo, team_frac, device_frac)
+
+    if system is None:
+        profiles = [None]
+    else:
+        if isinstance(system, (str, dict)) or not isinstance(
+                system, (list, tuple)):
+            system = [system]
+        profiles = [get_profile(p) for p in system]
+        # unreachable today — every SystemSpec skeleton zeroes the same
+        # all-float fields — but guards the day the spec grows static
+        # structure (e.g. a distribution-kind switch), which would
+        # silently compile the wrong program for mixed profiles
+        skels = {p.skeleton() for p in profiles}
+        if len(skels) != 1:
+            raise ValueError(
+                "system profiles on one sweep axis must share a static "
+                f"skeleton; got {len(skels)} distinct ones")
+
+    leaves0, _ = algo.tree_hparams()
+    for g in grid:
+        unknown = set(g) - set(leaves0)
+        if unknown:
+            raise ValueError(
+                f"unknown sweepable hyperparameter(s) {sorted(unknown)}; "
+                f"{type(algo).__name__} sweeps over {sorted(leaves0)}")
+
+    combos = [(g, s, p) for g in grid for s in seeds for p in profiles]
+    configs = [dict(leaves0, **g, seed=s,
+                    **({"system": p.name} if p is not None else {}))
+               for g, s, p in combos]
+    hstack = {k: jnp.asarray([float(dict(leaves0, **g)[k])
+                              for g, _, _ in combos], jnp.float32)
+              for k in leaves0}
+    keys = jnp.stack([jax.random.PRNGKey(s) for _, s, _ in combos])
+
+    sys_key = sstack = None
+    if profiles[0] is not None:
+        sys_leaves = [p.tree_floats()[0] for _, _, p in combos]
+        sstack = {k: jnp.asarray([sl[k] for sl in sys_leaves], jnp.float32)
+                  for k in sys_leaves[0]}
+
+    if callable(params0):
+        p_by_seed = {s: params0(s) for s in seeds}
+        # one init per seed, however many grid points share it
+        st_by_seed = {s: algo.init_state(p_by_seed[s], m, n)
+                      for s in seeds}
+        states = _stack_trees([st_by_seed[s] for _, s, _ in combos])
+        ledger_params = p_by_seed[seeds[0]]
+    else:
+        state0 = algo.init_state(params0, m, n)
+        S = len(combos)
+        states = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), state0)
+        ledger_params = params0
+
+    if profiles[0] is not None:
+        from repro.system import workload_for
+        sys_key = (profiles[0].skeleton(),
+                   workload_for(algo, ledger_params))
+
+    skel, _ = hparam_skeleton(algo)
+    return _Prepared(algo=algo, skel=skel, sys_key=sys_key,
+                     team_frac=team_frac, device_frac=device_frac,
+                     hstack=hstack, sstack=sstack, states=states,
+                     keys=keys, configs=configs,
+                     profiles=[p for _, _, p in combos],
+                     ledger_params=ledger_params)
+
+
+def _collect(prep: _Prepared, states, metric_hist, outs_hist, *,
+             seconds, compile_seconds, run_seconds, dispatches, rounds,
+             eval_every) -> FLSweepResult:
+    """Slice one sweep's stacked outputs into per-config FLResults.
+
+    metric_hist: field -> list of (S, n_steps) arrays; outs_hist: list of
+    per-segment dicts of (S, n_steps, length) per-round output arrays.
+    """
+    S = len(prep.configs)
+    out = FLSweepResult(configs=prep.configs, state_stacked=states,
+                        seconds=seconds, compile_seconds=compile_seconds,
+                        run_seconds=run_seconds, dispatches=dispatches)
+    for i in range(S):
+        res = FLResult(seconds=seconds / S,
+                       compile_seconds=compile_seconds / S,
+                       run_seconds=run_seconds / S)
+        for k, segs in metric_hist.items():
+            getattr(res, _METRIC_FIELDS[k]).extend(
+                float(x) for seg in segs for x in seg[i])
+        flat = {}
+        for seg in outs_hist:
+            for k, v in seg.items():
+                flat.setdefault(k, []).extend(v[i].reshape(-1).tolist())
+        res.participation = list(zip([int(x) for x in flat["teams"]],
+                                     [int(x) for x in flat["devices"]]))
+        if "t_round" in flat:
+            assemble_timeline(res, prep.profiles[i].name, flat["t_round"],
+                              flat["dropped_teams"],
+                              flat["dropped_devices"], rounds, eval_every)
+        res.state = jax.tree.map(lambda x: x[i], states)
+        ledger = prep.algo.make_ledger(prep.ledger_params)
+        if ledger is not None:
+            for n_teams, n_devices in res.participation:
+                prep.algo.log_comm_round(ledger, n_teams=n_teams,
+                                         n_devices=n_devices)
+            res.comm = ledger
+        out.results.append(res)
+    return out
+
+
 def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
               metric_fn: Callable, rounds: int, m: int, n: int,
               team_frac: float = 1.0, device_frac: float = 1.0,
-              eval_every: int = 1, mesh=None) -> FLSweepResult:
-    """Run ``len(grid) * len(seeds)`` experiments as one compiled program.
+              eval_every: int = 1, mesh=None,
+              system=None) -> FLSweepResult:
+    """Run ``len(grid) * len(seeds) [* len(system)]`` experiments as one
+    compiled program.
 
     algo: the template FLAlgorithm instance — its float hyperparameters
         (``algo.tree_hparams()``) are the sweepable names; static config
@@ -141,52 +307,21 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
     mesh: optional Mesh with a ``sweep`` axis — inputs are placed so the
         (S,) config axis shards across it and XLA runs configurations on
         disjoint devices (``launch.mesh.make_sweep_mesh``).
+    system: optional wall-clock model(s): one SystemSpec / profile name /
+        spec dict, or a sequence of them — a sequence adds a *system
+        profile* axis to the sweep (innermost), every profile sharing the
+        compiled program via its float-leaf split. Each config's FLResult
+        gains a simulated `Timeline` + `sim_seconds`.
     Remaining arguments match ``run_experiment``.
 
     Returns an FLSweepResult; equivalence with the sequential loop
     ``[run_experiment(rebuild(cfg), ...) for cfg in configs]`` is pinned
     by tests/test_sweep.py.
     """
-    if isinstance(grid, dict):
-        grid = grid_product(**grid)
-    grid = [dict(g) for g in grid]
-    if not grid:
-        raise ValueError("empty grid: pass [{}] for a seeds-only sweep")
-    if isinstance(seeds, int):
-        seeds = (seeds,)
-    seeds = tuple(int(s) for s in seeds)
-    if not seeds:
-        raise ValueError("empty seeds: pass at least one PRNG seed")
-    check_participation(algo, team_frac, device_frac)
-
-    leaves0, _ = algo.tree_hparams()
-    for g in grid:
-        unknown = set(g) - set(leaves0)
-        if unknown:
-            raise ValueError(
-                f"unknown sweepable hyperparameter(s) {sorted(unknown)}; "
-                f"{type(algo).__name__} sweeps over {sorted(leaves0)}")
-
-    combos = [(g, s) for g in grid for s in seeds]   # grid-major
-    configs = [dict(leaves0, **g, seed=s) for g, s in combos]
-    hstack = {k: jnp.asarray([float(dict(leaves0, **g)[k])
-                              for g, _ in combos], jnp.float32)
-              for k in leaves0}
-    keys = jnp.stack([jax.random.PRNGKey(s) for _, s in combos])
-
-    if callable(params0):
-        p_by_seed = {s: params0(s) for s in seeds}
-        # one init per seed, however many grid points share it
-        st_by_seed = {s: algo.init_state(p_by_seed[s], m, n)
-                      for s in seeds}
-        states = _stack_trees([st_by_seed[s] for _, s in combos])
-        ledger_params = p_by_seed[seeds[0]]
-    else:
-        state0 = algo.init_state(params0, m, n)
-        S = len(combos)
-        states = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), state0)
-        ledger_params = params0
+    prep = _prepare(algo, grid, seeds, params0, m, n, team_frac,
+                    device_frac, system)
+    states, keys, hstack, sstack = (prep.states, prep.keys, prep.hstack,
+                                    prep.sstack)
 
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -199,6 +334,8 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
             return jax.tree.map(jax.device_put, tree, specs)
 
         states, hstack = place(states), place(hstack)
+        if sstack is not None:
+            sstack = place(sstack)
         # keys are (S, 2) uint32: place explicitly — the shape heuristic
         # would mistake the 2 key words for a team axis when m == 2
         keys = jax.device_put(keys, NamedSharding(mesh, P("sweep", None)))
@@ -208,42 +345,135 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
         val_data = jax.tree.map(lambda x: jax.device_put(x, repl),
                                 val_data)
 
-    skel, _ = hparam_skeleton(algo)
-    swept = _sweep_program(skel, metric_fn, m, n, team_frac, device_frac)
+    swept = _sweep_program(prep.skel, metric_fn, m, n, team_frac,
+                           device_frac, prep.sys_key)
     n_chunks, rem = divmod(rounds, eval_every)
 
     metric_hist = {}           # field -> list of (S, n_steps) arrays
-    count_hist = []            # list of ((S, n_steps, len), (S, ...)) pairs
+    outs_hist = []             # list of per-segment output dicts
     dispatches = 0
     t0 = time.time()
+    t_first = None
     for length, n_steps in ((eval_every, n_chunks), (rem, 1)):
         if length == 0 or n_steps == 0:
             continue
-        (states, keys), (metrics, counts) = swept(
-            hstack, states, keys, train_data, val_data, length=length,
-            n_steps=n_steps)
+        (states, keys), (metrics, outs) = swept(
+            hstack, states, keys, sstack, train_data, val_data,
+            length=length, n_steps=n_steps)
+        if t_first is None:
+            jax.block_until_ready(states)
+            t_first = time.time()
         dispatches += 1
         for k, v in metrics.items():
             metric_hist.setdefault(k, []).append(np.asarray(v))
-        count_hist.append(tuple(np.asarray(c) for c in counts))
-    seconds = time.time() - t0
+        outs_hist.append({k: np.asarray(v) for k, v in outs.items()})
+    t_end = time.time()
+    t_first = t_first if t_first is not None else t_end
 
-    out = FLSweepResult(configs=configs, state_stacked=states,
-                        seconds=seconds, dispatches=dispatches)
-    for i in range(len(combos)):
-        res = FLResult(seconds=seconds / len(combos))
-        for k, segs in metric_hist.items():
-            getattr(res, _METRIC_FIELDS[k]).extend(
-                float(x) for seg in segs for x in seg[i])
-        for tc, dc in count_hist:
-            res.participation.extend(zip(tc[i].reshape(-1).tolist(),
-                                         dc[i].reshape(-1).tolist()))
-        res.state = jax.tree.map(lambda x: x[i], states)
-        ledger = algo.make_ledger(ledger_params)
-        if ledger is not None:
-            for n_teams, n_devices in res.participation:
-                algo.log_comm_round(ledger, n_teams=n_teams,
-                                    n_devices=n_devices)
-            res.comm = ledger
-        out.results.append(res)
+    return _collect(prep, states, metric_hist, outs_hist,
+                    seconds=t_end - t0, compile_seconds=t_first - t0,
+                    run_seconds=t_end - t_first, dispatches=dispatches,
+                    rounds=rounds, eval_every=eval_every)
+
+
+# Fused multi-sweep programs are cached per tuple of member static keys:
+# each member's chunk program is inlined into one jitted body, so N
+# structurally-different sweeps (e.g. different compressors) still cost
+# one dispatch per segment.
+@functools.lru_cache(maxsize=32)
+def _multi_program(member_keys, metric_fn, m, n):
+    runners = [_chunk_runner(skel, metric_fn, m, n, tf, df, sys_key)
+               for skel, sys_key, tf, df in member_keys]
+
+    @functools.partial(jax.jit, static_argnames=("length", "n_steps"))
+    def multi(ops, tr, va, *, length, n_steps):
+        outs = []
+        for run_chunks, (h, st, k, sl) in zip(runners, ops):
+            if sl is None:
+                outs.append(jax.vmap(lambda h_, s_, k_, rc=run_chunks: rc(
+                    h_, s_, k_, tr, va, length=length,
+                    n_steps=n_steps))(h, st, k))
+            else:
+                outs.append(jax.vmap(
+                    lambda h_, s_, k_, sl_, rc=run_chunks: rc(
+                        h_, s_, k_, tr, va, sleaves=sl_, length=length,
+                        n_steps=n_steps))(h, st, k, sl))
+        return tuple(outs)
+
+    return multi
+
+
+def run_multi_sweep(variants, train_data, val_data, *,
+                    metric_fn: Callable, rounds: int, m: int, n: int,
+                    eval_every: int = 1) -> list:
+    """Run several *structurally different* sweeps as ONE jitted program.
+
+    ``run_sweep`` batches everything that differs only in float values
+    (hyperparameters, seeds, system profiles) on one vmap axis; what it
+    cannot batch is a change to the round graph itself — a different
+    compressor, a different algorithm. This entry point takes a list of
+    such sweeps, inlines each one's vmapped chunk program into a single
+    jitted body, and dispatches them together: N compressors x P system
+    profiles in one call (``benchmarks/fig_time_to_accuracy.py``).
+
+    variants: sequence of dicts, each with keys ``algo`` and ``params0``
+        plus optional ``grid`` (default ``[{}]``), ``seeds`` (default
+        ``(0,)``), ``team_frac`` / ``device_frac`` (default 1.0), and
+        ``system`` (as in ``run_sweep``). Data, metric_fn, rounds, and
+        dims are shared — variants are views of one experiment family.
+
+    Returns one FLSweepResult per variant, in order; every result
+    reports the same ``dispatches`` count (1, or 2 with a remainder
+    chunk) because the members executed together.
+    """
+    preps = []
+    for v in variants:
+        v = dict(v)
+        preps.append(_prepare(
+            v["algo"], v.get("grid", [{}]), v.get("seeds", (0,)),
+            v["params0"], m, n, v.get("team_frac", 1.0),
+            v.get("device_frac", 1.0), v.get("system")))
+
+    member_keys = tuple((p.skel, p.sys_key, p.team_frac, p.device_frac)
+                        for p in preps)
+    multi = _multi_program(member_keys, metric_fn, m, n)
+    ops = tuple((p.hstack, p.states, p.keys, p.sstack) for p in preps)
+    n_chunks, rem = divmod(rounds, eval_every)
+
+    metric_hist = [{} for _ in preps]
+    outs_hist = [[] for _ in preps]
+    carries = None
+    dispatches = 0
+    t0 = time.time()
+    t_first = None
+    for length, n_steps in ((eval_every, n_chunks), (rem, 1)):
+        if length == 0 or n_steps == 0:
+            continue
+        results = multi(ops, train_data, val_data, length=length,
+                        n_steps=n_steps)
+        if t_first is None:
+            jax.block_until_ready(results)
+            t_first = time.time()
+        dispatches += 1
+        carries = [carry for carry, _ in results]
+        ops = tuple((h, st, k, sl) for (h, _, _, sl), (st, k) in
+                    zip(ops, carries))
+        for i, (_, (metrics, outs)) in enumerate(results):
+            for k, v in metrics.items():
+                metric_hist[i].setdefault(k, []).append(np.asarray(v))
+            outs_hist[i].append({k: np.asarray(v)
+                                 for k, v in outs.items()})
+    t_end = time.time()
+    t_first = t_first if t_first is not None else t_end
+
+    n_total = sum(len(p.configs) for p in preps) or 1
+    out = []
+    for i, p in enumerate(preps):
+        share = len(p.configs) / n_total
+        out.append(_collect(
+            p, carries[i][0] if carries else p.states, metric_hist[i],
+            outs_hist[i], seconds=(t_end - t0) * share,
+            compile_seconds=(t_first - t0) * share,
+            run_seconds=(t_end - t_first) * share, dispatches=dispatches,
+            rounds=rounds, eval_every=eval_every))
     return out

@@ -1,0 +1,71 @@
+"""Hypothesis property tests pinning the ledger's static wire-byte model
+(`compressed_leaf_bytes`) to the *actual* packed array sizes each of the
+five compressors would put on the wire, across leaf shapes. The system
+simulator (`repro.system`) prices links with these numbers, so a
+drifting model silently corrupts both the byte and the time axes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.comm import CommConfig, compressed_leaf_bytes, leaf_k
+
+SET = dict(max_examples=25, deadline=None)
+k_fracs = st.sampled_from([0.01, 0.1, 0.25, 0.5, 1.0])
+leaf_sizes = st.integers(min_value=1, max_value=5000)
+
+
+def _vec(p):
+    return np.random.default_rng(p).normal(size=(p,)).astype(np.float32)
+
+
+@settings(**SET)
+@given(p=leaf_sizes)
+def test_identity_bytes_are_fp32(p):
+    assert compressed_leaf_bytes(CommConfig("identity"), p) == _vec(p).nbytes
+
+
+@settings(**SET)
+@given(p=leaf_sizes, k_frac=k_fracs)
+def test_topk_bytes_are_values_plus_indices(p, k_frac):
+    v, k = _vec(p), leaf_k(k_frac, p)
+    idx = np.argsort(-np.abs(v))[:k].astype(np.int32)
+    packed = v[idx].nbytes + idx.nbytes           # 4B value + 4B index
+    assert compressed_leaf_bytes(
+        CommConfig("topk", k_frac=k_frac), p) == packed
+
+
+@settings(**SET)
+@given(p=leaf_sizes, k_frac=k_fracs)
+def test_randk_bytes_are_values_plus_seed(p, k_frac):
+    v, k = _vec(p), leaf_k(k_frac, p)
+    # the receiver reconstructs the indices from a shared 4-byte seed
+    packed = v[:k].nbytes + np.uint32(0).nbytes
+    assert compressed_leaf_bytes(
+        CommConfig("randk", k_frac=k_frac), p) == packed
+
+
+@settings(**SET)
+@given(p=leaf_sizes)
+def test_int8_bytes_match_quantize_kernel_output(p):
+    """int8 is the one path whose wire format is materialized for real:
+    the model must equal the packed (q, scales) the kernel returns."""
+    from repro.kernels.quantize import quantize_int8
+    v = _vec(p)
+    q, scales, _ = quantize_int8(jnp.asarray(v),
+                                 jnp.asarray(np.zeros_like(v)))
+    assert q.dtype == jnp.int8 and scales.dtype == jnp.float32
+    packed = q.size * q.dtype.itemsize + scales.size * scales.dtype.itemsize
+    assert compressed_leaf_bytes(CommConfig("int8"), p) == packed
+
+
+@settings(**SET)
+@given(p=leaf_sizes)
+def test_sign_bytes_are_bitpacked_plus_scale(p):
+    v = _vec(p)
+    packed = np.packbits(v > 0).nbytes + np.float32(0).nbytes
+    assert compressed_leaf_bytes(CommConfig("sign"), p) == packed

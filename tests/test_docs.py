@@ -21,6 +21,10 @@ PUBLIC_MODULES = (
     "repro.scenarios.spec",
     "repro.scenarios.registry",
     "repro.scenarios.runner",
+    "repro.system",
+    "repro.system.spec",
+    "repro.system.simulate",
+    "repro.system.timeline",
 )
 
 _EXEMPT_METHODS = {"tree_flatten", "tree_unflatten"}

@@ -1,0 +1,391 @@
+"""Wall-clock system simulator: spec/profile invariants, in-graph
+simulation determinism + monotonicity, deadline-straggler mask
+equivalence (scan == dispatch == hand-fed masks), sweep batching of
+system profiles, multi-sweep fusion, and scenario/CLI integration."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.system import (SYSTEM_PROFILES, RoundWorkload, SystemSpec,
+                          get_profile, simulate_round, workload_for)
+
+WL = RoundWorkload(k_team=5, local_steps=10, n_params=7850,
+                   full_bytes=31400, comp_bytes=3200)
+
+
+def _leaves(profile, **over):
+    spec = get_profile(profile)
+    if over:
+        spec = dataclasses.replace(spec, **over)
+    return spec.tree_floats()[0]
+
+
+# ---------------------------------------------------------------------------
+# SystemSpec + profiles
+# ---------------------------------------------------------------------------
+
+def test_profiles_round_trip_and_share_skeleton():
+    skels = set()
+    for name, spec in SYSTEM_PROFILES.items():
+        assert spec.name == name
+        assert SystemSpec.from_dict(
+            json.loads(json.dumps(spec.to_dict()))) == spec
+        leaves, rebuild = spec.tree_floats()
+        assert rebuild(leaves) == spec
+        skels.add(spec.skeleton())
+    # one static skeleton -> one compiled program serves every profile
+    assert len(skels) == 1
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        SystemSpec(wan_mbps=0.0)
+    with pytest.raises(ValueError):
+        SystemSpec(compute_sigma=-0.1)
+    with pytest.raises(KeyError):
+        get_profile("datacenter-nvlink")
+
+
+def test_get_profile_accepts_spec_dict_and_name():
+    spec = SYSTEM_PROFILES["edge-iot"]
+    assert get_profile(spec) is spec
+    assert get_profile("edge-iot") == spec
+    assert get_profile(spec.to_dict()) == spec
+
+
+def test_with_deadline():
+    d = get_profile("uniform").with_deadline(3.5)
+    assert d.deadline_s == 3.5
+    assert dataclasses.replace(d, deadline_s=0.0) == \
+        SYSTEM_PROFILES["uniform"]
+
+
+def test_workload_for_permfl_and_baselines():
+    from repro.comm import CommConfig
+    from repro.scenarios import SCENARIOS, build_scenario
+
+    b = build_scenario(SCENARIOS["table1/mnist/mclr/permfl"].scaled(
+        m_teams=2, n_devices=3, samples_per_device=16))
+    wl = workload_for(b.algo, b.params0)
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(b.params0))
+    assert wl.k_team == 5 and wl.local_steps == 10
+    assert wl.n_params == n_params
+    assert wl.full_bytes == wl.comp_bytes == 4 * n_params
+
+    comp = workload_for(dataclasses.replace(
+        b.algo, comm=CommConfig(compressor="sign")), b.params0)
+    assert comp.comp_bytes < comp.full_bytes == wl.full_bytes
+
+    b2 = build_scenario(SCENARIOS["table1/mnist/mclr/fedavg"].scaled(
+        m_teams=2, n_devices=3, samples_per_device=16))
+    wl2 = workload_for(b2.algo, b2.params0)
+    assert wl2.k_team == 1 and wl2.local_steps == 50
+
+
+# ---------------------------------------------------------------------------
+# simulate_round
+# ---------------------------------------------------------------------------
+
+def test_simulate_round_deterministic_and_positive():
+    tm, dm = jnp.ones((4,)), jnp.ones((4, 10))
+    for profile in SYSTEM_PROFILES:
+        a = simulate_round(_leaves(profile), WL, jax.random.PRNGKey(7),
+                           tm, dm)
+        b = simulate_round(_leaves(profile), WL, jax.random.PRNGKey(7),
+                           tm, dm)
+        assert float(a[2]) == float(b[2]) > 0.0, profile
+        assert np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        c = simulate_round(_leaves(profile), WL, jax.random.PRNGKey(8),
+                           tm, dm)
+        if get_profile(profile).compute_sigma > 0:
+            assert float(c[2]) != float(a[2]), profile
+
+
+def test_no_deadline_passes_masks_through():
+    key = jax.random.PRNGKey(0)
+    from repro.core.participation import sample_masks
+    tm, dm = sample_masks(key, 4, 10, team_frac=0.5, device_frac=0.5)
+    tm2, dm2, t, dt, dd = simulate_round(
+        _leaves("wan-cellular"), WL, jax.random.PRNGKey(1), tm, dm)
+    assert np.array_equal(np.asarray(tm2), np.asarray(tm))
+    assert np.array_equal(np.asarray(dm2),
+                          np.asarray(dm * tm[:, None]))
+    assert int(dt) == 0 and int(dd) == 0
+
+
+def test_zero_sigma_uniform_profile_time_is_closed_form():
+    # homogeneous fleet: the critical path is any device's chain
+    leaves = _leaves("uniform")
+    tm, dm = jnp.ones((3,)), jnp.ones((3, 4))
+    _, _, t, _, _ = simulate_round(leaves, WL, jax.random.PRNGKey(0),
+                                   tm, dm)
+    rate = leaves["compute_gflops"] * 1e9
+    lan = leaves["lan_mbps"] * 125e3
+    wan = leaves["wan_mbps"] * 125e3
+    t_iter = (WL.local_steps * WL.n_params * leaves["flops_per_param"]
+              / rate + 2 * leaves["lan_latency_ms"] * 1e-3
+              + (WL.full_bytes + WL.comp_bytes) / lan)
+    expect = (leaves["wan_latency_ms"] * 1e-3 + WL.full_bytes / wan
+              + WL.k_team * t_iter
+              + leaves["wan_latency_ms"] * 1e-3 + WL.comp_bytes / wan)
+    assert float(t) == pytest.approx(expect, rel=1e-5)
+
+
+def test_deadline_drops_stragglers_and_keeps_round_nonempty():
+    tm, dm = jnp.ones((4,)), jnp.ones((4, 10))
+    leaves = _leaves("wan-cellular", deadline_s=0.5)
+    tm2, dm2, t, dt, dd = simulate_round(leaves, WL,
+                                         jax.random.PRNGKey(0), tm, dm)
+    assert int(dd) > 0                       # this seed has stragglers
+    assert float(jnp.sum(dm2)) == 40 - int(dd)
+    # impossibly tight deadline: the single fastest chain survives
+    leaves = _leaves("wan-cellular", deadline_s=1e-6)
+    tm3, dm3, t3, dt3, dd3 = simulate_round(leaves, WL,
+                                            jax.random.PRNGKey(0), tm, dm)
+    assert float(jnp.sum(tm3)) == 1.0 and float(jnp.sum(dm3)) == 1.0
+    assert int(dt3) == 3 and int(dd3) == 39
+    # the survivor's mask is team-gated (device in the surviving team)
+    assert np.array_equal(np.asarray(dm3).sum(axis=1) > 0,
+                          np.asarray(tm3) > 0)
+
+
+def test_keep_fastest_noop_when_alive():
+    from repro.core.participation import keep_fastest
+    tm = jnp.asarray([1.0, 0.0])
+    dm = jnp.asarray([[1.0, 0.0], [1.0, 1.0]])
+    score = jnp.ones((2, 2))
+    tm2, dm2 = keep_fastest(tm, dm, score, jnp.ones((2, 2)))
+    assert np.array_equal(np.asarray(tm2), [1.0, 0.0])
+    assert np.array_equal(np.asarray(dm2), [[1.0, 0.0], [0.0, 0.0]])
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_build():
+    from repro.scenarios import SCENARIOS, build_scenario
+    return build_scenario(SCENARIOS["table1/mnist/mclr/permfl"].scaled(
+        m_teams=2, n_devices=3, samples_per_device=16))
+
+
+def _run(b, **kw):
+    from repro.train.engine import run_experiment
+    args = dict(metric_fn=b.metric_fn, rounds=5, m=b.m, n=b.n,
+                eval_every=2)
+    args.update(kw)
+    return run_experiment(b.algo, b.params0, b.train, b.val, **args)
+
+
+def test_engine_timeline_deterministic_monotone(small_build):
+    b = small_build
+    r1 = _run(b, system="wan-cellular")
+    r2 = _run(b, system="wan-cellular")
+    assert r1.timeline.round_seconds == r2.timeline.round_seconds
+    assert r1.sim_seconds == r2.sim_seconds
+    assert len(r1.timeline) == 5 and len(r1.sim_seconds) == 3
+    assert all(t > 0 for t in r1.timeline.round_seconds)
+    cum = r1.timeline.cum_seconds()
+    assert all(b2 >= a for a, b2 in zip(cum, cum[1:]))
+    assert r1.sim_seconds == [pytest.approx(cum[1]),
+                              pytest.approx(cum[3]),
+                              pytest.approx(cum[4])]
+
+
+@pytest.mark.parametrize("frac", [1.0, 0.5])
+def test_engine_system_without_deadline_is_pure_measurement(small_build,
+                                                            frac):
+    # must hold under sampled participation too: the system stream is
+    # folded out of the mask key, never advancing the sampling chain
+    b = small_build
+    kw = dict(team_frac=frac, device_frac=frac, seed=5)
+    plain = _run(b, **kw)
+    timed = _run(b, system="lan-campus", **kw)
+    assert timed.pm_acc == plain.pm_acc
+    assert timed.train_loss == plain.train_loss
+    assert timed.participation == plain.participation
+    assert plain.timeline is None and plain.sim_seconds == []
+
+
+def test_engine_scan_matches_dispatch_with_system(small_build):
+    b = small_build
+    sys = get_profile("wan-cellular").with_deadline(0.6)
+    kw = dict(system=sys, team_frac=0.5, device_frac=0.5, seed=3)
+    r_scan = _run(b, scan=True, **kw)
+    r_disp = _run(b, scan=False, **kw)
+    assert r_scan.pm_acc == r_disp.pm_acc
+    assert r_scan.train_loss == r_disp.train_loss
+    assert r_scan.participation == r_disp.participation
+    np.testing.assert_allclose(r_scan.timeline.round_seconds,
+                               r_disp.timeline.round_seconds, rtol=1e-6)
+    assert r_scan.timeline.dropped_devices == \
+        r_disp.timeline.dropped_devices
+
+
+def test_deadline_trajectory_identical_to_hand_fed_masks(small_build):
+    """Acceptance: a deadline-straggler run equals a host loop feeding
+    the equivalent participation masks to algo.round directly."""
+    from repro.core.participation import sample_masks
+    b = small_build
+    sys = get_profile("edge-iot").with_deadline(2.0)
+    seed, rounds = 11, 4
+    res = _run(b, system=sys, team_frac=0.5, device_frac=0.5, seed=seed,
+               rounds=rounds, eval_every=1)
+
+    # replicate the engine's PRNG chain + deadline thinning on the host
+    from repro.train.engine import _SYSTEM_SALT
+    leaves, _ = sys.tree_floats()
+    wl = workload_for(b.algo, b.params0)
+    state = b.algo.init_state(b.params0, b.m, b.n)
+    key = jax.random.PRNGKey(seed)
+    fed_masks = []
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        tm, dm = sample_masks(sub, b.m, b.n, team_frac=0.5,
+                              device_frac=0.5)
+        skey = jax.random.fold_in(sub, _SYSTEM_SALT)
+        tm, dm, t, dt, dd = simulate_round(leaves, wl, skey, tm, dm)
+        fed_masks.append((int(jnp.sum(tm)),
+                          int(jnp.sum(dm * tm[:, None]))))
+        state = b.algo.round(state, b.train, team_mask=tm,
+                             device_mask=dm)
+    assert fed_masks == res.participation
+    ref = b.algo.eval(state, b.train, b.val, b.metric_fn)
+    assert float(ref["pm"]) == pytest.approx(res.pm_acc[-1], abs=1e-6)
+    assert float(ref["train_loss"]) == pytest.approx(res.train_loss[-1],
+                                                     abs=1e-6)
+
+
+def test_seconds_split_sums(small_build):
+    r = _run(small_build)
+    assert r.compile_seconds >= 0 and r.run_seconds >= 0
+    assert r.seconds == pytest.approx(
+        r.compile_seconds + r.run_seconds, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# sweep integration
+# ---------------------------------------------------------------------------
+
+def test_sweep_batches_system_profiles_one_dispatch(small_build):
+    from repro.train.sweep import run_sweep
+    b = small_build
+    profiles = ["lan-campus", "wan-cellular", "edge-iot"]
+    sw = run_sweep(b.algo, [{}], (0,), b.params0, b.train, b.val,
+                   metric_fn=b.metric_fn, rounds=4, m=b.m, n=b.n,
+                   system=profiles)
+    assert sw.dispatches == 1 and len(sw) == 3
+    for res, prof in zip(sw, profiles):
+        ref = _run(b, system=prof, rounds=4, eval_every=1)
+        assert res.pm_acc == ref.pm_acc
+        np.testing.assert_allclose(res.timeline.round_seconds,
+                                   ref.timeline.round_seconds, rtol=1e-5)
+        assert res.timeline.profile == prof
+    assert [c["system"] for c in sw.configs] == profiles
+
+
+def test_sweep_accepts_single_profile_name(small_build):
+    from repro.train.sweep import run_sweep
+    b = small_build
+    sw = run_sweep(b.algo, [dict(lam=0.3), dict(lam=0.8)], (0,),
+                   b.params0, b.train, b.val, metric_fn=b.metric_fn,
+                   rounds=3, m=b.m, n=b.n, system="uniform")
+    assert len(sw) == 2
+    assert all(r.timeline is not None and r.timeline.profile == "uniform"
+               for r in sw)
+    # zero-sigma profile: both configs tick the same simulated clock
+    assert sw[0].timeline.round_seconds == sw[1].timeline.round_seconds
+
+
+def test_multi_sweep_fuses_compressors(small_build):
+    from repro.comm import CommConfig
+    from repro.train.sweep import run_multi_sweep
+    b = small_build
+    algos = [dataclasses.replace(b.algo,
+                                 comm=CommConfig(compressor=c))
+             for c in ("topk", "sign")]
+    sweeps = run_multi_sweep(
+        [dict(algo=a, params0=b.params0,
+              system=["lan-campus", "wan-cellular"]) for a in algos],
+        b.train, b.val, metric_fn=b.metric_fn, rounds=4, m=b.m, n=b.n)
+    assert len(sweeps) == 2
+    for a, sw in zip(algos, sweeps):
+        assert sw.dispatches == 1 and len(sw) == 2
+        for res, prof in zip(sw, ("lan-campus", "wan-cellular")):
+            from repro.train.engine import run_experiment
+            ref = run_experiment(a, b.params0, b.train, b.val,
+                                 metric_fn=b.metric_fn, rounds=4,
+                                 m=b.m, n=b.n, system=prof)
+            assert res.pm_acc == ref.pm_acc
+            np.testing.assert_allclose(res.timeline.round_seconds,
+                                       ref.timeline.round_seconds,
+                                       rtol=1e-5)
+            assert res.comm.total_bytes() == ref.comm.total_bytes()
+    # sign ships fewer bytes than top-10%, so on the WAN-bound profile
+    # it must also finish in less simulated time
+    assert sweeps[1][1].timeline.total_seconds() < \
+        sweeps[0][1].timeline.total_seconds()
+
+
+# ---------------------------------------------------------------------------
+# scenario + CLI integration
+# ---------------------------------------------------------------------------
+
+def test_scenario_system_serialization_and_legacy_hash():
+    from repro.scenarios import SCENARIOS, FLScenario
+    s = SCENARIOS["table1/mnist/mclr/permfl"]
+    assert "system" not in s.to_dict()          # legacy dict byte-stable
+    timed = s.with_system("wan-cellular")
+    assert timed.system == SYSTEM_PROFILES["wan-cellular"]
+    rt = FLScenario.from_dict(json.loads(json.dumps(timed.to_dict())))
+    assert rt == timed
+    assert rt.spec_hash() == timed.spec_hash()
+    assert timed.spec_hash() != s.spec_hash()   # system is physics
+    assert timed.with_system(None).spec_hash() == s.spec_hash()
+    # ...but the profile's label is presentation, like scenario names
+    relabeled = timed.with_system(
+        dataclasses.replace(timed.system, name="renamed"))
+    assert relabeled.spec_hash() == timed.spec_hash()
+    # scaled() keeps the system model attached
+    assert timed.scaled(rounds=3).system == timed.system
+
+
+def test_run_scenario_threads_system(small_build):
+    from repro.scenarios import run_scenario
+    s = small_build.scenario.with_system("wan-cellular")
+    res = run_scenario(s, rounds=3)
+    assert res.timeline is not None and len(res.timeline) == 3
+    # explicit argument overrides the spec's profile
+    res2 = run_scenario(s, rounds=3, system="lan-campus")
+    assert res2.timeline.profile == "lan-campus"
+    assert res2.timeline.total_seconds() < res.timeline.total_seconds()
+    # ...and system=None explicitly disables simulation on this spec
+    res3 = run_scenario(s, rounds=3, system=None)
+    assert res3.timeline is None and res3.pm_acc == res.pm_acc
+
+
+def test_sweep_scenario_threads_system(small_build):
+    from repro.scenarios import sweep_scenario
+    sw = sweep_scenario(small_build.scenario, rounds=3,
+                        system=["lan-campus", "wan-cellular"])
+    assert len(sw) == 2 and sw.dispatches == 1
+    assert [r.timeline.profile for r in sw] == ["lan-campus",
+                                                "wan-cellular"]
+
+
+def test_cli_profiles_and_system_run(capsys):
+    from repro.scenarios.__main__ import main
+    assert main(["profiles"]) == 0
+    out = capsys.readouterr().out
+    for name in SYSTEM_PROFILES:
+        assert name in out
+    assert main(["run", "table1/mnist/mclr/permfl", "--smoke",
+                 "--system", "wan-cellular", "--deadline", "30"]) == 0
+    out = capsys.readouterr().out
+    assert "system[wan-cellular]" in out and "simulated" in out
