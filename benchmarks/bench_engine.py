@@ -17,7 +17,9 @@ rounds/sec:
 
 plus a `sweep` mode comparing a multi-config hyperparameter grid run as a
 sequential loop of scanned experiments vs ONE vmapped program
-(train.sweep.run_sweep), reporting configs/sec for both.
+(train.sweep.run_sweep), reporting configs/sec for both, and a `probes`
+measurement re-running the scanned path with the run-telemetry probes on
+(`repro.obs.TraceConfig`) to report the observability overhead.
 
 Reproduction target: the scanned path beats legacy per-round dispatch in
 rounds/sec (the paper's multi-algorithm sweeps were dispatch-bound, not
@@ -31,7 +33,9 @@ the sequential loop's trajectories bit-for-bit in a single dispatch.
 
 Either mode writes ``BENCH_engine.json`` at the repo root — the perf
 trajectory marker future PRs diff against (rounds/sec, configs/sec,
-dispatch counts, compile-vs-run seconds).
+dispatch counts, compile-vs-run seconds). CI gates it against the
+committed baseline in ``benchmarks/baselines/`` via
+``python -m repro.obs.regress`` (>20% rate drops fail the build).
 """
 from __future__ import annotations
 
@@ -125,6 +129,17 @@ def smoke() -> list:
     print(f"# bench_engine smoke: {len(sw)} sweep configs in "
           f"{sw.dispatches} dispatch OK, pm={[f'{r.pm_acc[-1]:.3f}' for r in sw]}")
 
+    # probes-on path (repro.obs): trajectories must not move, and the
+    # probe streams must materialize (overhead reported, not gated —
+    # smoke runs are dispatch-dominated)
+    pr = run_experiment(algo, p0, tr, va, trace=True, **kw)
+    assert pr.trace is not None and len(pr.trace) == 2
+    np.testing.assert_array_equal(np.asarray(pr.pm_acc),
+                                  np.asarray(res.pm_acc))
+    pr_warm = run_experiment(algo, p0, tr, va, trace=True, **kw)
+    print(f"# bench_engine smoke: probes on, "
+          f"{len(pr.trace.names())} streams OK")
+
     write_bench_json({
         "mode": "smoke",
         "engine": {"rounds": 2,
@@ -138,6 +153,12 @@ def smoke() -> list:
                   "cold_seconds": round(sw.seconds, 3),
                   "steady_seconds": round(sw_warm.seconds, 3),
                   "dispatches": sw_warm.dispatches},
+        "obs": {"rounds_per_sec_probes": round(
+                    2 / max(pr_warm.seconds, 1e-9), 2),
+                "probe_streams": len(pr_warm.trace.names()),
+                "overhead_pct": round(
+                    (pr_warm.seconds - warm.seconds)
+                    / max(warm.seconds, 1e-9) * 100, 1)},
     })
     return []
 
@@ -192,6 +213,27 @@ def main(quick: bool = True, csv=print) -> list:
     sweep_failures, cps = _bench_sweep(algo, p0, tr, va, met, m, n,
                                        rounds=max(4, rounds // 4), csv=csv)
     failures += sweep_failures
+
+    # probes-on scanned path (repro.obs): same program shape plus the
+    # probe outputs; report the throughput tax vs probes-off scan
+    probed = lambda: run_experiment(algo, p0, tr, va, rounds=rounds,
+                                    scan=True, trace=True, **kw)
+    probed()                      # warm-up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        pm_probes = probed().pm_acc
+        best = min(best, time.time() - t0)
+    rps_probes = rounds / best
+    overhead = (rps["scan"] - rps_probes) / rps["scan"] * 100
+    csv(f"bench_engine,mnist,mclr,probes,rounds_per_sec,,"
+        f"{rps_probes:.2f}")
+    csv(f"bench_engine,mnist,mclr,probes,overhead_pct,,{overhead:.1f}")
+    p_drift = max(abs(a - b) for a, b in zip(pm["scan"], pm_probes))
+    if p_drift > 0:
+        failures.append(
+            f"bench_engine: probes-on trajectory moved ({p_drift:.2e})")
+
     write_bench_json({
         "mode": "quick" if quick else "full",
         "engine": {"rounds": rounds,
@@ -204,6 +246,8 @@ def main(quick: bool = True, csv=print) -> list:
                   "configs_per_sec": {k: round(v, 2)
                                       for k, v in cps.items()},
                   "dispatches": 1},
+        "obs": {"rounds_per_sec_probes": round(rps_probes, 2),
+                "overhead_pct": round(overhead, 1)},
     })
     return failures
 

@@ -138,6 +138,13 @@ class CommLedger:
         """Grand total across links, directions, and rounds."""
         return self.totals().total
 
+    def cum_total_bytes(self) -> np.ndarray:
+        """Cumulative grand total after each logged round — the byte
+        axis of a bytes-to-accuracy curve (`repro.obs.events` joins it
+        against the metric history at the eval points)."""
+        return np.cumsum(np.asarray([r.total for r in self.rounds],
+                                    dtype=np.int64))
+
     def uncompressed_total(self) -> int:
         """What the same rounds would have cost shipping fp32 everywhere."""
         full = model_bytes(self.leaf_sizes)

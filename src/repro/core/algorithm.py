@@ -34,9 +34,12 @@ from dataclasses import dataclass
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
+import jax.numpy as jnp
 
 from repro.comm import CommConfig, CommLedger
 from repro.core import permfl as P
+from repro.obs.probes import (masked_max, masked_mean, stacked_sq_norm,
+                              tree_diff_norm)
 
 __all__ = ["FLAlgorithm", "FLAlgorithmBase", "PerMFL", "eval_global",
            "eval_personal"]
@@ -87,6 +90,23 @@ class FLAlgorithmBase:
         """Account one round's bytes from realized (team-gated)
         participation counts. No-op unless the algorithm moves bytes."""
         pass
+
+    def probe_round(self, prev_state, state, data, *, team_mask,
+                    device_mask, trace):
+        """Traced per-round scalar diagnostics (`repro.obs`): called by
+        the engine's round body right after ``round`` when a
+        `TraceConfig` is active, returning ``{name: f32 scalar}`` probe
+        values that ride the scan outputs. Pure measurement — reads the
+        states, never changes them.
+
+        Default: the whole-state update norm (``trace.grads``).
+        Algorithms with tiered state override to add drift / residual /
+        loss probes.
+        """
+        out = {}
+        if trace.grads:
+            out["update_norm"] = tree_diff_norm(prev_state, state)
+        return out
 
     def tree_hparams(self):
         """Split this config into sweepable leaves vs static structure.
@@ -184,6 +204,40 @@ class PerMFL(FLAlgorithmBase):
             "train_loss": jax.vmap(jax.vmap(self.loss_fn))(
                 state.theta, train_data).mean(),
         }
+
+    def probe_round(self, prev_state, state, data, *, team_mask,
+                    device_mask, trace):
+        """PerMFL's full probe set on top of the generic update norm: the
+        personalization gap and tier drift Theorems 1-2 bound (mean/max
+        over participants), the post-round device gradient norm,
+        per-tier error-feedback residual norms (compressed runs), and
+        the participation-weighted train loss."""
+        out = super().probe_round(prev_state, state, data,
+                                  team_mask=team_mask,
+                                  device_mask=device_mask, trace=trace)
+        gated = device_mask * team_mask[:, None]
+        if trace.drift:
+            gap, drift = P.tier_norms(state)      # (M, N), (M,)
+            out["pers_gap_mean"] = masked_mean(gap, gated)
+            out["pers_gap_max"] = masked_max(gap, gated)
+            out["tier_drift_mean"] = masked_mean(drift, team_mask)
+            out["tier_drift_max"] = masked_max(drift, team_mask)
+        if trace.grads:
+            g = jax.vmap(jax.vmap(jax.grad(self.loss_fn)))(state.theta,
+                                                           data)
+            out["grad_norm"] = masked_mean(
+                jnp.sqrt(stacked_sq_norm(g, 2)), gated)
+        if trace.residuals and state.comm is not None:
+            out["ef_dev_norm"] = masked_mean(
+                jnp.sqrt(stacked_sq_norm(state.comm.ef_dev, 2)),
+                gated)
+            out["ef_team_norm"] = masked_mean(
+                jnp.sqrt(stacked_sq_norm(state.comm.ef_team, 1)),
+                team_mask)
+        if trace.loss:
+            losses = jax.vmap(jax.vmap(self.loss_fn))(state.theta, data)
+            out["part_loss"] = masked_mean(losses, gated)
+        return out
 
     # -- byte accounting (host side) ----------------------------------------
 

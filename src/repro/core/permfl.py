@@ -299,6 +299,20 @@ def _permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
 # Evaluation helpers
 # ---------------------------------------------------------------------------
 
+def tier_norms(state: PerMFLState):
+    """The drift quantities the paper's rates are stated in, per tier:
+    ``(pers_gap, tier_drift)`` where ``pers_gap`` is the (M, N) matrix of
+    personalization gaps ``||theta_ij - w_i||`` and ``tier_drift`` the
+    (M,) vector of team-vs-server drifts ``||w_i - x||``. Traceable —
+    the engine's probe path calls this inside the scanned round body."""
+    from repro.obs.probes import stacked_sq_norm
+
+    gap = jax.tree.map(lambda t, wl: t - wl[:, None], state.theta, state.w)
+    drift = jax.tree.map(lambda wl, xl: wl - xl[None], state.w, state.x)
+    return jnp.sqrt(stacked_sq_norm(gap, 2)), \
+        jnp.sqrt(stacked_sq_norm(drift, 1))
+
+
 def eval_stacked(state: PerMFLState, data, metric_fn, *, which: str = "pm"):
     """metric_fn(params, batch) -> scalar; data leading (M, N, ...).
 

@@ -1,0 +1,28 @@
+"""Unified run-telemetry layer: probes, run events, profiling, gating.
+
+Three parts, all riding the existing engine/sweep/scenario machinery
+(DESIGN.md §9):
+
+* in-graph probes — a frozen `TraceConfig` selects cheap scalar
+  diagnostics (drift/grad/residual/loss norms) that an algorithm's
+  ``probe_round`` emits as extra ``lax.scan`` outputs; the engine
+  assembles them into a `RunTrace` on ``FLResult.trace``. Probes-off is
+  the default and leaves the compiled program untouched.
+* structured run events — one JSONL schema (`repro.obs.events`) written
+  by ``run_experiment(trace_dir=...)`` / ``run_sweep`` / the scenarios
+  CLI, read back by ``python -m repro.obs summarize``.
+* profiling + regression hooks — ``cost_analysis`` / ``jax.profiler``
+  capture behind `TraceConfig`, and the `repro.obs.regress` comparator
+  CI uses to gate ``BENCH_engine.json`` against a committed baseline.
+"""
+from repro.obs.events import (read_jsonl, run_events, summarize_run,
+                              sweep_events, write_jsonl, write_run,
+                              write_sweep)
+from repro.obs.profiling import compiled_cost, profile_ctx
+from repro.obs.regress import compare as compare_bench
+from repro.obs.trace import RunTrace, TraceConfig, eval_points
+
+__all__ = ["RunTrace", "TraceConfig", "compare_bench", "compiled_cost",
+           "eval_points", "profile_ctx", "read_jsonl", "run_events",
+           "summarize_run", "sweep_events", "write_jsonl", "write_run",
+           "write_sweep"]

@@ -1,0 +1,55 @@
+"""Traceable norm/aggregation helpers the probe implementations share.
+
+Everything here runs *inside* the engine's scanned round body, so it must
+be cheap and traceable: reductions over pytrees with stacked leading
+axes, masked by the (M,) / (M, N) participation arrays. Integer and
+PRNG-key leaves (round counters, comm keys) are skipped — probes measure
+the float state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["masked_mean", "masked_max", "stacked_sq_norm", "tree_diff_norm"]
+
+
+def _float_leaves(tree):
+    return [l for l in jax.tree.leaves(tree)
+            if jnp.issubdtype(jnp.asarray(l).dtype, jnp.inexact)]
+
+
+def stacked_sq_norm(tree, lead: int):
+    """Squared l2 norm summed over leaves, keeping the first `lead` axes.
+
+    ``stacked_sq_norm(theta, 2)`` on (M, N, ...) leaves gives the (M, N)
+    matrix of per-device squared model norms; ``lead=0`` a scalar.
+    """
+    total = jnp.float32(0.0)
+    for leaf in _float_leaves(tree):
+        leaf = jnp.asarray(leaf, jnp.float32)
+        total = total + jnp.sum(jnp.square(leaf),
+                                axis=tuple(range(lead, leaf.ndim)))
+    return total
+
+
+def tree_diff_norm(a, b) -> jnp.ndarray:
+    """Scalar l2 distance between two pytrees' float leaves — the generic
+    whole-state update norm."""
+    total = jnp.float32(0.0)
+    for la, lb in zip(_float_leaves(a), _float_leaves(b)):
+        total = total + jnp.sum(jnp.square(jnp.asarray(la, jnp.float32)
+                                           - jnp.asarray(lb, jnp.float32)))
+    return jnp.sqrt(total)
+
+
+def masked_mean(values, mask) -> jnp.ndarray:
+    """Participation-weighted mean of `values` (mask-shaped); 0 when the
+    mask is empty."""
+    return jnp.sum(values * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def masked_max(values, mask) -> jnp.ndarray:
+    """Max of `values` over set mask entries. Values must be >= 0 (norms
+    are): masked-out entries contribute 0, and an all-zero mask gives 0."""
+    return jnp.max(values * mask)

@@ -1,0 +1,47 @@
+"""Profiling hooks: XLA cost analysis and `jax.profiler` trace contexts.
+
+Both are host-side and opt-in via `TraceConfig` — they never alter the
+compiled round program. ``compiled_cost`` answers "what does one dispatch
+of this experiment cost in flops/bytes" (the static complement to the
+benchmark's measured rounds/sec); ``profile_ctx`` wraps the dispatches in
+a TensorBoard-readable trace when a directory is configured.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+__all__ = ["compiled_cost", "profile_ctx"]
+
+# cost_analysis key -> normalized name (XLA uses spaces in some keys)
+_COST_KEYS = {"flops": "flops", "bytes accessed": "bytes_accessed",
+              "transcendentals": "transcendentals",
+              "optimal_seconds": "optimal_seconds"}
+
+
+def profile_ctx(trace):
+    """``jax.profiler.trace`` context for ``trace.profile_dir`` when set;
+    otherwise a no-op context manager."""
+    if trace is not None and getattr(trace, "profile_dir", None):
+        import jax
+        return jax.profiler.trace(trace.profile_dir)
+    return contextlib.nullcontext()
+
+
+def compiled_cost(jitfn, *args, **kwargs) -> Optional[dict]:
+    """Lower + compile ``jitfn(*args, **kwargs)`` and return a normalized
+    ``cost_analysis()`` summary ({flops, bytes_accessed, ...}), or None
+    when the backend doesn't expose one. Shapes are what matter — passing
+    the live operands of a dispatch that already ran reuses their avals.
+    """
+    try:
+        analysis = jitfn.lower(*args, **kwargs).compile().cost_analysis()
+    except Exception:           # backend without cost analysis support
+        return None
+    if isinstance(analysis, (list, tuple)):
+        analysis = analysis[0] if analysis else None
+    if not isinstance(analysis, dict):
+        return None
+    out = {norm: float(analysis[k]) for k, norm in _COST_KEYS.items()
+           if isinstance(analysis.get(k), (int, float))}
+    return out or None

@@ -1,0 +1,126 @@
+"""In-graph probe selection (`TraceConfig`) and its host-side product
+(`RunTrace`).
+
+The paper's convergence theory is stated in terms of quantities the
+engine never used to surface: the personalization gap ``||theta_ij -
+w_i||`` (device vs team model), the tier drift ``||w_i - x||`` (team vs
+server model), gradient/update norms, and — under compression — the
+error-feedback residual magnitudes. A `TraceConfig` selects which of
+these cheap scalar diagnostics an algorithm's ``probe_round`` emits as
+extra ``lax.scan`` outputs from the engine's round body; the engine
+assembles the per-round streams host-side into a `RunTrace` that sits on
+``FLResult.trace`` next to ``comm`` (bytes) and ``timeline`` (seconds).
+
+Probes are pure measurement: with ``trace=None`` (the default) the round
+program is byte-for-byte the pre-trace graph, and with probes on the
+trajectory is bit-identical — probes only *read* the state
+(tests/test_engine.py pins both).
+
+`TraceConfig` is frozen/hashable because compiled programs key on it:
+flipping a probe group on is a different program (extra scan outputs),
+flipping it back reuses the original.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["RunTrace", "TraceConfig", "eval_points"]
+
+
+def eval_points(rounds: int, eval_every: int) -> list:
+    """1-based round indices at which the engine evaluates: every
+    `eval_every` rounds plus the final round. The engine, the sweep, and
+    the event log all align metric histories on these points."""
+    n_chunks, rem = divmod(rounds, eval_every)
+    return [eval_every * (k + 1) for k in range(n_chunks)] \
+        + ([rounds] if rem else [])
+
+
+@dataclass(frozen=True)
+class TraceConfig:
+    """Which in-graph diagnostics to emit, plus the profiling hooks.
+
+    Probe groups (each adds scalar ``lax.scan`` outputs per round):
+
+    drift: personalization gap ``||theta_ij - w_i||`` (mean/max over
+        participating devices) and tier drift ``||w_i - x||`` (mean/max
+        over participating teams) — the residuals Theorems 1-2 bound.
+    grads: whole-state update norm, and the post-round gradient norm of
+        the device objective (one extra grad evaluation per round —
+        ~1/(K*L) of the round's grad work).
+    residuals: per-tier error-feedback residual norms (device and team
+        senders), when the algorithm runs compressed uplinks.
+    loss: participation-weighted train loss of the personalized models
+        (only devices whose team also participated contribute).
+
+    Host-side hooks (no effect on the compiled round program):
+
+    cost_analysis: capture XLA's ``Compiled.cost_analysis()`` (flops /
+        bytes accessed per dispatch) onto ``RunTrace.cost``.
+    profile_dir: when set, wrap the experiment's dispatches in a
+        ``jax.profiler.trace`` context writing to this directory.
+    """
+    drift: bool = True
+    grads: bool = True
+    residuals: bool = True
+    loss: bool = True
+    cost_analysis: bool = False
+    profile_dir: Optional[str] = None
+
+
+@dataclass
+class RunTrace:
+    """Host-side per-round probe streams for one experiment.
+
+    config: the `TraceConfig` that selected the probes.
+    series: probe name -> per-round list of floats (one entry per global
+        round, aligned with ``FLResult.participation``).
+    cost: normalized ``cost_analysis()`` summary of the compiled round
+        program (flops / bytes accessed), when the config asked for it.
+    """
+    config: TraceConfig
+    series: dict = field(default_factory=dict)
+    cost: Optional[dict] = None
+
+    def __len__(self):
+        return max((len(v) for v in self.series.values()), default=0)
+
+    def names(self) -> list:
+        """Probe names present in this trace, sorted."""
+        return sorted(self.series)
+
+    def __getitem__(self, name: str) -> list:
+        return self.series[name]
+
+    def last(self, name: str) -> float:
+        """Final-round value of one probe (NaN when the stream is empty)."""
+        s = self.series.get(name, [])
+        return float(s[-1]) if s else float("nan")
+
+    def at_points(self, points) -> list:
+        """Per-eval-segment probe summaries: for each 1-based round index
+        in `points`, the mean of every series over the rounds since the
+        previous point — the join key the JSONL eval events use."""
+        out, lo = [], 0
+        for p in points:
+            seg = {}
+            for k, v in self.series.items():
+                window = np.asarray(v[lo:p], dtype=np.float64)
+                seg[k] = float(window.mean()) if window.size else float("nan")
+            out.append(seg)
+            lo = p
+        return out
+
+    def summary(self) -> dict:
+        """Per-probe {mean, max, last} over the whole run — run-footer
+        material."""
+        out = {}
+        for k, v in self.series.items():
+            a = np.asarray(v, dtype=np.float64)
+            if a.size:
+                out[k] = {"mean": float(a.mean()), "max": float(a.max()),
+                          "last": float(a[-1])}
+        return out

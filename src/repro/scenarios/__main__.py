@@ -6,7 +6,7 @@
     PYTHONPATH=src python -m repro.scenarios profiles
     PYTHONPATH=src python -m repro.scenarios run NAME [--rounds R]
         [--seed S] [--eval-every E] [--system PROFILE]
-        [--deadline SECONDS] [--smoke]
+        [--deadline SECONDS] [--smoke] [--trace-dir DIR] [--json]
 
 ``list`` prints one line per registered scenario (name, topology,
 partitioner, algorithm, default rounds, spec hash); ``describe`` shows
@@ -18,7 +18,11 @@ metrics — with ``--system`` the run is priced on that device/link
 profile (simulated time-to-accuracy, optional ``--deadline`` straggler
 drops). ``--smoke`` shrinks the scenario to 2 teams x 3 devices x 16
 samples for 2 rounds — the CI liveness check (pair with
-FORCE_PALLAS_INTERPRET=1 on CPU).
+FORCE_PALLAS_INTERPRET=1 on CPU). ``--trace-dir DIR`` turns on the
+run-telemetry probes (`repro.obs`) and writes the JSONL event log there
+(read it back with ``python -m repro.obs summarize DIR``); ``--json``
+prints the run-footer event as one JSON object on stdout — the
+machine-readable outcome line for CI and scripts.
 """
 from __future__ import annotations
 
@@ -110,7 +114,21 @@ def _cmd_run(args) -> int:
             return 2
         s = s.with_system(s.system.with_deadline(args.deadline))
     res = run_scenario(s, rounds=args.rounds, seed=args.seed,
-                       eval_every=args.eval_every)
+                       eval_every=args.eval_every,
+                       trace=True if args.trace_dir else None,
+                       trace_dir=args.trace_dir)
+    if args.json:
+        from repro.obs.events import run_events
+
+        footer = run_events(
+            res, algo=None,
+            meta={"scenario": s.name, "spec_hash": s.spec_hash()})[-1]
+        footer["scenario"] = s.name
+        footer["spec_hash"] = s.spec_hash()
+        if res.events_path:
+            footer["events_path"] = res.events_path
+        print(json.dumps(footer, sort_keys=True))
+        return 0
     finals = []
     for metric in ("pm", "tm", "gm"):
         hist = getattr(res, f"{metric}_acc")
@@ -130,6 +148,9 @@ def _cmd_run(args) -> int:
               f"simulated s over {tl['rounds']} rounds "
               f"(mean {tl['mean_round_seconds']:.3f}s/round, "
               f"{tl['dropped_devices']} device straggler drops)")
+    if res.events_path:
+        print(f"  events: {res.events_path} "
+              f"(python -m repro.obs summarize {args.trace_dir})")
     for metric, acc in s.paper_ref:
         print(f"  paper {metric}: {acc}% (A100, full rounds)")
     return 0
@@ -164,6 +185,10 @@ def main(argv=None) -> int:
                    help="per-round straggler deadline, simulated seconds")
     p.add_argument("--smoke", action="store_true",
                    help="2x3x16 topology, 2 rounds (CI liveness)")
+    p.add_argument("--trace-dir", default=None,
+                   help="enable probes + write the JSONL event log here")
+    p.add_argument("--json", action="store_true",
+                   help="print the run-footer event as JSON on stdout")
     p.set_defaults(fn=_cmd_run)
     args = ap.parse_args(argv)
     return args.fn(args)

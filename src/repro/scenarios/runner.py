@@ -119,7 +119,8 @@ def build_scenario(name_or_spec, seed: int = 0) -> ScenarioBuild:
 def run_scenario(name_or_spec, *, rounds: Optional[int] = None,
                  seed: int = 0, init_seed: Optional[int] = None,
                  eval_every: int = 1, scan: bool = True,
-                 system=_KEEP_SPEC_SYSTEM) -> FLResult:
+                 system=_KEEP_SPEC_SYSTEM, trace=None,
+                 trace_dir=None) -> FLResult:
     """Run one scenario through the scanned engine.
 
     rounds: override the spec's default round budget.
@@ -131,6 +132,9 @@ def run_scenario(name_or_spec, *, rounds: Optional[int] = None,
         overriding the scenario's own ``system`` field; pass None to
         disable simulation on a system-bearing spec. Unpassed, the
         spec's own model (if any) applies.
+    trace / trace_dir: run-telemetry (`repro.obs`) — probe streams on
+        ``FLResult.trace`` and a JSONL event log whose header carries
+        the scenario identity (name, family, spec_hash).
     Remaining arguments match ``train.engine.run_experiment``.
     """
     s = get_scenario(name_or_spec)
@@ -140,12 +144,16 @@ def run_scenario(name_or_spec, *, rounds: Optional[int] = None,
         rounds=s.rounds if rounds is None else rounds, m=b.m, n=b.n,
         team_frac=s.team_frac, device_frac=s.device_frac, seed=seed,
         eval_every=eval_every, scan=scan,
-        system=s.system if system is _KEEP_SPEC_SYSTEM else system)
+        system=s.system if system is _KEEP_SPEC_SYSTEM else system,
+        trace=trace, trace_dir=trace_dir,
+        event_meta={"scenario": s.name, "family": s.family,
+                    "spec_hash": s.spec_hash()})
 
 
 def sweep_scenario(name_or_spec, grid=({},), seeds=(0,), *,
                    rounds: Optional[int] = None, eval_every: int = 1,
-                   mesh=None, system=_KEEP_SPEC_SYSTEM) -> FLSweepResult:
+                   mesh=None, system=_KEEP_SPEC_SYSTEM, trace=None,
+                   trace_dir=None) -> FLSweepResult:
     """Run a hyperparameter grid x seeds over one scenario as a single
     vmapped program (``train.sweep.run_sweep``).
 
@@ -159,6 +167,8 @@ def sweep_scenario(name_or_spec, grid=({},), seeds=(0,), *,
         *system profile axis* into the same dispatch (run_sweep); None
         disables simulation on a system-bearing spec, and unpassed the
         scenario's own ``system`` field applies.
+    trace / trace_dir: run-telemetry (`repro.obs`), as in run_scenario —
+        per-config RunTraces and one sweep JSONL event file.
     """
     s = get_scenario(name_or_spec)
     if isinstance(seeds, int):
@@ -171,4 +181,7 @@ def sweep_scenario(name_or_spec, grid=({},), seeds=(0,), *,
         rounds=s.rounds if rounds is None else rounds, m=b.m, n=b.n,
         team_frac=s.team_frac, device_frac=s.device_frac,
         eval_every=eval_every, mesh=mesh,
-        system=s.system if system is _KEEP_SPEC_SYSTEM else system)
+        system=s.system if system is _KEEP_SPEC_SYSTEM else system,
+        trace=trace, trace_dir=trace_dir,
+        event_meta={"scenario": s.name, "family": s.family,
+                    "spec_hash": s.spec_hash()})

@@ -44,6 +44,13 @@ class Timeline:
         non-decreasing — round durations are strictly positive)."""
         return np.cumsum(np.asarray(self.round_seconds, dtype=np.float64))
 
+    def at_rounds(self, points) -> list:
+        """Cumulative simulated seconds at each 1-based round index —
+        the eval-point alignment helper behind ``FLResult.sim_seconds``
+        (pass ``repro.obs.eval_points(rounds, eval_every)``)."""
+        cum = self.cum_seconds()
+        return [float(cum[p - 1]) for p in points]
+
     def stragglers(self) -> int:
         """Total device drops across the run (deadline casualties)."""
         return int(np.sum(self.dropped_devices))

@@ -48,10 +48,13 @@ import numpy as np
 
 from repro.comm import CommLedger
 from repro.core.participation import sample_masks
+from repro.obs.events import write_run
+from repro.obs.profiling import compiled_cost, profile_ctx
+from repro.obs.trace import RunTrace, TraceConfig, eval_points
 from repro.system import (Timeline, get_profile, simulate_round,
                           workload_for)
 
-__all__ = ["FLResult", "run_experiment"]
+__all__ = ["FLResult", "eval_points", "run_experiment"]
 
 
 @dataclass
@@ -81,6 +84,11 @@ class FLResult:
     participation: list = field(default_factory=list)  # (teams, devices)/rnd
     timeline: Optional[Timeline] = None  # per-round simulated clock
     sim_seconds: list = field(default_factory=list)  # cum sim time @ evals
+    trace: Optional[RunTrace] = None     # per-round probe streams (obs)
+    rounds: int = 0                      # round budget this result ran
+    eval_every: int = 1                  # eval cadence (aligns histories)
+    dispatches: int = 0                  # jitted calls that executed it
+    events_path: Optional[str] = None    # JSONL event log (trace_dir runs)
 
     def last(self, which="pm"):
         """Final-eval value of metric `which` ('pm'|'tm'|'gm'); NaN if the
@@ -114,16 +122,21 @@ def check_participation(algo, team_frac: float, device_frac: float):
             "masks that never gate anything")
 
 
-def _round_body(algo, m, n, team_frac, device_frac, system=None):
+def _round_body(algo, m, n, team_frac, device_frac, system=None,
+                trace=None):
     """Scan step: in-graph mask sampling (key in the carry), optional
     system simulation (round time + deadline mask thinning), one
     algorithm round, and a dict of realized per-round outputs — gated
     participation counts, plus simulated time and straggler counts when
-    a system model is active.
+    a system model is active, plus ``probe:``-prefixed scalar
+    diagnostics when a `TraceConfig` is.
 
     system: None, or a static ``(SystemSpec skeleton, RoundWorkload)``
     pair; the spec's float values arrive as the traced ``sleaves``
     operand (see `repro.system.spec.SystemSpec.tree_floats`).
+    trace: None (default — the emitted graph is byte-identical to the
+    pre-trace engine), or a `TraceConfig`: ``algo.probe_round`` runs on
+    the post-round state and its scalars ride the scan outputs.
     """
     sampled = team_frac < 1.0 or device_frac < 1.0
 
@@ -153,10 +166,16 @@ def _round_body(algo, m, n, team_frac, device_frac, system=None):
                 sleaves, workload, skey, tm, dm)
             out.update(t_round=t_round, dropped_teams=drop_t,
                        dropped_devices=drop_d)
+        prev = state
         state = algo.round(state, data, team_mask=tm, device_mask=dm)
         gated = dm * tm[:, None]
         out.update(teams=jnp.sum(tm).astype(jnp.int32),
                    devices=jnp.sum(gated).astype(jnp.int32))
+        if trace is not None:
+            probes = algo.probe_round(prev, state, data, team_mask=tm,
+                                      device_mask=dm, trace=trace)
+            out.update({f"probe:{k}": jnp.asarray(v, jnp.float32)
+                        for k, v in probes.items()})
         return (state, key), out
 
     return body
@@ -173,7 +192,7 @@ def hparam_skeleton(algo):
 
 
 def _chunk_runner(skel, metric_fn, m, n, team_frac, device_frac,
-                  system=None):
+                  system=None, trace=None):
     """The traceable heart of an experiment — shared verbatim by the
     per-experiment program below and train.sweep's vmapped grid program:
     rebuild the algorithm from its hparam leaves, then scan `n_steps`
@@ -181,13 +200,15 @@ def _chunk_runner(skel, metric_fn, m, n, team_frac, device_frac,
     ``sleaves`` (the system model's float values, when `system` names a
     static skeleton/workload pair) is a traced operand like the hparam
     leaves — sweeps stack system profiles the same way they stack
-    hyperparameters."""
+    hyperparameters. ``trace`` (a static `TraceConfig` or None) selects
+    the probe outputs the round body emits."""
     _, rebuild = skel.tree_hparams()
 
     def run_chunks(hleaves, state, key, tr, va, *, sleaves=None, length,
                    n_steps):
         algo = rebuild(hleaves)
-        body = _round_body(algo, m, n, team_frac, device_frac, system)
+        body = _round_body(algo, m, n, team_frac, device_frac, system,
+                           trace)
 
         def chunk(carry, _):
             state, key = carry
@@ -203,14 +224,16 @@ def _chunk_runner(skel, metric_fn, m, n, team_frac, device_frac,
 
 
 # Compiled programs are cached per (hparam skeleton, metric_fn, dims,
-# system skeleton): every experiment with the same static structure —
-# whatever its float hyperparameter or system-profile values — shares
-# one compile and pays one dispatch.
+# system skeleton, trace config): every experiment with the same static
+# structure — whatever its float hyperparameter or system-profile values
+# — shares one compile and pays one dispatch. A TraceConfig is part of
+# the static key (probes add scan outputs), so probes-off runs keep
+# hitting the original program.
 @functools.lru_cache(maxsize=128)
 def _scan_program(skel, metric_fn, m, n, team_frac, device_frac,
-                  system=None):
+                  system=None, trace=None):
     run_chunks = _chunk_runner(skel, metric_fn, m, n, team_frac,
-                               device_frac, system)
+                               device_frac, system, trace)
     return functools.partial(jax.jit, static_argnames=(
         "length", "n_steps"))(run_chunks)
 
@@ -222,13 +245,8 @@ def _eval_program(skel, metric_fn):
         state, tr, va, metric_fn))
 
 
-def eval_points(rounds: int, eval_every: int) -> list:
-    """1-based round indices at which the engine evaluates: every
-    `eval_every` rounds plus the final round. Shared with train.sweep so
-    `FLResult.sim_seconds` aligns with the metric histories."""
-    n_chunks, rem = divmod(rounds, eval_every)
-    return [eval_every * (k + 1) for k in range(n_chunks)] \
-        + ([rounds] if rem else [])
+# eval_points moved to repro.obs.trace (the event log aligns on the same
+# grid) and is re-exported here for its original callers.
 
 
 def assemble_timeline(res: FLResult, profile: str, round_times, drop_t,
@@ -241,16 +259,16 @@ def assemble_timeline(res: FLResult, profile: str, round_times, drop_t,
         round_seconds=[float(x) for x in round_times],
         dropped_teams=[int(x) for x in drop_t],
         dropped_devices=[int(x) for x in drop_d])
-    cum = res.timeline.cum_seconds()
-    res.sim_seconds = [float(cum[p - 1]) for p in
-                       eval_points(rounds, eval_every)]
+    res.sim_seconds = res.timeline.at_rounds(
+        eval_points(rounds, eval_every))
 
 
 def run_experiment(algo, params0, train_data, val_data, *,
                    metric_fn: Callable, rounds: int, m: int, n: int,
                    team_frac: float = 1.0, device_frac: float = 1.0,
                    seed: int = 0, eval_every: int = 1, scan: bool = True,
-                   system=None) -> FLResult:
+                   system=None, trace=None, trace_dir=None,
+                   event_meta: Optional[dict] = None) -> FLResult:
     """Drive `algo` for `rounds` global rounds, evaluating every
     `eval_every` rounds (and after the final round). Returns an FLResult
     whose metric histories hold one entry per eval point.
@@ -262,8 +280,18 @@ def run_experiment(algo, params0, train_data, val_data, *,
     profile name, or a spec dict): simulate each round's duration and —
     in deadline mode — drop stragglers from the participation masks;
     the result grows a `Timeline` and `sim_seconds` history.
+    trace: optional `repro.obs.TraceConfig` (or True for the default
+    one): emit per-round probe scalars as extra scan outputs, assembled
+    into ``FLResult.trace``; also gates the cost-analysis capture and
+    the ``jax.profiler`` context. None (default) leaves the compiled
+    program — and the trajectory — untouched.
+    trace_dir: when set, write the run's JSONL event log (header / eval
+    points / footer, `repro.obs.events`) into this directory;
+    ``event_meta`` is merged into the header (scenario identity etc.).
     """
     check_participation(algo, team_frac, device_frac)
+    if trace is True:
+        trace = TraceConfig()
     state = algo.init_state(params0, m, n)
     key = jax.random.PRNGKey(seed)
     n_chunks, rem = divmod(rounds, eval_every)
@@ -276,11 +304,12 @@ def run_experiment(algo, params0, train_data, val_data, *,
 
     skel, hleaves = hparam_skeleton(algo)
     scanned = _scan_program(skel, metric_fn, m, n, team_frac, device_frac,
-                            sys_key)
-    round_body = _round_body(algo, m, n, team_frac, device_frac, sys_key)
+                            sys_key, trace)
+    round_body = _round_body(algo, m, n, team_frac, device_frac, sys_key,
+                             trace)
     eval_jit = _eval_program(skel, metric_fn)
 
-    res = FLResult()
+    res = FLResult(rounds=rounds, eval_every=eval_every)
     ledger = algo.make_ledger(params0)
     outs_flat = {}          # output name -> flat per-round list
     t0 = time.time()
@@ -296,37 +325,54 @@ def run_experiment(algo, params0, train_data, val_data, *,
             outs_flat.setdefault(k, []).extend(
                 np.asarray(v).reshape(-1).tolist())
 
-    if scan:
-        for length, n_steps in ((eval_every, n_chunks), (rem, 1)):
-            if length == 0 or n_steps == 0:
-                continue
-            (state, key), (metrics, outs) = scanned(
-                hleaves, state, key, train_data, val_data,
-                sleaves=sleaves, length=length, n_steps=n_steps)
-            if t_first is None:
-                jax.block_until_ready(state)
-                t_first = time.time()
-            record(metrics, outs)
-    else:
-        for t in range(rounds):
-            (state, key), outs = round_body((state, key), None,
-                                            train_data, sleaves)
-            if t_first is None:
-                jax.block_until_ready(state)
-                t_first = time.time()
-            for k, v in outs.items():
-                outs_flat.setdefault(k, []).append(
-                    float(v) if k == "t_round" else int(v))
-            if (t + 1) % eval_every == 0 or t == rounds - 1:
-                metrics = eval_jit(hleaves, state, train_data, val_data)
-                for k, v in metrics.items():
-                    getattr(res, _METRIC_FIELDS[k]).append(float(v))
+    with profile_ctx(trace):
+        if scan:
+            for length, n_steps in ((eval_every, n_chunks), (rem, 1)):
+                if length == 0 or n_steps == 0:
+                    continue
+                (state, key), (metrics, outs) = scanned(
+                    hleaves, state, key, train_data, val_data,
+                    sleaves=sleaves, length=length, n_steps=n_steps)
+                res.dispatches += 1
+                if t_first is None:
+                    jax.block_until_ready(state)
+                    t_first = time.time()
+                record(metrics, outs)
+        else:
+            for t in range(rounds):
+                (state, key), outs = round_body((state, key), None,
+                                                train_data, sleaves)
+                res.dispatches += 1
+                if t_first is None:
+                    jax.block_until_ready(state)
+                    t_first = time.time()
+                for k, v in outs.items():
+                    outs_flat.setdefault(k, []).append(
+                        float(v) if k == "t_round"
+                        or k.startswith("probe:") else int(v))
+                if (t + 1) % eval_every == 0 or t == rounds - 1:
+                    metrics = eval_jit(hleaves, state, train_data,
+                                       val_data)
+                    res.dispatches += 1
+                    for k, v in metrics.items():
+                        getattr(res, _METRIC_FIELDS[k]).append(float(v))
 
     t_end = time.time()
     res.compile_seconds = (t_first if t_first is not None else t_end) - t0
     res.run_seconds = t_end - (t_first if t_first is not None else t_end)
     res.seconds = res.compile_seconds + res.run_seconds
     res.state = state
+
+    probe_series = {k.split(":", 1)[1]: outs_flat.pop(k)
+                    for k in sorted(outs_flat) if k.startswith("probe:")}
+    if trace is not None:
+        cost = None
+        if trace.cost_analysis and scan and n_chunks:
+            # shapes are all that matter; the live operands carry them
+            cost = compiled_cost(scanned, hleaves, state, key, train_data,
+                                 val_data, sleaves=sleaves,
+                                 length=eval_every, n_steps=n_chunks)
+        res.trace = RunTrace(config=trace, series=probe_series, cost=cost)
 
     res.participation = list(zip(
         [int(x) for x in outs_flat.get("teams", [])],
@@ -340,4 +386,12 @@ def run_experiment(algo, params0, train_data, val_data, *,
         for n_teams, n_devices in res.participation:
             algo.log_comm_round(ledger, n_teams=n_teams, n_devices=n_devices)
         res.comm = ledger
+
+    if trace_dir is not None:
+        res.events_path = str(write_run(
+            trace_dir, res, algo=algo,
+            meta={"m": m, "n": n, "seed": seed, "team_frac": team_frac,
+                  "device_frac": device_frac, "scan": scan,
+                  "system": system.name if system is not None else None,
+                  **(event_meta or {})}))
     return res

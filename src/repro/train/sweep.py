@@ -50,6 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.events import write_sweep
+from repro.obs.trace import RunTrace, TraceConfig
 from repro.system import get_profile
 from repro.train.engine import (_METRIC_FIELDS, FLResult,
                                 assemble_timeline, _chunk_runner,
@@ -95,6 +97,7 @@ class FLSweepResult:
     compile_seconds: float = 0.0
     run_seconds: float = 0.0
     dispatches: int = 0
+    events_path: Optional[str] = None    # JSONL event log (trace_dir runs)
 
     def __len__(self):
         return len(self.results)
@@ -121,9 +124,9 @@ class FLSweepResult:
 # runs the engine's chunk program (_chunk_runner) verbatim.
 @functools.lru_cache(maxsize=64)
 def _sweep_program(skel, metric_fn, m, n, team_frac, device_frac,
-                   sys_key=None):
+                   sys_key=None, trace=None):
     run_chunks = _chunk_runner(skel, metric_fn, m, n, team_frac,
-                               device_frac, sys_key)
+                               device_frac, sys_key, trace)
 
     @functools.partial(jax.jit, static_argnames=("length", "n_steps"))
     def swept(hstack, states, keys, sstack, tr, va, *, length, n_steps):
@@ -247,11 +250,13 @@ def _prepare(algo, grid, seeds, params0, m, n, team_frac, device_frac,
 
 def _collect(prep: _Prepared, states, metric_hist, outs_hist, *,
              seconds, compile_seconds, run_seconds, dispatches, rounds,
-             eval_every) -> FLSweepResult:
+             eval_every, trace=None) -> FLSweepResult:
     """Slice one sweep's stacked outputs into per-config FLResults.
 
     metric_hist: field -> list of (S, n_steps) arrays; outs_hist: list of
     per-segment dicts of (S, n_steps, length) per-round output arrays.
+    trace: the sweep's TraceConfig — when set, each config's ``probe:``
+    output streams become a per-config `RunTrace`.
     """
     S = len(prep.configs)
     out = FLSweepResult(configs=prep.configs, state_stacked=states,
@@ -260,7 +265,8 @@ def _collect(prep: _Prepared, states, metric_hist, outs_hist, *,
     for i in range(S):
         res = FLResult(seconds=seconds / S,
                        compile_seconds=compile_seconds / S,
-                       run_seconds=run_seconds / S)
+                       run_seconds=run_seconds / S, rounds=rounds,
+                       eval_every=eval_every, dispatches=dispatches)
         for k, segs in metric_hist.items():
             getattr(res, _METRIC_FIELDS[k]).extend(
                 float(x) for seg in segs for x in seg[i])
@@ -268,6 +274,10 @@ def _collect(prep: _Prepared, states, metric_hist, outs_hist, *,
         for seg in outs_hist:
             for k, v in seg.items():
                 flat.setdefault(k, []).extend(v[i].reshape(-1).tolist())
+        if trace is not None:
+            res.trace = RunTrace(config=trace, series={
+                k.split(":", 1)[1]: flat.pop(k)
+                for k in sorted(flat) if k.startswith("probe:")})
         res.participation = list(zip([int(x) for x in flat["teams"]],
                                      [int(x) for x in flat["devices"]]))
         if "t_round" in flat:
@@ -288,8 +298,8 @@ def _collect(prep: _Prepared, states, metric_hist, outs_hist, *,
 def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
               metric_fn: Callable, rounds: int, m: int, n: int,
               team_frac: float = 1.0, device_frac: float = 1.0,
-              eval_every: int = 1, mesh=None,
-              system=None) -> FLSweepResult:
+              eval_every: int = 1, mesh=None, system=None, trace=None,
+              trace_dir=None, event_meta=None) -> FLSweepResult:
     """Run ``len(grid) * len(seeds) [* len(system)]`` experiments as one
     compiled program.
 
@@ -312,12 +322,19 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
         profile* axis to the sweep (innermost), every profile sharing the
         compiled program via its float-leaf split. Each config's FLResult
         gains a simulated `Timeline` + `sim_seconds`.
+    trace: optional `repro.obs.TraceConfig` (or True): probe scalars ride
+        the vmapped scan outputs and each config's FLResult gains its own
+        `RunTrace` — identical streams to running the config alone.
+    trace_dir / event_meta: when set, write the whole sweep's JSONL event
+        stream (sweep_header + per-config run sections) into trace_dir.
     Remaining arguments match ``run_experiment``.
 
     Returns an FLSweepResult; equivalence with the sequential loop
     ``[run_experiment(rebuild(cfg), ...) for cfg in configs]`` is pinned
     by tests/test_sweep.py.
     """
+    if trace is True:
+        trace = TraceConfig()
     prep = _prepare(algo, grid, seeds, params0, m, n, team_frac,
                     device_frac, system)
     states, keys, hstack, sstack = (prep.states, prep.keys, prep.hstack,
@@ -346,7 +363,7 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
                                 val_data)
 
     swept = _sweep_program(prep.skel, metric_fn, m, n, team_frac,
-                           device_frac, prep.sys_key)
+                           device_frac, prep.sys_key, trace)
     n_chunks, rem = divmod(rounds, eval_every)
 
     metric_hist = {}           # field -> list of (S, n_steps) arrays
@@ -370,10 +387,16 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
     t_end = time.time()
     t_first = t_first if t_first is not None else t_end
 
-    return _collect(prep, states, metric_hist, outs_hist,
-                    seconds=t_end - t0, compile_seconds=t_first - t0,
-                    run_seconds=t_end - t_first, dispatches=dispatches,
-                    rounds=rounds, eval_every=eval_every)
+    out = _collect(prep, states, metric_hist, outs_hist,
+                   seconds=t_end - t0, compile_seconds=t_first - t0,
+                   run_seconds=t_end - t_first, dispatches=dispatches,
+                   rounds=rounds, eval_every=eval_every, trace=trace)
+    if trace_dir is not None:
+        out.events_path = str(write_sweep(
+            trace_dir, out, algo=algo,
+            meta={"m": m, "n": n, "team_frac": team_frac,
+                  "device_frac": device_frac, **(event_meta or {})}))
+    return out
 
 
 # Fused multi-sweep programs are cached per tuple of member static keys:
@@ -382,8 +405,9 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
 # one dispatch per segment.
 @functools.lru_cache(maxsize=32)
 def _multi_program(member_keys, metric_fn, m, n):
-    runners = [_chunk_runner(skel, metric_fn, m, n, tf, df, sys_key)
-               for skel, sys_key, tf, df in member_keys]
+    runners = [_chunk_runner(skel, metric_fn, m, n, tf, df, sys_key,
+                             trace)
+               for skel, sys_key, tf, df, trace in member_keys]
 
     @functools.partial(jax.jit, static_argnames=("length", "n_steps"))
     def multi(ops, tr, va, *, length, n_steps):
@@ -418,24 +442,30 @@ def run_multi_sweep(variants, train_data, val_data, *,
 
     variants: sequence of dicts, each with keys ``algo`` and ``params0``
         plus optional ``grid`` (default ``[{}]``), ``seeds`` (default
-        ``(0,)``), ``team_frac`` / ``device_frac`` (default 1.0), and
-        ``system`` (as in ``run_sweep``). Data, metric_fn, rounds, and
-        dims are shared — variants are views of one experiment family.
+        ``(0,)``), ``team_frac`` / ``device_frac`` (default 1.0),
+        ``system``, and ``trace`` (as in ``run_sweep`` — per-variant, so
+        probed and probe-free members can share the program). Data,
+        metric_fn, rounds, and dims are shared — variants are views of
+        one experiment family.
 
     Returns one FLSweepResult per variant, in order; every result
     reports the same ``dispatches`` count (1, or 2 with a remainder
     chunk) because the members executed together.
     """
     preps = []
+    traces = []
     for v in variants:
         v = dict(v)
         preps.append(_prepare(
             v["algo"], v.get("grid", [{}]), v.get("seeds", (0,)),
             v["params0"], m, n, v.get("team_frac", 1.0),
             v.get("device_frac", 1.0), v.get("system")))
+        t = v.get("trace")
+        traces.append(TraceConfig() if t is True else t)
 
-    member_keys = tuple((p.skel, p.sys_key, p.team_frac, p.device_frac)
-                        for p in preps)
+    member_keys = tuple(
+        (p.skel, p.sys_key, p.team_frac, p.device_frac, t)
+        for p, t in zip(preps, traces))
     multi = _multi_program(member_keys, metric_fn, m, n)
     ops = tuple((p.hstack, p.states, p.keys, p.sstack) for p in preps)
     n_chunks, rem = divmod(rounds, eval_every)
@@ -475,5 +505,5 @@ def run_multi_sweep(variants, train_data, val_data, *,
             outs_hist[i], seconds=(t_end - t0) * share,
             compile_seconds=(t_first - t0) * share,
             run_seconds=(t_end - t_first) * share, dispatches=dispatches,
-            rounds=rounds, eval_every=eval_every))
+            rounds=rounds, eval_every=eval_every, trace=traces[i]))
     return out

@@ -25,6 +25,13 @@ PUBLIC_MODULES = (
     "repro.system.spec",
     "repro.system.simulate",
     "repro.system.timeline",
+    "repro.obs",
+    "repro.obs.trace",
+    "repro.obs.probes",
+    "repro.obs.events",
+    "repro.obs.profiling",
+    "repro.obs.regress",
+    "repro.train.metrics",
 )
 
 _EXEMPT_METHODS = {"tree_flatten", "tree_unflatten"}

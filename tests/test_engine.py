@@ -287,3 +287,61 @@ def test_engine_learns_on_fed_data(small_fed_data):
     assert r_p.pm_acc[-1] > 0.85
     assert r_p.pm_acc[-1] >= r_f.gm_acc[-1] - 0.02
     assert r_p.train_loss[-1] < r_p.train_loss[0]
+
+
+# ---------------------------------------------------------------------------
+# run-telemetry probes (repro.obs): measurement must not perturb anything
+# ---------------------------------------------------------------------------
+
+def test_probes_off_is_bit_identical(quad_data):
+    """The observability tentpole's core guarantee: a probes-on run and a
+    probes-off run of the same experiment produce exactly equal (not just
+    close) trajectories, final states, and byte ledgers — probes only
+    read the state."""
+    comm = CommConfig(compressor="topk", k_frac=0.5)
+    kw = dict(metric_fn=neg_loss, rounds=6, m=M, n=N, seed=3,
+              eval_every=2, team_frac=0.5, device_frac=0.75)
+    off = run_experiment(PerMFL(quad_loss, HP, comm=comm), jnp.zeros(D),
+                         quad_data, quad_data, **kw)
+    on = run_experiment(PerMFL(quad_loss, HP, comm=comm), jnp.zeros(D),
+                        quad_data, quad_data, trace=True, **kw)
+    for f in ("pm_acc", "tm_acc", "gm_acc", "train_loss"):
+        np.testing.assert_array_equal(np.asarray(getattr(off, f)),
+                                      np.asarray(getattr(on, f)), err_msg=f)
+    for a, b in zip(jax.tree.leaves(off.state), jax.tree.leaves(on.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert off.participation == on.participation
+    assert off.comm.totals() == on.comm.totals()
+    assert off.trace is None and on.trace is not None
+
+
+def test_probe_streams_scan_matches_dispatch(quad_data):
+    """Probe values are per-round scan outputs under scan=True and eager
+    per-dispatch values under scan=False; both execution models must
+    report the same streams (same masks, same states, same probes)."""
+    comm = CommConfig(compressor="topk", k_frac=0.5)
+    kw = dict(metric_fn=neg_loss, rounds=5, m=M, n=N, seed=7,
+              eval_every=2, team_frac=0.5, device_frac=0.75, trace=True)
+    scan = run_experiment(PerMFL(quad_loss, HP, comm=comm), jnp.zeros(D),
+                          quad_data, quad_data, scan=True, **kw)
+    disp = run_experiment(PerMFL(quad_loss, HP, comm=comm), jnp.zeros(D),
+                          quad_data, quad_data, scan=False, **kw)
+    assert scan.trace.names() == disp.trace.names()
+    assert len(scan.trace) == len(disp.trace) == 5
+    for name in scan.trace.names():
+        np.testing.assert_allclose(scan.trace[name], disp.trace[name],
+                                   atol=1e-5, err_msg=name)
+    # dispatch mode pays one call per round + one per eval point
+    assert scan.dispatches == 2      # main chunks + remainder
+    assert disp.dispatches == 5 + 3  # 5 rounds + evals at 2, 4, 5
+
+
+def test_baseline_probe_round_generic_update_norm(quad_data):
+    """Mask-blind baselines get the FLAlgorithmBase default probe set:
+    the whole-state update norm only."""
+    res = run_experiment(B.FedAvg(quad_loss, lr=0.05, local_steps=3),
+                         jnp.zeros(D), quad_data, quad_data,
+                         metric_fn=neg_loss, rounds=3, m=M, n=N,
+                         trace=True)
+    assert res.trace.names() == ["update_norm"]
+    assert all(v > 0 for v in res.trace["update_norm"])

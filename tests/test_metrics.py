@@ -1,0 +1,70 @@
+"""Direct unit tests for train.metrics: token_accuracy / perplexity /
+RunningMean (previously only exercised transitively)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.metrics import RunningMean, perplexity, token_accuracy
+
+
+def test_token_accuracy_counts_only_unpadded():
+    logits = jnp.asarray([[[0.1, 0.9], [0.8, 0.2], [0.3, 0.7]]])
+    targets = jnp.asarray([[1, 1, -1]])     # last position is padding
+    # predictions: [1, 0, 1] -> correct on pos 0, wrong on pos 1, pos 2
+    # masked out entirely
+    assert float(token_accuracy(logits, targets)) == pytest.approx(0.5)
+
+
+def test_token_accuracy_all_padding_is_zero_not_nan():
+    logits = jnp.zeros((1, 2, 3))
+    targets = jnp.full((1, 2), -1)
+    assert float(token_accuracy(logits, targets)) == 0.0
+
+
+def test_perplexity_is_exp_loss():
+    assert float(perplexity(jnp.asarray(0.0))) == pytest.approx(1.0)
+    assert float(perplexity(jnp.asarray(2.0))) == pytest.approx(math.e ** 2)
+
+
+def test_running_mean_weighted():
+    rm = RunningMean()
+    rm.update(1.0)
+    rm.update(4.0, n=3)
+    assert rm.mean == pytest.approx((1.0 + 4.0 * 3) / 4)
+    assert rm.count == 4
+
+
+def test_running_mean_empty_is_zero():
+    assert RunningMean().mean == 0.0
+
+
+def test_running_mean_rejects_nonpositive_n():
+    rm = RunningMean()
+    with pytest.raises(ValueError):
+        rm.update(1.0, n=0)
+    with pytest.raises(ValueError):
+        rm.update(1.0, n=-2)
+    # rejected updates must not have touched the aggregate
+    assert rm.count == 0 and rm.mean == 0.0
+
+
+def test_running_mean_rejects_non_integer_n():
+    with pytest.raises(TypeError):
+        RunningMean().update(1.0, n=2.5)
+
+
+def test_running_mean_reset():
+    rm = RunningMean()
+    rm.update(5.0, n=2)
+    rm.reset()
+    assert rm.count == 0 and rm.mean == 0.0
+    rm.update(3.0)
+    assert rm.mean == pytest.approx(3.0)
+
+
+def test_running_mean_accepts_numpy_ints():
+    rm = RunningMean()
+    rm.update(2.0, n=np.int64(2))
+    assert rm.count == 2 and rm.mean == pytest.approx(2.0)

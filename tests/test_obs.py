@@ -1,0 +1,269 @@
+"""Run-telemetry layer (repro.obs): RunTrace assembly, JSONL event
+round-trips, the summarize/regress CLIs, and trace equivalence between
+the solo engine and the vmapped sweep."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig
+from repro.core import PerMFL
+from repro.core.permfl import PerMFLHParams
+from repro.obs import RunTrace, TraceConfig, eval_points
+from repro.obs import events as E
+from repro.obs import regress as R
+from repro.obs.__main__ import main as obs_main
+from repro.train.engine import run_experiment
+from repro.train.sweep import run_sweep
+
+M, N, D = 3, 4, 5
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum((params - batch["c"]) ** 2)
+
+
+def neg_loss(params, batch):
+    return -quad_loss(params, batch)
+
+
+@pytest.fixture(scope="module")
+def quad_data():
+    rng = np.random.default_rng(0)
+    return {"c": jnp.asarray(rng.normal(size=(M, N, D)).astype(np.float32))}
+
+
+HP = PerMFLHParams(alpha=0.05, eta=0.04, beta=0.3, lam=0.8, gamma=2.0,
+                   k_team=3, l_local=4)
+KW = dict(metric_fn=neg_loss, rounds=6, m=M, n=N, seed=3, eval_every=2,
+          team_frac=0.5, device_frac=0.75)
+
+
+@pytest.fixture(scope="module")
+def traced_run(quad_data):
+    algo = PerMFL(quad_loss, HP,
+                  comm=CommConfig(compressor="topk", k_frac=0.5))
+    return algo, run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                                trace=True, **KW)
+
+
+# ---------------------------------------------------------------------------
+# eval_points / RunTrace
+# ---------------------------------------------------------------------------
+
+def test_eval_points_grid():
+    assert eval_points(6, 2) == [2, 4, 6]
+    assert eval_points(7, 2) == [2, 4, 6, 7]
+    assert eval_points(3, 1) == [1, 2, 3]
+    assert eval_points(2, 5) == [2]
+
+
+def test_runtrace_accessors():
+    t = RunTrace(config=TraceConfig(),
+                 series={"a": [1.0, 2.0, 3.0, 4.0], "b": [0.5] * 4})
+    assert len(t) == 4
+    assert t.names() == ["a", "b"]
+    assert t["a"] == [1.0, 2.0, 3.0, 4.0]
+    assert t.last("a") == 4.0
+    assert np.isnan(t.last("missing"))
+
+
+def test_runtrace_at_points_segment_means():
+    t = RunTrace(config=TraceConfig(), series={"a": [1.0, 3.0, 5.0, 7.0]})
+    segs = t.at_points([2, 4])
+    assert segs[0]["a"] == pytest.approx(2.0)   # mean of rounds 1-2
+    assert segs[1]["a"] == pytest.approx(6.0)   # mean of rounds 3-4
+
+
+def test_runtrace_summary():
+    t = RunTrace(config=TraceConfig(), series={"a": [1.0, 3.0]})
+    s = t.summary()
+    assert s["a"] == {"mean": 2.0, "max": 3.0, "last": 3.0}
+
+
+# ---------------------------------------------------------------------------
+# engine integration: probe streams + event log
+# ---------------------------------------------------------------------------
+
+def test_engine_trace_streams(traced_run):
+    _, res = traced_run
+    assert res.trace is not None
+    assert len(res.trace) == KW["rounds"]
+    # PerMFL with comm emits the full probe set
+    assert {"update_norm", "grad_norm", "pers_gap_mean", "pers_gap_max",
+            "tier_drift_mean", "tier_drift_max", "ef_dev_norm",
+            "ef_team_norm", "part_loss"} <= set(res.trace.names())
+    for name in res.trace.names():
+        assert np.isfinite(res.trace[name]).all(), name
+    assert res.rounds == KW["rounds"]
+    assert res.eval_every == KW["eval_every"]
+    assert res.dispatches == 1          # 6 rounds / eval_every=2, no rem
+
+
+def test_trace_off_leaves_result_bare(quad_data):
+    algo = PerMFL(quad_loss, HP)
+    res = run_experiment(algo, jnp.zeros(D), quad_data, quad_data, **KW)
+    assert res.trace is None
+
+
+def test_events_roundtrip(tmp_path, traced_run):
+    algo, res = traced_run
+    path = E.write_run(tmp_path, res, algo=algo, meta={"tag": "t1"})
+    events = E.read_jsonl(path)
+    kinds = [e["event"] for e in events]
+    points = eval_points(KW["rounds"], KW["eval_every"])
+    assert kinds == ["run_header"] + ["eval"] * len(points) + ["run_footer"]
+    header, footer = events[0], events[-1]
+    assert header["algo"] == "permfl" and header["tag"] == "t1"
+    assert header["rounds"] == KW["rounds"]
+    assert set(header["hparams"]) == {"alpha", "eta", "beta", "lam",
+                                      "gamma"}
+    evals = [e for e in events if e["event"] == "eval"]
+    assert [e["round"] for e in evals] == points
+    for e in evals:
+        assert set(e["metrics"]) == {"pm", "tm", "gm", "train_loss"}
+        assert e["cum_bytes"] > 0           # comm run joins bytes
+        assert set(e["probes"]) == set(res.trace.names())
+    # cumulative bytes must be monotone across eval points
+    assert [e["cum_bytes"] for e in evals] == sorted(
+        e["cum_bytes"] for e in evals)
+    assert footer["final"]["pm"] == pytest.approx(res.pm_acc[-1])
+    assert footer["dispatches"] == 1
+    assert footer["comm"]["total_bytes"] == res.comm.total_bytes()
+    assert set(footer["probes"]) == set(res.trace.names())
+
+
+def test_split_and_summarize(tmp_path, traced_run):
+    algo, res = traced_run
+    E.write_run(tmp_path, res, algo=algo, run_id="r1")
+    E.write_run(tmp_path, res, algo=algo, run_id="r2")
+    runs = E.split_runs(E.read_jsonl(tmp_path))
+    assert [r[0]["run"] for r in runs] == ["r1", "r2"]
+    s = E.summarize_run(runs[0])
+    assert s["run"] == "r1" and s["algo"] == "permfl"
+    assert s["evals"] == len(eval_points(KW["rounds"], KW["eval_every"]))
+    delta = E.diff_summaries(s, E.summarize_run(runs[1]))
+    assert delta["final.pm"] == 0.0
+
+
+def test_summarize_cli(tmp_path, capsys, traced_run):
+    algo, res = traced_run
+    E.write_run(tmp_path, res, algo=algo, run_id="r1")
+    assert obs_main(["summarize", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "r1" in out and "dispatch" in out
+    # diff mode against itself: zero deltas, still exit 0
+    assert obs_main(["summarize", str(tmp_path), str(tmp_path)]) == 0
+    assert "diff" in capsys.readouterr().out
+
+
+def test_summarize_cli_empty_dir(tmp_path, capsys):
+    assert obs_main(["summarize", str(tmp_path)]) == 1
+    assert "no run events" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# sweep trace equivalence + sweep events
+# ---------------------------------------------------------------------------
+
+def test_sweep_traces_match_solo_runs(tmp_path, quad_data):
+    algo = PerMFL(quad_loss, HP)
+    grid = [{"beta": 0.3}, {"beta": 0.7}]
+    kw = {k: v for k, v in KW.items() if k != "seed"}
+    sw = run_sweep(algo, grid, (3,), jnp.zeros(D), quad_data, quad_data,
+                   trace=True, trace_dir=tmp_path, **kw)
+    assert sw.events_path is not None
+    for g, res in zip(grid, sw):
+        import dataclasses
+        solo = run_experiment(
+            dataclasses.replace(algo,
+                                hp=dataclasses.replace(algo.hp, **g)),
+            jnp.zeros(D), quad_data, quad_data, trace=True, seed=3, **kw)
+        assert res.trace.names() == solo.trace.names()
+        for name in solo.trace.names():
+            np.testing.assert_allclose(res.trace[name], solo.trace[name],
+                                       atol=1e-5)
+    events = E.read_jsonl(sw.events_path)
+    assert events[0]["event"] == "sweep_header"
+    assert events[0]["configs"] == 2
+    sections = E.split_runs(events)
+    assert len(sections) == 2
+    assert sections[0][0]["config"]["beta"] == pytest.approx(0.3)
+
+
+# ---------------------------------------------------------------------------
+# regress gate
+# ---------------------------------------------------------------------------
+
+_QUICK = {"mode": "quick",
+          "engine": {"rounds_per_sec": {"scan": 10.0, "legacy": 5.0}},
+          "sweep": {"configs_per_sec": {"sweep": 4.0, "seq": 1.0}},
+          "obs": {"rounds_per_sec_probes": 9.0}}
+_SMOKE = {"mode": "smoke",
+          "engine": {"rounds_per_sec": 9.5},
+          "sweep": {"configs_per_sec": 3.9},
+          "obs": {"rounds_per_sec_probes": 8.8}}
+
+
+def test_load_rates_normalizes_modes():
+    q, s = R.load_rates(_QUICK), R.load_rates(_SMOKE)
+    # smoke scalars land on the same dotted keys as quick's dict entries
+    shared = set(q) & set(s)
+    assert {"engine.rounds_per_sec.scan", "sweep.configs_per_sec.sweep",
+            "obs.rounds_per_sec.probes"} == shared
+
+
+def test_compare_passes_within_tolerance():
+    failures, report = R.compare(_QUICK, _SMOKE, tol=0.2)
+    assert failures == []
+    assert any("only in baseline" in ln for ln in report)  # legacy/seq
+
+
+def test_compare_fails_below_floor():
+    slow = json.loads(json.dumps(_SMOKE))
+    slow["engine"]["rounds_per_sec"] = 10.0 * 0.79
+    failures, _ = R.compare(_QUICK, slow, tol=0.2)
+    assert len(failures) == 1
+    assert "engine.rounds_per_sec.scan" in failures[0]
+    # improvements never fail
+    fast = json.loads(json.dumps(_SMOKE))
+    fast["engine"]["rounds_per_sec"] = 99.0
+    assert R.compare(_QUICK, fast, tol=0.2)[0] == []
+
+
+def test_regress_main_exit_codes(tmp_path, capsys):
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(_QUICK))
+    cur.write_text(json.dumps(_SMOKE))
+    assert R.main([str(base), str(cur)]) == 0
+    slow = json.loads(json.dumps(_SMOKE))
+    slow["engine"]["rounds_per_sec"] = 1.0
+    cur.write_text(json.dumps(slow))
+    assert R.main([str(base), str(cur)]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    # missing baseline: warn + pass (first run bootstraps the marker)
+    assert R.main([str(tmp_path / "nope.json"), str(cur)]) == 0
+    # regress is also reachable through the package CLI
+    assert obs_main(["regress", str(base), str(cur), "--tol", "0.99"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# scenarios CLI --json footer
+# ---------------------------------------------------------------------------
+
+def test_scenarios_cli_json_footer(capsys, tmp_path):
+    from repro.scenarios.__main__ import main as scen_main
+
+    rc = scen_main(["run", "table1/mnist/mclr/permfl", "--smoke",
+                    "--trace-dir", str(tmp_path), "--json"])
+    assert rc == 0
+    ev = json.loads(capsys.readouterr().out)
+    assert ev["event"] == "run_footer"
+    assert ev["scenario"] == "table1/mnist/mclr/permfl"
+    assert ev["spec_hash"]
+    assert set(ev["final"]) == {"pm", "tm", "gm", "train_loss"}
+    assert ev["events_path"].startswith(str(tmp_path))
+    # and the event log it points at parses + summarizes
+    assert obs_main(["summarize", str(tmp_path)]) == 0
