@@ -19,7 +19,10 @@ plus a `sweep` mode comparing a multi-config hyperparameter grid run as a
 sequential loop of scanned experiments vs ONE vmapped program
 (train.sweep.run_sweep), reporting configs/sec for both, and a `probes`
 measurement re-running the scanned path with the run-telemetry probes on
-(`repro.obs.TraceConfig`) to report the observability overhead.
+(`repro.obs.TraceConfig`) to report the observability overhead, and a
+`comm` measurement running a comm-heavy top-k scenario probes-off with
+the fused compression stack (default) vs the historical unfused chain
+(`REPRO_COMPRESS_FUSED=0`), reporting rounds/sec for both.
 
 Reproduction target: the scanned path beats legacy per-round dispatch in
 rounds/sec (the paper's multi-algorithm sweeps were dispatch-bound, not
@@ -41,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import pathlib
 import sys
 import time
@@ -48,6 +52,7 @@ import time
 import jax
 import numpy as np
 
+from repro.comm import CommConfig
 from repro.core.participation import sample_masks
 from repro.core.permfl import eval_stacked, init_state, permfl_round
 from repro.train.engine import run_experiment
@@ -65,6 +70,14 @@ BENCH_SCENARIO = FLScenario(
     name="bench/engine/mnist-mclr", data=DataSpec(dataset="mnist"),
     team_frac=TEAM_FRAC, device_frac=DEVICE_FRAC, data_seed=9,
     notes="engine rounds/sec + sweep configs/sec workload")
+
+# comm-heavy variant: top-k compression with error feedback on both
+# uplinks — the workload where the fused compression stack (DESIGN.md
+# §10) replaces the historical unfused select/pack chain
+COMM_SCENARIO = dataclasses.replace(
+    BENCH_SCENARIO, name="bench/engine/mnist-mclr-topk",
+    comm=CommConfig("topk", k_frac=0.1),
+    notes="fused-vs-unfused compression rounds/sec workload")
 
 
 def _setup():
@@ -106,6 +119,59 @@ def write_bench_json(payload: dict) -> None:
     print(f"# bench_engine: wrote {_BENCH_JSON.name}")
 
 
+def _bench_comm(csv, *, rounds: int, reps: int):
+    """Probes-off fused-vs-unfused compression on the comm-heavy top-k
+    scenario. ``REPRO_COMPRESS_FUSED=0`` selects the historical unfused
+    select/scatter chain; the default routes through the fused kernels in
+    ``repro.kernels.compress``. ``dispatch_key()`` rides the program
+    cache keys, so each setting compiles its own program. Returns
+    ``(failures, marker_entry)``; trajectories must match exactly (top-k
+    selection is bit-identical across the two paths)."""
+    b = build_scenario(COMM_SCENARIO)
+    kw = dict(metric_fn=b.metric_fn, rounds=rounds, m=b.m, n=b.n,
+              scan=True)
+
+    def timed():
+        run = lambda: run_experiment(b.algo, b.params0, b.train, b.val,
+                                     **kw)
+        res = run()                   # warm-up: populate the jit cache
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            res = run()
+            best = min(best, time.time() - t0)
+        return rounds / best, res
+
+    prev = os.environ.pop("REPRO_COMPRESS_FUSED", None)
+    try:
+        rps_fused, res_f = timed()
+        os.environ["REPRO_COMPRESS_FUSED"] = "0"
+        rps_unfused, res_u = timed()
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_COMPRESS_FUSED", None)
+        else:
+            os.environ["REPRO_COMPRESS_FUSED"] = prev
+
+    drift = max(abs(a - b) for a, b in zip(res_f.pm_acc, res_u.pm_acc))
+    csv(f"bench_engine,mnist,mclr-topk,comm,rounds_per_sec_fused,,"
+        f"{rps_fused:.2f}")
+    csv(f"bench_engine,mnist,mclr-topk,comm,rounds_per_sec_unfused,,"
+        f"{rps_unfused:.2f}")
+    csv(f"bench_engine,mnist,mclr-topk,comm,fused_over_unfused,,"
+        f"{rps_fused / rps_unfused:.2f}")
+    failures = []
+    if drift > 0 or not np.isfinite(drift):
+        failures.append(
+            f"bench_engine: fused/unfused trajectory drift {drift:.2e}")
+    entry = {"compressor": COMM_SCENARIO.comm.compressor,
+             "rounds": rounds,
+             "rounds_per_sec_fused": round(rps_fused, 2),
+             "rounds_per_sec_unfused": round(rps_unfused, 2),
+             "fused_over_unfused": round(rps_fused / rps_unfused, 2)}
+    return failures, entry
+
+
 def smoke() -> list:
     """CI guard: 2 rounds through the scanned path, then a 2-config x
     2-round sweep through the vmapped path — asserting both configs
@@ -140,8 +206,14 @@ def smoke() -> list:
     print(f"# bench_engine smoke: probes on, "
           f"{len(pr.trace.names())} streams OK")
 
+    # probes-off fused-vs-unfused compression on the comm-heavy scenario
+    comm_fails, comm_entry = _bench_comm(print, rounds=2, reps=1)
+    print(f"# bench_engine smoke: comm fused/unfused x"
+          f"{comm_entry['fused_over_unfused']} OK")
+
     write_bench_json({
         "mode": "smoke",
+        "comm": comm_entry,
         "engine": {"rounds": 2,
                    "rounds_per_sec": round(2 / max(warm.seconds, 1e-9), 2),
                    "cold_seconds": round(res.seconds, 3),
@@ -160,7 +232,7 @@ def smoke() -> list:
                     (pr_warm.seconds - warm.seconds)
                     / max(warm.seconds, 1e-9) * 100, 1)},
     })
-    return []
+    return comm_fails
 
 
 def main(quick: bool = True, csv=print) -> list:
@@ -234,8 +306,13 @@ def main(quick: bool = True, csv=print) -> list:
         failures.append(
             f"bench_engine: probes-on trajectory moved ({p_drift:.2e})")
 
+    comm_fails, comm_entry = _bench_comm(csv, rounds=max(4, rounds // 4),
+                                         reps=reps)
+    failures += comm_fails
+
     write_bench_json({
         "mode": "quick" if quick else "full",
+        "comm": comm_entry,
         "engine": {"rounds": rounds,
                    "rounds_per_sec": {k: round(v, 2)
                                       for k, v in rps.items()},

@@ -4,15 +4,28 @@ correctness cross-check of the Pallas body in interpret mode).
 On this CPU container the numbers measure the *reference* implementations
 (the compiled-Pallas path needs a real TPU); they exist to (a) track
 regressions in the oracle implementations the models actually run on CPU
-and (b) assert kernel/oracle agreement inside the bench harness too."""
+and (b) assert kernel/oracle agreement inside the bench harness too.
+
+The compression section emits one Pallas-vs-XLA line per compressor
+(topk / randk / int8 / sign plus their fused-EF variants) and persists
+them to ``BENCH_kernels.json`` at the repo root — the kernel half of the
+perf trajectory that ``BENCH_engine.json`` tracks for the engine. CI
+gates the XLA rates against ``benchmarks/baselines/BENCH_kernels.json``
+via ``python -m repro.obs.regress`` (the Pallas column is interpret-mode
+on CPU — a correctness probe, reported but never gated)."""
 from __future__ import annotations
 
+import json
 import os
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_kernels.json"
 
 
 def _time(fn, *args, iters=5):
@@ -89,6 +102,60 @@ def bench_router(csv=print):
     csv(f"kernels,moe_router,t=4096xE64k6,us_per_call,{us:.1f}")
 
 
+def bench_compress(csv=print, quick=True):
+    """Pallas-vs-XLA line per compressor: time the fused dispatch in
+    ``xla`` mode (the jitted reference the CPU container actually runs)
+    against the Pallas kernel body (compiled on TPU, interpret here),
+    assert bit-exact agreement, and return the marker payload."""
+    from repro.kernels.compress import (ef_quantize_int8, ef_randk_compress,
+                                        ef_sign_compress, ef_topk_compress,
+                                        randk_compress, sign_compress,
+                                        topk_compress)
+    from repro.kernels.interface import on_tpu
+
+    n = 1 << 16 if quick else 1 << 20
+    k = max(1, n // 10)
+    key = jax.random.PRNGKey(6)
+    v = jax.random.normal(jax.random.fold_in(key, 0), (n,))
+    ef = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (n,))
+    noise = jax.random.uniform(jax.random.fold_in(key, 3), (n,))
+
+    ops = {
+        "topk": lambda mode: topk_compress(v, k, mode=mode),
+        "ef_topk": lambda mode: ef_topk_compress(v, ef, k, mode=mode),
+        "randk": lambda mode: randk_compress(u, v, k, mode=mode),
+        "ef_randk": lambda mode: ef_randk_compress(u, v, ef, k, mode=mode),
+        "ef_int8": lambda mode: ef_quantize_int8(v, ef, noise, mode=mode),
+        "sign": lambda mode: sign_compress(v, mode=mode),
+        "ef_sign": lambda mode: ef_sign_compress(v, ef, mode=mode),
+    }
+    pallas_mode = "pallas" if on_tpu() else "interpret"
+
+    payload, fails = {}, []
+    for name, op in ops.items():
+        xla_us = _time(lambda: op("xla"), iters=5)
+        pallas_us = _time(lambda: op(pallas_mode), iters=3)
+        out_x = jax.tree.leaves(op("xla"))
+        out_p = jax.tree.leaves(op(pallas_mode))
+        agree = all(bool((np.asarray(a) == np.asarray(b)).all())
+                    for a, b in zip(out_x, out_p))
+        if not agree:
+            fails.append(f"compress {name}: {pallas_mode} != xla")
+        payload[name] = {
+            "n": n,
+            "xla_us": round(xla_us, 1),
+            "xla_meps": round(n / xla_us, 2),          # Melem/s
+            "pallas_us": round(pallas_us, 1),
+            "pallas_meps": round(n / pallas_us, 2),
+            "pallas_mode": pallas_mode,
+            "agree": agree,
+        }
+        csv(f"kernels,compress,{name},n={n},xla_us,{xla_us:.1f},"
+            f"{pallas_mode}_us,{pallas_us:.1f},agree,{agree}")
+    return payload, fails
+
+
 def check_interpret_agreement(csv=print):
     """Pallas kernel bodies (interpret) vs refs — the same check the test
     suite sweeps, asserted once here so bench output records it."""
@@ -124,13 +191,25 @@ def check_interpret_agreement(csv=print):
         os.environ.pop("FORCE_PALLAS_INTERPRET", None)
 
 
+def write_bench_json(payload: dict) -> None:
+    """Persist the kernel perf-trajectory marker at the repo root; CI
+    diffs BENCH_kernels.json against benchmarks/baselines/."""
+    _BENCH_JSON.write_text(json.dumps(payload, indent=2, sort_keys=True)
+                           + "\n")
+    print(f"# bench_kernels: wrote {_BENCH_JSON.name}")
+
+
 def main(quick=True, csv=print):
     bench_prox(csv)
     bench_quantize(csv)
     bench_attention(csv)
     bench_wkv(csv)
     bench_router(csv)
-    return check_interpret_agreement(csv)
+    compress, fails = bench_compress(csv, quick=quick)
+    fails += check_interpret_agreement(csv)
+    write_bench_json({"mode": "quick" if quick else "full",
+                      "compress": compress})
+    return fails
 
 
 if __name__ == "__main__":

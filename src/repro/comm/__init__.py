@@ -1,6 +1,11 @@
 """Tiered communication subsystem: what crosses the WAN/LAN links, how it
-is compressed, and what it costs (DESIGN.md §3)."""
-from repro.comm.compressors import compress_tree, leaf_k, make_leaf_compressor
+is compressed, and what it costs (DESIGN.md §3). Compression routes
+through the fused Pallas stack in ``repro.kernels.compress`` (DESIGN.md
+§10); ``compress_tree_ef`` is the fused error-feedback entrypoint."""
+from repro.comm.compressors import (LeafPlan, compress_tree,
+                                    compress_tree_ef, compression_plan,
+                                    leaf_k, leaf_plan, make_leaf_compressor,
+                                    make_leaf_ef_compressor)
 from repro.comm.config import (COMPRESSORS, CommConfig, CommState,
                                init_comm_state)
 from repro.comm.ledger import (CommLedger, RoundBytes, compressed_leaf_bytes,
@@ -9,5 +14,7 @@ from repro.comm.ledger import (CommLedger, RoundBytes, compressed_leaf_bytes,
 
 __all__ = ["CommConfig", "CommState", "CommLedger", "RoundBytes",
            "COMPRESSORS", "init_comm_state", "compress_tree",
-           "make_leaf_compressor", "leaf_k", "compressed_leaf_bytes",
+           "compress_tree_ef", "make_leaf_compressor",
+           "make_leaf_ef_compressor", "LeafPlan", "leaf_plan",
+           "compression_plan", "leaf_k", "compressed_leaf_bytes",
            "downlink_uplink_bytes", "full_leaf_bytes", "model_bytes"]

@@ -1,24 +1,42 @@
-"""Delta compressors for the tiered uplinks.
+"""Delta compressors for the tiered uplinks: thin routers over the fused
+Pallas compression stack.
 
-Each compressor maps a flat per-sender slice of one pytree leaf to its
-decompressed-at-the-receiver value (the simulator never materializes the
-wire format except in the int8 path, whose packed (q, scales) pair comes
-from the fused Pallas kernel on TPU / its XLA reference elsewhere — see
-``repro.kernels.quantize``). Byte costs of the wire formats live in
-``repro.comm.ledger``; the error-feedback arithmetic lives in the PerMFL
-round itself (``msg = delta + ef; ef' = msg - C(msg)``).
+Every compressor maps a flat per-sender slice of one pytree leaf to its
+decompressed-at-the-receiver value. The actual select/quantize/pack math
+lives in ``repro.kernels.compress`` — fused Pallas kernels with an XLA
+reference, dispatched through :func:`repro.kernels.interface.kernel_mode`
+— so this module only derives per-leaf plans and PRNG streams and calls
+the right op. ``REPRO_COMPRESS_FUSED=0`` falls back to the historical
+unfused implementations (bit-identical selections by construction; used
+by the fused-vs-unfused engine benchmark).
+
+Static per-leaf facts (k, wire-buffer shapes) are computed once per
+(CommConfig, leaf size) by the cached :func:`leaf_plan` and reused across
+rounds, so no per-round host work remains and all kernel shapes are
+static at trace time. Byte costs of the wire formats live in
+``repro.comm.ledger``; the error-feedback arithmetic
+(``msg = delta + ef; ef' = msg - C(msg)``) is fused into the kernels via
+:func:`compress_tree_ef`.
 
 All shapes/k are static at trace time, so everything here jits and vmaps
 over the stacked (M, N) sender axes.
 """
 from __future__ import annotations
 
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.comm.config import CommConfig
+from repro.kernels.compress import ops as _cops
+from repro.kernels.interface import compress_fused
 from repro.kernels.quantize import quantize_int8
+
+LANES = 128
 
 
 def leaf_k(k_frac: float, p: int) -> int:
@@ -26,45 +44,165 @@ def leaf_k(k_frac: float, p: int) -> int:
     return max(1, min(p, int(round(k_frac * p))))
 
 
-def _topk(v, k):
+@dataclass(frozen=True)
+class LeafPlan:
+    """Static per-(CommConfig, leaf) compression facts, derived once and
+    reused across rounds: the kept-coordinate count ``k`` (top-k/rand-k),
+    the padded row count, and the wire-buffer shapes each compressor
+    ships (what the byte ledger prices and ``pack_topk`` materializes)."""
+    compressor: str
+    p: int
+    k: Optional[int]
+    rows: int
+    wire: tuple
+
+    @staticmethod
+    def build(cfg: CommConfig, p: int) -> "LeafPlan":
+        """Derive the plan for one flat leaf of ``p`` coordinates."""
+        rows = -(-p // LANES)
+        name = cfg.compressor
+        k = leaf_k(cfg.k_frac, p) if name in ("topk", "randk") else None
+        wire = {
+            "identity": ((("values", (p,), "f32"),)),
+            "topk": (("values", (k, ), "f32"), ("indices", (k,), "i32")),
+            "randk": (("values", (k,), "f32"), ("seed", (), "u32")),
+            "int8": (("q", (p,), "i8"), ("scales", (rows,), "f32")),
+            "sign": (("bits", (rows, LANES // 8), "u8"), ("scale", (), "f32")),
+        }[name]
+        return LeafPlan(name, p, k, rows, wire)
+
+
+@functools.lru_cache(maxsize=4096)
+def leaf_plan(cfg: CommConfig, p: int) -> LeafPlan:
+    """Cached :meth:`LeafPlan.build` — the once-per-(config, leaf-size)
+    precompute that keeps per-round host work at zero."""
+    return LeafPlan.build(cfg, p)
+
+
+@functools.lru_cache(maxsize=1024)
+def compression_plan(cfg: CommConfig, leaf_sizes: tuple) -> tuple:
+    """Plans for a whole flattened tree (one entry per leaf), cached per
+    (CommConfig, tree-structure sizes)."""
+    return tuple(leaf_plan(cfg, p) for p in leaf_sizes)
+
+
+# --------------------------------------------------- legacy (unfused) path
+
+def _legacy_topk(v, k):
     _, idx = jax.lax.top_k(jnp.abs(v), k)
     return jnp.zeros_like(v).at[idx].set(v[idx])
 
 
-def _randk(key, v, k, unbiased):
+def _legacy_randk(key, v, k, unbiased):
     u = jax.random.uniform(key, v.shape)
     _, idx = jax.lax.top_k(u, k)          # k uniform indices, no replacement
     kept = v[idx] * (v.size / k if unbiased else 1.0)
     return jnp.zeros_like(v).at[idx].set(kept)
 
 
-def _int8(key, v):
+def _legacy_int8(key, v):
     noise = jax.random.uniform(key, v.shape)
     _, _, dq = quantize_int8(v, noise)
     return dq
 
 
-def _sign(v):
+def _legacy_sign(v):
     return jnp.mean(jnp.abs(v)) * jnp.sign(v)
 
 
-def make_leaf_compressor(cfg: CommConfig, p: int):
-    """Returns fn(key, v_flat (p,)) -> v_hat (p,), specialized per leaf."""
+# ----------------------------------------------------------- fused routers
+
+def make_leaf_compressor(cfg: CommConfig, p: int, *, mode=None):
+    """Returns fn(key, v_flat (p,)) -> v_hat (p,), specialized per leaf.
+
+    Routes through the fused ``repro.kernels.compress`` ops (``mode``
+    overrides the ``KernelType`` dispatch); ``REPRO_COMPRESS_FUSED=0``
+    selects the historical unfused implementations instead.
+    """
     name = cfg.compressor
     if name == "identity":
         return lambda key, v: v
+    plan = leaf_plan(cfg, p)
+    if not compress_fused():
+        if name == "topk":
+            return lambda key, v: _legacy_topk(v, plan.k)
+        if name == "randk":
+            unbiased = not cfg.error_feedback
+            return lambda key, v: _legacy_randk(key, v, plan.k, unbiased)
+        if name == "int8":
+            return _legacy_int8
+        if name == "sign":
+            return lambda key, v: _legacy_sign(v)
     if name == "topk":
-        k = leaf_k(cfg.k_frac, p)
-        return lambda key, v: _topk(v, k)
+        return lambda key, v: _cops.topk_compress(v, plan.k, mode=mode)[0]
     if name == "randk":
-        k = leaf_k(cfg.k_frac, p)
         unbiased = not cfg.error_feedback
-        return lambda key, v: _randk(key, v, k, unbiased)
+
+        def _randk(key, v):
+            u = jax.random.uniform(key, v.shape)
+            return _cops.randk_compress(u, v, plan.k, unbiased=unbiased,
+                                        mode=mode)[0]
+        return _randk
     if name == "int8":
+        def _int8(key, v):
+            noise = jax.random.uniform(key, v.shape)
+            return quantize_int8(v, noise, mode=mode)[2]
         return _int8
     if name == "sign":
-        return lambda key, v: _sign(v)
+        return lambda key, v: _cops.sign_compress(v, mode=mode)[2]
     raise ValueError(name)
+
+
+def make_leaf_ef_compressor(cfg: CommConfig, p: int, *, mode=None):
+    """Returns fn(key, delta (p,), ef (p,)) -> (chat (p,), ef_new (p,)),
+    the fused error-feedback form: ``msg = delta + ef`` and the residual
+    update happen inside one kernel pass (``repro.kernels.compress``).
+    The unfused fallback computes ``msg`` first and reuses
+    :func:`make_leaf_compressor` — the EF arithmetic is identical.
+    """
+    name = cfg.compressor
+    if name == "identity":
+        return lambda key, d, e: (d + e, jnp.zeros_like(d))
+    if not compress_fused():
+        fn = make_leaf_compressor(cfg, p, mode=mode)
+
+        def _unfused(key, d, e):
+            msg = d + e
+            chat = fn(key, msg)
+            return chat, msg - chat
+        return _unfused
+    plan = leaf_plan(cfg, p)
+    if name == "topk":
+        def _topk(key, d, e):
+            dq, _, ef_new = _cops.ef_topk_compress(d, e, plan.k, mode=mode)
+            return dq, ef_new
+        return _topk
+    if name == "randk":
+        def _randk(key, d, e):
+            u = jax.random.uniform(key, d.shape)
+            dq, _, ef_new = _cops.ef_randk_compress(u, d, e, plan.k,
+                                                    mode=mode)
+            return dq, ef_new
+        return _randk
+    if name == "int8":
+        def _int8(key, d, e):
+            noise = jax.random.uniform(key, d.shape)
+            _, _, dq, ef_new = _cops.ef_quantize_int8(d, e, noise, mode=mode)
+            return dq, ef_new
+        return _int8
+    if name == "sign":
+        def _sign(key, d, e):
+            _, _, dq, ef_new = _cops.ef_sign_compress(d, e, mode=mode)
+            return dq, ef_new
+        return _sign
+    raise ValueError(name)
+
+
+def _leaf_keys(key, i: int, b: int):
+    """Per-(sender, leaf) PRNG streams: fold the leaf index, split per
+    sender. Shared by both tree entrypoints so fused and unfused paths
+    draw identical noise."""
+    return jax.random.split(jax.random.fold_in(key, i), b)
 
 
 def compress_tree(cfg: CommConfig, key, tree, batch_shape: tuple):
@@ -76,11 +214,40 @@ def compress_tree(cfg: CommConfig, key, tree, batch_shape: tuple):
     """
     leaves, treedef = jax.tree.flatten(tree)
     b = int(np.prod(batch_shape, dtype=np.int64)) if batch_shape else 1
+    sizes = tuple(
+        int(np.prod(leaf.shape[len(batch_shape):], dtype=np.int64))
+        for leaf in leaves)
+    compression_plan(cfg, sizes)          # warm the per-leaf plan cache
     out = []
-    for i, leaf in enumerate(leaves):
-        p = int(np.prod(leaf.shape[len(batch_shape):], dtype=np.int64))
+    for i, (leaf, p) in enumerate(zip(leaves, sizes)):
         fn = make_leaf_compressor(cfg, p)
-        keys = jax.random.split(jax.random.fold_in(key, i), b)
+        keys = _leaf_keys(key, i, b)
         v2 = leaf.reshape(b, p)
         out.append(jax.vmap(fn)(keys, v2).reshape(leaf.shape))
     return treedef.unflatten(out)
+
+
+def compress_tree_ef(cfg: CommConfig, key, delta_tree, ef_tree,
+                     batch_shape: tuple):
+    """Fused error-feedback compression over a tree pair.
+
+    Equivalent to ``msg = delta + ef; chat = compress(msg);
+    ef_new = msg - chat`` but with the EF arithmetic fused into the
+    kernels; PRNG streams match :func:`compress_tree` exactly. Returns
+    (chat_tree, ef_new_tree), both with the input structure/shapes.
+    """
+    leaves, treedef = jax.tree.flatten(delta_tree)
+    ef_leaves = treedef.flatten_up_to(ef_tree)
+    b = int(np.prod(batch_shape, dtype=np.int64)) if batch_shape else 1
+    sizes = tuple(
+        int(np.prod(leaf.shape[len(batch_shape):], dtype=np.int64))
+        for leaf in leaves)
+    compression_plan(cfg, sizes)
+    chat, ef_new = [], []
+    for i, (d, e, p) in enumerate(zip(leaves, ef_leaves, sizes)):
+        fn = make_leaf_ef_compressor(cfg, p)
+        keys = _leaf_keys(key, i, b)
+        c2, e2 = jax.vmap(fn)(keys, d.reshape(b, p), e.reshape(b, p))
+        chat.append(c2.reshape(d.shape))
+        ef_new.append(e2.reshape(d.shape))
+    return treedef.unflatten(chat), treedef.unflatten(ef_new)

@@ -24,7 +24,9 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.comm import CommConfig, CommState, compress_tree, init_comm_state
+from repro.comm import (CommConfig, CommState, compress_tree,
+                        compress_tree_ef, init_comm_state)
+from repro.kernels.interface import dispatch_key
 from repro.kernels.prox_update import prox_sgd_tree
 
 
@@ -169,19 +171,24 @@ def permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
                                              m_teams, n_devices)
     return _permfl_round(state, data, hp, loss_fn, m_teams=m_teams,
                          n_devices=n_devices, team_mask=team_mask,
-                         device_mask=device_mask, comm=comm)
+                         device_mask=device_mask, comm=comm,
+                         kdispatch=dispatch_key())
 
 
 # hp is NOT static: its float leaves trace, so one compiled round serves
 # every hyperparameter value (fig3's 9-point grid used to pay 9 compiles)
 # and run_sweep can vmap a stacked grid through the same program.
+# kdispatch (the KernelType/fused pair from dispatch_key()) is a pure
+# cache salt: kernel choices are read from the environment at trace time,
+# so it must ride the jit key or flipping REPRO_KERNEL_MODE between
+# calls would silently reuse a stale trace.
 @functools.partial(
     jax.jit,
-    static_argnames=("loss_fn", "m_teams", "n_devices", "comm"))
+    static_argnames=("loss_fn", "m_teams", "n_devices", "comm", "kdispatch"))
 def _permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
                   loss_fn: Callable, *, m_teams: int, n_devices: int,
                   team_mask, device_mask,
-                  comm: Optional[CommConfig] = None):
+                  comm: Optional[CommConfig] = None, kdispatch=None):
     x = state.x
     grad_fn = jax.grad(loss_fn)
     per_device_grad = jax.vmap(jax.vmap(grad_fn))
@@ -237,16 +244,22 @@ def _permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
     def team_iter_comm(k, carry):
         """team_iter with a compressed device->team uplink: each device
         ships C(theta - w + ef); the team aggregates the decompressed
-        deltas on top of the anchor w it already holds."""
+        deltas on top of the anchor w it already holds. With error
+        feedback on, the EF add and residual update are fused into the
+        compression kernels (compress_tree_ef)."""
         w, _, ef_dev = carry
         theta = run_devices(w)
         anchor = bcast_n(w)
-        msg = jax.tree.map(lambda t, a, e: t - a + e, theta, anchor, ef_dev)
-        chat = compress_tree(comm, jax.random.fold_in(round_key, k), msg,
-                             (m_teams, n_devices))
+        kk = jax.random.fold_in(round_key, k)
         if comm.error_feedback:
-            ef_new = jax.tree.map(lambda ms, ch: ms - ch, msg, chat)
+            delta = jax.tree.map(lambda t, a: t - a, theta, anchor)
+            chat, ef_new = compress_tree_ef(comm, kk, delta, ef_dev,
+                                            (m_teams, n_devices))
             ef_dev = _keep_where(ef_gate, ef_new, ef_dev)
+        else:
+            msg = jax.tree.map(lambda t, a, e: t - a + e,
+                               theta, anchor, ef_dev)
+            chat = compress_tree(comm, kk, msg, (m_teams, n_devices))
         theta_hat = jax.tree.map(lambda a, ch: a + ch, anchor, chat)
         theta_bar = _masked_mean(theta_hat, device_mask, axis=1, fallback=w)
         return team_update(w, theta_bar), theta, ef_dev
@@ -273,13 +286,16 @@ def _permfl_round(state: PerMFLState, data, hp: PerMFLHParams,
         # Masked-out teams need no substitute value — the masked mean
         # zeroes their contribution.
         ef_team = state.comm.ef_team
-        msg = jax.tree.map(lambda wl, xl, e: wl - xl[None] + e,
-                           w, x, ef_team)
-        chat = compress_tree(comm, jax.random.fold_in(round_key, hp.k_team),
-                             msg, (m_teams,))
+        kk = jax.random.fold_in(round_key, hp.k_team)
         if comm.error_feedback:
-            ef_new = jax.tree.map(lambda ms, ch: ms - ch, msg, chat)
+            delta = jax.tree.map(lambda wl, xl: wl - xl[None], w, x)
+            chat, ef_new = compress_tree_ef(comm, kk, delta, ef_team,
+                                            (m_teams,))
             ef_team = _keep_where(team_mask, ef_new, ef_team)
+        else:
+            msg = jax.tree.map(lambda wl, xl, e: wl - xl[None] + e,
+                               w, x, ef_team)
+            chat = compress_tree(comm, kk, msg, (m_teams,))
         w_hat = jax.tree.map(lambda xl, ch: xl[None] + ch, x, chat)
         w_bar = _masked_mean(w_hat, team_mask, axis=0, fallback=x)
         comm_state = CommState(ef_dev=ef_dev, ef_team=ef_team,

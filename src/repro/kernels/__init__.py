@@ -6,12 +6,21 @@ Each subpackage ships:
   * ``ops.py``    — the jit'd public wrapper with backend dispatch,
   * ``ref.py``    — the pure-jnp oracle used for allclose validation
     (and as the compiled implementation on non-TPU backends).
+
+Dispatch is unified in :mod:`repro.kernels.interface`: every op resolves
+a :class:`~repro.kernels.interface.KernelType` (``pallas`` / ``xla`` /
+``interpret``) from an explicit ``mode=`` argument or the
+``REPRO_KERNEL_MODE`` environment variable. ``repro.kernels.compress``
+holds the fused compression stack (EF + top-k / rand-k / int8 / sign
+select+pack) that the comm layer routes through.
 """
+from repro.kernels import compress
 from repro.kernels.flash_attention import attention
+from repro.kernels.interface import KernelType, dispatch_key, kernel_mode
 from repro.kernels.moe_router import route_topk
 from repro.kernels.prox_update import prox_sgd_tree
 from repro.kernels.quantize import quantize_int8
 from repro.kernels.rwkv6_scan import wkv
 
 __all__ = ["attention", "route_topk", "prox_sgd_tree", "quantize_int8",
-           "wkv"]
+           "wkv", "compress", "KernelType", "kernel_mode", "dispatch_key"]

@@ -1,0 +1,31 @@
+"""Fused Pallas compression stack for the tiered comm uplinks.
+
+One package fuses the whole device->team->server compression pipeline —
+error-feedback update, top-k / rand-k select+pack, stochastic int8
+quantize/pack, 1-bit sign+pack — into single VMEM-resident Pallas
+kernels with custom VJPs, dispatched through the unified
+:class:`repro.kernels.interface.KernelType` interface
+(``REPRO_KERNEL_MODE`` = pallas / xla / interpret). The jnp reference in
+``ref.py`` is the ground truth; the kernels match it bit-for-bit (see
+tests/test_compress_kernels.py). ``comm/compressors.py`` routes every
+compressor through these ops, so engine rounds, vmapped sweeps, and
+scenario runs all hit the fused path with no caller-visible change.
+"""
+from repro.kernels.compress.ops import (
+    ef_quantize_int8,
+    ef_randk_compress,
+    ef_sign_compress,
+    ef_topk_compress,
+    pack_topk,
+    randk_compress,
+    sign_compress,
+    sign_unpack,
+    topk_compress,
+    unpack_topk,
+)
+
+__all__ = [
+    "topk_compress", "ef_topk_compress", "randk_compress",
+    "ef_randk_compress", "ef_quantize_int8", "sign_compress",
+    "ef_sign_compress", "pack_topk", "unpack_topk", "sign_unpack",
+]

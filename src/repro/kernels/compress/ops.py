@@ -1,0 +1,290 @@
+"""Public fused-compression ops: KernelType dispatch + custom VJPs.
+
+Each op resolves a :class:`repro.kernels.interface.KernelType` (explicit
+``mode=`` argument, else the ``REPRO_KERNEL_MODE`` environment) and runs
+either the Pallas kernel (``compress.py``, compiled or interpret) or the
+jnp reference (``ref.py``) — the two are bit-identical by construction,
+so ``comm/compressors.py`` can route every compressor through here with
+zero caller-visible change.
+
+Every op carries a custom VJP so compressed rounds stay differentiable
+with *identical* gradient semantics across backends:
+
+* top-k / rand-k: the exact almost-everywhere gradient — the selection
+  mask is constant under perturbation, so ``dq`` passes cotangents
+  through kept coordinates and ``ef_new`` through dropped ones (this is
+  what autodiff of the reference computes; the custom rule just avoids
+  re-running select on the backward pass).
+* int8 / sign: the straight-through estimator — quantization is treated
+  as identity on the message (``d dq/d msg = I``, ``d ef/d msg = 0``),
+  the standard surrogate for non-differentiable rounding.
+
+Integer/bit outputs (ranks, q, bits) are non-differentiable and receive
+zero/float0 cotangents, which the backward rules ignore.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compress import compress as _pal
+from repro.kernels.compress import ref as _ref
+from repro.kernels.interface import KernelType, kernel_mode
+
+__all__ = [
+    "topk_compress", "ef_topk_compress", "randk_compress",
+    "ef_randk_compress", "ef_quantize_int8", "sign_compress",
+    "ef_sign_compress", "pack_topk", "unpack_topk", "sign_unpack",
+]
+
+
+def _zeros_like(x):
+    return jnp.zeros(x.shape, x.dtype)
+
+
+# The XLA branch runs the reference under jit so both branches sit
+# behind the same compilation boundary: eagerly, XLA fuses the
+# ``ef_new = msg - dq`` arithmetic differently (low-bit drift), and
+# bit-parity with the Pallas kernels is part of this package's contract.
+_topk_ref = jax.jit(_ref.topk_select_ref, static_argnums=(1,))
+_ef_topk_ref = jax.jit(_ref.ef_topk_select_ref, static_argnums=(2,))
+_randk_ref = jax.jit(_ref.randk_select_ref, static_argnums=(2, 3))
+_ef_randk_ref = jax.jit(_ref.ef_randk_select_ref, static_argnums=(3,))
+_ef_int8_ref = jax.jit(_ref.ef_quantize_int8_ref)
+_sign_ref = jax.jit(_ref.sign_compress_ref)
+_ef_sign_ref = jax.jit(_ref.ef_sign_compress_ref)
+
+
+# ---------------------------------------------------------------- top-k
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _topk(k, kt, v):
+    if kt is KernelType.XLA:
+        return _topk_ref(v, k)
+    thresh = _ref.kth_threshold(jnp.abs(v), k)
+    return _pal.topk_select_flat(v, thresh, k=k,
+                                 interpret=kt is not KernelType.PALLAS)
+
+
+def _topk_fwd(k, kt, v):
+    dq, ranks = _topk(k, kt, v)
+    return (dq, ranks), ranks
+
+
+def _topk_bwd(k, kt, ranks, g):
+    g_dq, _ = g
+    return (jnp.where(ranks >= 0, g_dq, _zeros_like(g_dq)),)
+
+
+_topk.defvjp(_topk_fwd, _topk_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ef_topk(k, kt, delta, ef):
+    if kt is KernelType.XLA:
+        return _ef_topk_ref(delta, ef, k)
+    thresh = _ref.kth_threshold(jnp.abs(delta + ef), k)
+    return _pal.ef_topk_select_flat(delta, ef, thresh, k=k,
+                                    interpret=kt is not KernelType.PALLAS)
+
+
+def _ef_topk_fwd(k, kt, delta, ef):
+    out = _ef_topk(k, kt, delta, ef)
+    return out, out[1]
+
+
+def _ef_topk_bwd(k, kt, ranks, g):
+    g_dq, _, g_ef = g
+    g_msg = jnp.where(ranks >= 0, g_dq, g_ef)
+    return g_msg, g_msg
+
+
+_ef_topk.defvjp(_ef_topk_fwd, _ef_topk_bwd)
+
+
+# --------------------------------------------------------------- rand-k
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _randk(k, scale, kt, u, v):
+    if kt is KernelType.XLA:
+        return _randk_ref(u, v, k, scale)
+    thresh = _ref.kth_threshold(u, k)
+    return _pal.randk_select_flat(u, v, thresh, k=k, scale=scale,
+                                  interpret=kt is not KernelType.PALLAS)
+
+
+def _randk_fwd(k, scale, kt, u, v):
+    dq, ranks = _randk(k, scale, kt, u, v)
+    return (dq, ranks), (ranks, u)
+
+
+def _randk_bwd(k, scale, kt, res, g):
+    ranks, u = res
+    g_dq, _ = g
+    g_v = jnp.where(ranks >= 0, g_dq * scale, _zeros_like(g_dq))
+    return _zeros_like(u), g_v
+
+
+_randk.defvjp(_randk_fwd, _randk_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ef_randk(k, kt, u, delta, ef):
+    if kt is KernelType.XLA:
+        return _ef_randk_ref(u, delta, ef, k)
+    thresh = _ref.kth_threshold(u, k)
+    return _pal.ef_randk_select_flat(u, delta, ef, thresh, k=k,
+                                     interpret=kt is not KernelType.PALLAS)
+
+
+def _ef_randk_fwd(k, kt, u, delta, ef):
+    out = _ef_randk(k, kt, u, delta, ef)
+    return out, (out[1], u)
+
+
+def _ef_randk_bwd(k, kt, res, g):
+    ranks, u = res
+    g_dq, _, g_ef = g
+    g_msg = jnp.where(ranks >= 0, g_dq, g_ef)
+    return _zeros_like(u), g_msg, g_msg
+
+
+_ef_randk.defvjp(_ef_randk_fwd, _ef_randk_bwd)
+
+
+# ----------------------------------------------------------------- int8
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ef_int8(kt, delta, ef, noise):
+    if kt is KernelType.XLA:
+        return _ef_int8_ref(delta, ef, noise)
+    return _pal.ef_quantize_int8_flat(delta, ef, noise,
+                                      interpret=kt is not KernelType.PALLAS)
+
+
+def _ef_int8_fwd(kt, delta, ef, noise):
+    return _ef_int8(kt, delta, ef, noise), noise
+
+
+def _ef_int8_bwd(kt, noise, g):
+    _, _, g_dq, _ = g           # STE: dq ~= msg, ef_new ~= 0
+    return g_dq, g_dq, _zeros_like(noise)
+
+
+_ef_int8.defvjp(_ef_int8_fwd, _ef_int8_bwd)
+
+
+# ----------------------------------------------------------------- sign
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sign(kt, v):
+    scale = jnp.mean(jnp.abs(v))
+    if kt is KernelType.XLA:
+        return _sign_ref(v, scale)
+    bits, dq = _pal.sign_compress_flat(v, scale,
+                                       interpret=kt is not KernelType.PALLAS)
+    return bits, scale, dq
+
+
+def _sign_fwd(kt, v):
+    return _sign(kt, v), None
+
+
+def _sign_bwd(kt, _, g):
+    _, _, g_dq = g              # STE: dq ~= v
+    return (g_dq,)
+
+
+_sign.defvjp(_sign_fwd, _sign_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ef_sign(kt, delta, ef):
+    scale = jnp.mean(jnp.abs(delta + ef))
+    if kt is KernelType.XLA:
+        return _ef_sign_ref(delta, ef, scale)
+    bits, dq, ef_new = _pal.ef_sign_compress_flat(
+        delta, ef, scale, interpret=kt is not KernelType.PALLAS)
+    return bits, scale, dq, ef_new
+
+
+def _ef_sign_fwd(kt, delta, ef):
+    return _ef_sign(kt, delta, ef), None
+
+
+def _ef_sign_bwd(kt, _, g):
+    _, _, g_dq, _ = g           # STE: dq ~= msg, ef_new ~= 0
+    return g_dq, g_dq
+
+
+_ef_sign.defvjp(_ef_sign_fwd, _ef_sign_bwd)
+
+
+# ----------------------------------------------------------- public API
+
+def topk_compress(v, k, *, mode=None):
+    """Fused magnitude top-k on flat ``v`` (p,): keep the k largest-|·|
+    coordinates (ties to the lowest index, exactly like ``lax.top_k``).
+    Returns (dq (p,), ranks (p,) i32 — wire slot in [0, k) or -1)."""
+    return _topk(int(k), kernel_mode(mode), v)
+
+
+def ef_topk_compress(delta, ef, k, *, mode=None):
+    """Fused error-feedback + top-k: ``msg = delta + ef`` never hits HBM
+    on the Pallas path. Returns (dq, ranks, ef_new = msg - dq)."""
+    return _ef_topk(int(k), kernel_mode(mode), delta, ef)
+
+
+def randk_compress(u, v, k, *, unbiased=False, mode=None):
+    """Fused rand-k on flat ``v``: keep the k coordinates with the
+    largest uniform scores ``u`` (k indices without replacement, same
+    stream as the historical compressor). ``unbiased=True`` rescales
+    kept values by p/k (use without EF); contractive otherwise.
+    Returns (dq, ranks)."""
+    scale = v.shape[0] / int(k) if unbiased else 1.0
+    return _randk(int(k), scale, kernel_mode(mode), u, v)
+
+
+def ef_randk_compress(u, delta, ef, k, *, mode=None):
+    """Fused error-feedback + contractive rand-k (EF absorbs the bias,
+    so no p/k rescale). Returns (dq, ranks, ef_new)."""
+    return _ef_randk(int(k), kernel_mode(mode), u, delta, ef)
+
+
+def ef_quantize_int8(delta, ef, noise, *, mode=None):
+    """Fused error-feedback + stochastic int8 quantize/pack (subsumes
+    ``repro.kernels.quantize`` on the EF path). Returns
+    (q (p,) i8, scales (rows,) f32, dq (p,), ef_new (p,))."""
+    return _ef_int8(kernel_mode(mode), delta, ef, noise)
+
+
+def sign_compress(v, *, mode=None):
+    """Fused 1-bit sign+pack with majority-friendly ``mean(|v|)`` scale.
+    Returns (bits (rows,16) u8, scale () f32, dq = scale * sign(v))."""
+    return _sign(kernel_mode(mode), v)
+
+
+def ef_sign_compress(delta, ef, *, mode=None):
+    """Fused error-feedback + sign+pack. Returns
+    (bits, scale, dq, ef_new = msg - dq)."""
+    return _ef_sign(kernel_mode(mode), delta, ef)
+
+
+def pack_topk(dq, ranks, k):
+    """Dense (dq, ranks) -> the ``(k,)`` value/index wire buffers the
+    byte ledger prices (8k bytes on the link)."""
+    return _ref.pack_selected_ref(dq, ranks, int(k))
+
+
+def unpack_topk(vals, idx, p):
+    """Receiver-side scatter of the ``(k,)`` wire buffers back to a
+    dense (p,) array; exact inverse of ``pack_topk`` on ``dq``."""
+    return _ref.unpack_selected_ref(vals, idx, int(p))
+
+
+def sign_unpack(bits, scale, p):
+    """Decode the packed sign bits to ``±scale`` (p,). Exact zeros in
+    the original decode as ``+scale`` — see ``ref.sign_unpack_ref``."""
+    return _ref.sign_unpack_ref(bits, scale, int(p))

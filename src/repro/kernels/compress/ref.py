@@ -1,0 +1,174 @@
+"""Pure-jnp oracles for the fused compression kernels (ground truth).
+
+Every Pallas kernel in ``repro.kernels.compress`` has its semantics
+defined HERE — the kernels must match these functions bit-for-bit in
+interpret mode (pinned by tests/test_compress_kernels.py). The shared
+conventions that make that possible:
+
+* flat ``(p,)`` arrays are zero-padded to ``(rows, 128)`` row-major,
+  ``rows = ceil(p / 128)``; padding never selects (masked by index).
+* top-k / rand-k selection is *threshold + rank-cap*: keep positions
+  whose score reaches the k-th largest score, in flat-index order,
+  capped at k. ``lax.top_k`` breaks ties by lowest index, so the kept
+  set — and therefore the dense decompressed value — is identical to
+  the historical ``top_k`` + scatter implementation.
+* reductions that feed scales (sign's mean |v|, the int8 row absmax)
+  are either order-insensitive (max) or computed once on the XLA side
+  and passed into the kernel, so fused and unfused paths agree exactly.
+* error feedback is fused as ``msg = delta + ef``; outputs are the
+  decompressed ``dq`` and the residual ``ef_new = msg - dq``.
+
+Wire formats (what actually crosses the simulated link):
+
+* top-k / rand-k: dense ``ranks`` (int32, slot in [0, k) or -1) pair
+  with ``dq``; :func:`pack_selected_ref` turns them into the ``(k,)``
+  value/index buffers the byte ledger prices (8k bytes).
+* int8: ``(q int8, per-row f32 scale)`` — same as ``repro.kernels.quantize``.
+* sign: one bit per coordinate — 8 lanes per byte, ``(rows, 16)`` uint8,
+  byte ``c`` of a row holds lanes ``8c..8c+7`` (lane ``8c+j`` at bit
+  ``j``) — plus a single f32 scale, ``mean(|v|)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANES = 128
+
+
+def _to_rows(v, size):
+    rows = -(-size // LANES)
+    pad = rows * LANES - size
+    if pad:
+        v = jnp.pad(v, (0, pad))
+    return v.reshape(rows, LANES), rows
+
+
+def kth_threshold(score, k: int):
+    """k-th largest entry of flat ``score`` — the select threshold.
+
+    Shared by the XLA reference and the Pallas wrappers so both paths
+    compare against the bit-identical threshold.
+    """
+    vals, _ = jax.lax.top_k(score, k)
+    return vals[k - 1]
+
+
+def _select(score, v, k: int, scale: float, size: int):
+    """Threshold + rank-cap select on flat arrays -> (dq, ranks)."""
+    thresh = kth_threshold(score, k)
+    mask = score >= thresh
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1     # 0-based, index order
+    sel = mask & (rank < k)
+    dq = jnp.where(sel, v * scale, jnp.zeros((), v.dtype))
+    ranks = jnp.where(sel, rank, -1).astype(jnp.int32)
+    return dq, ranks
+
+
+def topk_select_ref(v, k: int):
+    """Flat ``(p,)`` magnitude top-k. Returns (dq (p,), ranks (p,) i32)."""
+    return _select(jnp.abs(v), v, k, 1.0, v.shape[0])
+
+
+def randk_select_ref(u, v, k: int, scale: float):
+    """Flat rand-k: keep the k positions with the largest uniforms ``u``
+    (k indices without replacement), values scaled by static ``scale``
+    (p/k for the unbiased estimator, 1.0 contractive under EF).
+    Returns (dq (p,), ranks (p,) i32)."""
+    return _select(u, v, k, scale, v.shape[0])
+
+
+def ef_topk_select_ref(delta, ef, k: int):
+    """Fused EF + top-k: ``msg = delta + ef``; select on ``|msg|``.
+    Returns (dq, ranks, ef_new = msg - dq)."""
+    msg = delta + ef
+    dq, ranks = topk_select_ref(msg, k)
+    return dq, ranks, msg - dq
+
+
+def ef_randk_select_ref(u, delta, ef, k: int):
+    """Fused EF + rand-k (contractive, scale 1 — EF absorbs the bias).
+    Returns (dq, ranks, ef_new = msg - dq)."""
+    msg = delta + ef
+    dq, ranks = randk_select_ref(u, msg, k, 1.0)
+    return dq, ranks, msg - dq
+
+
+def ef_quantize_int8_ref(delta, ef, noise):
+    """Fused EF + stochastic int8 quantize/pack on flat ``(p,)`` arrays.
+
+    ``msg = delta + ef``; per-128-lane-row ``scale = max(|msg|)/127``;
+    ``q = clip(floor(msg/scale + noise), -127, 127)`` — identical math to
+    ``repro.kernels.quantize``. Returns (q (p,) i8, scales (rows,) f32,
+    dq (p,), ef_new (p,))."""
+    msg = delta + ef
+    (size,) = msg.shape
+    m2, rows = _to_rows(msg.astype(jnp.float32), size)
+    n2, _ = _to_rows(noise.astype(jnp.float32), size)
+    absmax = jnp.max(jnp.abs(m2), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax * (1.0 / 127.0), 1e-12)
+    q = jnp.clip(jnp.floor(m2 / scale + n2), -127.0, 127.0)
+    dq = (q * scale).reshape(-1)[:size].astype(msg.dtype)
+    return (q.astype(jnp.int8).reshape(-1)[:size], scale.reshape(-1),
+            dq, msg - dq)
+
+
+def _pack_bits(nonneg_rows):
+    """(rows, 128) {0,1} -> (rows, 16) uint8, lane 8c+j at byte c bit j."""
+    b = nonneg_rows.astype(jnp.uint8)
+    return sum(b[:, j::8] << j for j in range(8))
+
+
+def sign_compress_ref(v, scale=None):
+    """Flat 1-bit sign compressor. ``scale`` defaults to ``mean(|v|)``
+    (the majority-vote-friendly magnitude); ``dq = scale * sign(v)``
+    matches the historical compressor exactly (sign(0) = 0). Returns
+    (bits (rows,16) u8, scale () f32, dq (p,))."""
+    (size,) = v.shape
+    if scale is None:
+        scale = jnp.mean(jnp.abs(v))
+    v2, _ = _to_rows(v.astype(jnp.float32), size)
+    bits = _pack_bits(v2 >= 0)
+    dq = (scale * jnp.sign(v2)).reshape(-1)[:size].astype(v.dtype)
+    return bits, scale, dq
+
+
+def ef_sign_compress_ref(delta, ef, scale=None):
+    """Fused EF + sign: ``msg = delta + ef``, scale = mean(|msg|).
+    Returns (bits, scale, dq, ef_new = msg - dq)."""
+    msg = delta + ef
+    bits, scale, dq = sign_compress_ref(msg, scale)
+    return bits, scale, dq, msg - dq
+
+
+def sign_unpack_ref(bits, scale, size: int):
+    """Decode the 1-bit wire: (rows,16) u8 + scale -> (size,) f32 of
+    ``±scale``. Exact zeros in the original encode as ``+scale`` — the
+    one lossy edge of the wire format (``dq`` from the compressor keeps
+    sign(0) = 0 and is what the simulator aggregates)."""
+    rows = bits.shape[0]
+    lanes = ((bits[:, :, None] >> jnp.arange(8, dtype=jnp.uint8)) & 1)
+    pm1 = lanes.reshape(rows, LANES).astype(jnp.float32) * 2.0 - 1.0
+    return (scale * pm1).reshape(-1)[:size]
+
+
+def pack_selected_ref(dq, ranks, k: int):
+    """Dense (dq, ranks) -> the ``(k,)`` wire buffers: (vals (k,), idx
+    (k,) i32). Selection always fills all k slots (the threshold keeps
+    >= k candidates); unused slots — impossible by construction — would
+    read 0 / -1."""
+    p = dq.shape[0]
+    safe = jnp.where(ranks >= 0, ranks, k)
+    vals = jnp.zeros((k + 1,), dq.dtype).at[safe].set(dq)[:k]
+    idx = jnp.full((k + 1,), -1, jnp.int32).at[safe].set(
+        jnp.arange(p, dtype=jnp.int32))[:k]
+    return vals, idx
+
+
+def unpack_selected_ref(vals, idx, p: int):
+    """Scatter the ``(k,)`` wire buffers back to a dense (p,) array —
+    the receiver side of the top-k / rand-k link."""
+    safe = jnp.where(idx >= 0, idx, p)
+    out = jnp.zeros((p + 1,), vals.dtype).at[safe].set(
+        jnp.where(idx >= 0, vals, jnp.zeros((), vals.dtype)))
+    return out[:p]

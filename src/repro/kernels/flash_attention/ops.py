@@ -1,39 +1,36 @@
 """Public attention op: dispatches Pallas-on-TPU / interpret / jnp-ref.
 
-Model code calls :func:`attention`; the backend is chosen once per process:
+Model code calls :func:`attention`; the backend is chosen by the unified
+:func:`repro.kernels.interface.kernel_mode`:
   * TPU backend        -> compiled Pallas kernel
   * elsewhere          -> the blocked pure-jnp reference (same math), which
                           is what CPU smoke tests and the 512-host-device
-                          dry-run compile. ``FORCE_PALLAS_INTERPRET=1`` runs
-                          the Pallas kernel body in interpret mode instead
-                          (used by kernel correctness tests).
+                          dry-run compile.
+  * ``REPRO_KERNEL_MODE=interpret`` (or the legacy
+    ``FORCE_PALLAS_INTERPRET=1``) runs the Pallas kernel body in interpret
+    mode instead (used by kernel correctness tests).
 """
 from __future__ import annotations
 
-import os
-
-import jax
-
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
+from repro.kernels.interface import KernelType, kernel_mode
 
 
 def attention(q, k, v, *, causal=True, window=0, q_offset=None,
-              block_q=512, block_kv=512):
-    if _on_tpu():
-        return flash_attention(q, k, v, causal=causal, window=window,
-                               q_offset=q_offset, block_q=block_q,
-                               block_kv=block_kv)
-    if os.environ.get("FORCE_PALLAS_INTERPRET") == "1":
-        return flash_attention(q, k, v, causal=causal, window=window,
-                               q_offset=q_offset, block_q=block_q,
-                               block_kv=block_kv, interpret=True)
-    return attention_ref(q, k, v, causal=causal, window=window,
-                         q_offset=q_offset)
+              block_q=512, block_kv=512, mode=None):
+    """Multi-head (optionally causal/windowed) attention over
+    (B, S, H, D) tensors, GQA-aware.
+
+    Routes through ``kernel_mode(mode)``: ``xla`` runs the blocked jnp
+    reference, otherwise the flash-attention Pallas kernel (interpret
+    unless on TPU).
+    """
+    kt = kernel_mode(mode)
+    if kt is KernelType.XLA:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, block_q=block_q,
+                           block_kv=block_kv,
+                           interpret=kt is not KernelType.PALLAS)

@@ -1,28 +1,17 @@
-"""Public MoE routing op with backend dispatch."""
+"""Public MoE routing op dispatched through the unified ``kernel_mode()``."""
 from __future__ import annotations
 
-import os
-
-import jax
-
+from repro.kernels.interface import KernelType, kernel_mode
 from repro.kernels.moe_router.moe_router import route
 from repro.kernels.moe_router.ref import load_balance_loss, route_ref
 
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
-
-
-def route_topk(logits, *, top_k: int, renormalize: bool = True):
+def route_topk(logits, *, top_k: int, renormalize: bool = True, mode=None):
     """Returns (gates (t,k), idx (t,k), aux dict)."""
-    if _on_tpu():
-        return route(logits, top_k=top_k, renormalize=renormalize)
-    if os.environ.get("FORCE_PALLAS_INTERPRET") == "1":
-        return route(logits, top_k=top_k, renormalize=renormalize,
-                     interpret=True)
-    gates, idx, _, aux = route_ref(logits, top_k=top_k,
-                                   renormalize=renormalize)
-    return gates, idx, aux
+    kt = kernel_mode(mode)
+    if kt is KernelType.XLA:
+        gates, idx, _, aux = route_ref(logits, top_k=top_k,
+                                       renormalize=renormalize)
+        return gates, idx, aux
+    return route(logits, top_k=top_k, renormalize=renormalize,
+                 interpret=kt is not KernelType.PALLAS)

@@ -1,46 +1,41 @@
 """Public fused prox-SGD op over pytrees, with backend dispatch.
 
 ``prox_sgd_tree`` applies the PerMFL device update (eq. 4) leaf-wise to a
-parameter pytree, using the Pallas kernel on TPU and the jnp reference
-elsewhere; momentum buffers are threaded as a matching pytree.
+parameter pytree, dispatching through the unified
+:func:`repro.kernels.interface.kernel_mode` (Pallas kernel on TPU, jnp
+reference elsewhere, ``REPRO_KERNEL_MODE`` to override); momentum buffers
+are threaded as a matching pytree.
 """
 from __future__ import annotations
-
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.interface import KernelType, kernel_mode
 from repro.kernels.prox_update.prox_update import prox_sgd_flat
 from repro.kernels.prox_update.ref import prox_sgd_ref
 
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
-
-
 def prox_sgd(theta, grad, anchor, mom_buf=None, *, alpha, lam,
-             momentum=0.0, weight_decay=0.0):
+             momentum=0.0, weight_decay=0.0, mode=None):
     """Single-array fused prox step; any shape."""
     if mom_buf is None:
         mom_buf = jnp.zeros(theta.shape, jnp.float32)
-    if _on_tpu() or os.environ.get("FORCE_PALLAS_INTERPRET") == "1":
-        interp = not _on_tpu()
+    kt = kernel_mode(mode)
+    if kt is not KernelType.XLA:
         shape = theta.shape
         t, m = prox_sgd_flat(theta.reshape(-1), grad.reshape(-1),
                              anchor.reshape(-1), mom_buf.reshape(-1),
                              alpha=alpha, lam=lam, momentum=momentum,
-                             weight_decay=weight_decay, interpret=interp)
+                             weight_decay=weight_decay,
+                             interpret=kt is not KernelType.PALLAS)
         return t.reshape(shape), m.reshape(shape)
     return prox_sgd_ref(theta, grad, anchor, mom_buf=mom_buf, alpha=alpha,
                         lam=lam, momentum=momentum, weight_decay=weight_decay)
 
 
 def prox_sgd_tree(theta, grad, anchor, mom_tree=None, *, alpha, lam,
-                  momentum=0.0, weight_decay=0.0):
+                  momentum=0.0, weight_decay=0.0, mode=None):
     """Pytree-wise PerMFL device step. Returns (theta_new, mom_tree_new)."""
     if mom_tree is None:
         mom_tree = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), theta)
@@ -51,7 +46,8 @@ def prox_sgd_tree(theta, grad, anchor, mom_tree=None, *, alpha, lam,
     new_t, new_m = [], []
     for t, g, a, m in zip(flat_t, flat_g, flat_a, flat_m):
         tn, mn = prox_sgd(t, g, a, m, alpha=alpha, lam=lam,
-                          momentum=momentum, weight_decay=weight_decay)
+                          momentum=momentum, weight_decay=weight_decay,
+                          mode=mode)
         new_t.append(tn)
         new_m.append(mn)
     return treedef.unflatten(new_t), treedef.unflatten(new_m)

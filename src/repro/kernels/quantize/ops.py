@@ -2,36 +2,30 @@
 
 ``quantize_int8`` quantizes an array of any shape to (int8 values, per-row
 f32 scales) and also returns the dequantized echo — the value the stacked
-simulator aggregates after a compressed uplink. Pallas kernel on TPU, the
-jnp reference elsewhere; both consume the same explicit noise so results
-are identical across backends.
+simulator aggregates after a compressed uplink. Dispatch goes through the
+unified :func:`repro.kernels.interface.kernel_mode` (Pallas on TPU, the
+jnp reference elsewhere, ``REPRO_KERNEL_MODE`` to override); both paths
+consume the same explicit noise so results are identical across backends.
 """
 from __future__ import annotations
 
-import os
-
-import jax
-
+from repro.kernels.interface import KernelType, kernel_mode
 from repro.kernels.quantize.quantize import LANES, quantize_int8_flat
 from repro.kernels.quantize.ref import dequantize_int8_ref, quantize_int8_ref
 
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
-
-
-def quantize_int8(v, noise):
+def quantize_int8(v, noise, *, mode=None):
     """v, noise same shape (any). Returns (q int8 like v, scales (rows,) f32,
-    dq like v) where rows = ceil(v.size / 128)."""
+    dq like v) where rows = ceil(v.size / 128). ``mode`` overrides the
+    ``KernelType`` dispatch (default: environment / backend)."""
     shape = v.shape
     vf, nf = v.reshape(-1), noise.reshape(-1)
-    if _on_tpu() or os.environ.get("FORCE_PALLAS_INTERPRET") == "1":
-        q, s, dq = quantize_int8_flat(vf, nf, interpret=not _on_tpu())
-    else:
+    kt = kernel_mode(mode)
+    if kt is KernelType.XLA:
         q, s, dq = quantize_int8_ref(vf, nf)
+    else:
+        q, s, dq = quantize_int8_flat(vf, nf,
+                                      interpret=kt is not KernelType.PALLAS)
     return q.reshape(shape), s, dq.reshape(shape)
 
 

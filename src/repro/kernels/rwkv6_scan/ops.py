@@ -1,24 +1,20 @@
-"""Public WKV-6 op with backend dispatch (TPU Pallas / interpret / jnp ref)."""
+"""Public WKV-6 op dispatched through the unified ``kernel_mode()``."""
 from __future__ import annotations
 
-import os
-
-import jax
-
+from repro.kernels.interface import KernelType, kernel_mode
 from repro.kernels.rwkv6_scan.ref import wkv6_ref
 from repro.kernels.rwkv6_scan.rwkv6_scan import wkv6
 
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
+def wkv(r, k, v, w, u, state=None, *, chunk: int = 128, mode=None):
+    """WKV-6 linear-attention scan over (B, T, H, N) inputs.
 
-
-def wkv(r, k, v, w, u, state=None, *, chunk: int = 128):
-    if _on_tpu():
-        return wkv6(r, k, v, w, u, state, chunk=chunk)
-    if os.environ.get("FORCE_PALLAS_INTERPRET") == "1":
-        return wkv6(r, k, v, w, u, state, chunk=chunk, interpret=True)
-    return wkv6_ref(r, k, v, w, u, state)
+    Routes through ``kernel_mode(mode)``: ``xla`` runs the jnp reference,
+    otherwise the chunked Pallas scan (interpret unless on TPU). Returns
+    ``(out, final_state)``.
+    """
+    kt = kernel_mode(mode)
+    if kt is KernelType.XLA:
+        return wkv6_ref(r, k, v, w, u, state)
+    return wkv6(r, k, v, w, u, state, chunk=chunk,
+                interpret=kt is not KernelType.PALLAS)

@@ -1,13 +1,17 @@
-"""Perf-regression gate over ``BENCH_engine.json`` markers.
+"""Perf-regression gate over ``BENCH_*.json`` markers.
 
 CI used to only *upload* the benchmark marker; this comparator makes it a
 gate: load the committed baseline and the freshly produced marker,
 extract every throughput metric present in both (engine rounds/sec per
-execution model, sweep configs/sec, probes-on rounds/sec), and fail when
-any current rate falls more than ``tol`` below its baseline:
+execution model, sweep configs/sec, probes-on rounds/sec, comm-round
+rounds/sec fused and unfused, and per-compressor kernel XLA rates from
+``BENCH_kernels.json``), and fail when any current rate falls more than
+``tol`` below its baseline:
 
     python -m repro.obs.regress benchmarks/baselines/BENCH_engine.json \
         BENCH_engine.json --tol 0.2
+    python -m repro.obs.regress benchmarks/baselines/BENCH_kernels.json \
+        BENCH_kernels.json --tol 0.5
 
 Rate shapes are normalized across bench modes: smoke mode reports single
 scalars (the scanned/vmapped paths only), quick/full mode per-model
@@ -50,6 +54,23 @@ def load_rates(payload: dict) -> dict:
     rate_group("obs.rounds_per_sec",
                payload.get("obs", {}).get("rounds_per_sec_probes"),
                "probes")
+
+    # BENCH_engine comm section: fused/unfused compressed-round rates
+    comm = payload.get("comm")
+    if isinstance(comm, dict):
+        for k in ("rounds_per_sec_fused", "rounds_per_sec_unfused"):
+            if isinstance(comm.get(k), (int, float)):
+                out[f"comm.{k}"] = float(comm[k])
+
+    # BENCH_kernels compress section: gate the XLA rate per compressor
+    # (the pallas column is interpret-mode on CPU — a correctness probe
+    # whose wall-time is meaningless, so it is reported but never gated)
+    compress = payload.get("compress")
+    if isinstance(compress, dict):
+        for name, entry in compress.items():
+            if isinstance(entry, dict) and \
+                    isinstance(entry.get("xla_meps"), (int, float)):
+                out[f"compress.{name}.xla_meps"] = float(entry["xla_meps"])
     return out
 
 

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.comm import CommLedger
 from repro.core.participation import sample_masks
+from repro.kernels.interface import dispatch_key
 from repro.obs.events import write_run
 from repro.obs.profiling import compiled_cost, profile_ctx
 from repro.obs.trace import RunTrace, TraceConfig, eval_points
@@ -224,14 +225,17 @@ def _chunk_runner(skel, metric_fn, m, n, team_frac, device_frac,
 
 
 # Compiled programs are cached per (hparam skeleton, metric_fn, dims,
-# system skeleton, trace config): every experiment with the same static
-# structure — whatever its float hyperparameter or system-profile values
-# — shares one compile and pays one dispatch. A TraceConfig is part of
-# the static key (probes add scan outputs), so probes-off runs keep
-# hitting the original program.
+# system skeleton, trace config, kernel-dispatch key): every experiment
+# with the same static structure — whatever its float hyperparameter or
+# system-profile values — shares one compile and pays one dispatch. A
+# TraceConfig is part of the static key (probes add scan outputs), so
+# probes-off runs keep hitting the original program; the kernel-dispatch
+# key (repro.kernels.interface.dispatch_key) rides the key the same way,
+# so flipping REPRO_KERNEL_MODE / REPRO_COMPRESS_FUSED between runs
+# re-traces instead of reusing a program that baked in the old kernels.
 @functools.lru_cache(maxsize=128)
 def _scan_program(skel, metric_fn, m, n, team_frac, device_frac,
-                  system=None, trace=None):
+                  system=None, trace=None, kdispatch=None):
     run_chunks = _chunk_runner(skel, metric_fn, m, n, team_frac,
                                device_frac, system, trace)
     return functools.partial(jax.jit, static_argnames=(
@@ -239,7 +243,7 @@ def _scan_program(skel, metric_fn, m, n, team_frac, device_frac,
 
 
 @functools.lru_cache(maxsize=128)
-def _eval_program(skel, metric_fn):
+def _eval_program(skel, metric_fn, kdispatch=None):
     _, rebuild = skel.tree_hparams()
     return jax.jit(lambda hleaves, state, tr, va: rebuild(hleaves).eval(
         state, tr, va, metric_fn))
@@ -303,11 +307,12 @@ def run_experiment(algo, params0, train_data, val_data, *,
         sleaves, _ = system.tree_floats()
 
     skel, hleaves = hparam_skeleton(algo)
+    kdisp = dispatch_key()
     scanned = _scan_program(skel, metric_fn, m, n, team_frac, device_frac,
-                            sys_key, trace)
+                            sys_key, trace, kdisp)
     round_body = _round_body(algo, m, n, team_frac, device_frac, sys_key,
                              trace)
-    eval_jit = _eval_program(skel, metric_fn)
+    eval_jit = _eval_program(skel, metric_fn, kdisp)
 
     res = FLResult(rounds=rounds, eval_every=eval_every)
     ledger = algo.make_ledger(params0)

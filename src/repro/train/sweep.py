@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.interface import dispatch_key
 from repro.obs.events import write_sweep
 from repro.obs.trace import RunTrace, TraceConfig
 from repro.system import get_profile
@@ -124,7 +125,7 @@ class FLSweepResult:
 # runs the engine's chunk program (_chunk_runner) verbatim.
 @functools.lru_cache(maxsize=64)
 def _sweep_program(skel, metric_fn, m, n, team_frac, device_frac,
-                   sys_key=None, trace=None):
+                   sys_key=None, trace=None, kdispatch=None):
     run_chunks = _chunk_runner(skel, metric_fn, m, n, team_frac,
                                device_frac, sys_key, trace)
 
@@ -363,7 +364,8 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
                                 val_data)
 
     swept = _sweep_program(prep.skel, metric_fn, m, n, team_frac,
-                           device_frac, prep.sys_key, trace)
+                           device_frac, prep.sys_key, trace,
+                           dispatch_key())
     n_chunks, rem = divmod(rounds, eval_every)
 
     metric_hist = {}           # field -> list of (S, n_steps) arrays
@@ -404,7 +406,7 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
 # structurally-different sweeps (e.g. different compressors) still cost
 # one dispatch per segment.
 @functools.lru_cache(maxsize=32)
-def _multi_program(member_keys, metric_fn, m, n):
+def _multi_program(member_keys, metric_fn, m, n, kdispatch=None):
     runners = [_chunk_runner(skel, metric_fn, m, n, tf, df, sys_key,
                              trace)
                for skel, sys_key, tf, df, trace in member_keys]
@@ -466,7 +468,7 @@ def run_multi_sweep(variants, train_data, val_data, *,
     member_keys = tuple(
         (p.skel, p.sys_key, p.team_frac, p.device_frac, t)
         for p, t in zip(preps, traces))
-    multi = _multi_program(member_keys, metric_fn, m, n)
+    multi = _multi_program(member_keys, metric_fn, m, n, dispatch_key())
     ops = tuple((p.hstack, p.states, p.keys, p.sstack) for p in preps)
     n_chunks, rem = divmod(rounds, eval_every)
 

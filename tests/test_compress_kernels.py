@@ -1,0 +1,355 @@
+"""Fused compression stack: Pallas-vs-XLA parity, routing, and VJPs.
+
+The contract pinned here (DESIGN.md §10): for every compressor
+(topk / randk / int8 / sign), the Pallas kernel body run in interpret
+mode is bit-identical to the jnp reference dispatched as ``xla``, the
+fused EF ops match the historical unfused arithmetic, pack->unpack
+round-trips are exact, and the custom VJPs have identical gradient
+semantics across backends.
+"""
+import os
+
+os.environ.setdefault("FORCE_PALLAS_INTERPRET", "0")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (CommConfig, compress_tree, compress_tree_ef,
+                        leaf_k, leaf_plan, make_leaf_compressor,
+                        make_leaf_ef_compressor)
+from repro.kernels.compress import (ef_quantize_int8, ef_randk_compress,
+                                    ef_sign_compress, ef_topk_compress,
+                                    pack_topk, randk_compress, sign_compress,
+                                    sign_unpack, topk_compress, unpack_topk)
+from repro.kernels.interface import (KernelType, compress_fused,
+                                     dispatch_key, kernel_mode)
+
+SIZES = [7, 64, 128, 257, 1000]
+
+
+def _data(p, seed=0):
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (p,))
+    ef = 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (p,))
+    u = jax.random.uniform(jax.random.fold_in(key, 3), (p,))
+    noise = jax.random.uniform(jax.random.fold_in(key, 4), (p,))
+    return v, ef, u, noise
+
+
+def _k(p):
+    return max(1, p // 10)
+
+
+def _assert_same(a, b, what):
+    for i, (x, y) in enumerate(zip(a, b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{what}[{i}]")
+
+
+# ------------------------------------------------------ interface (modes)
+
+def test_kernel_mode_explicit_arg_wins(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "xla")
+    assert kernel_mode("interpret") is KernelType.INTERPRET
+    assert kernel_mode(KernelType.PALLAS) is KernelType.PALLAS
+
+
+def test_kernel_mode_env(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    assert kernel_mode() is KernelType.INTERPRET
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "PALLAS")   # case-insensitive
+    assert kernel_mode() is KernelType.PALLAS
+
+
+def test_kernel_mode_legacy_interpret_env(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_MODE", raising=False)
+    monkeypatch.setenv("FORCE_PALLAS_INTERPRET", "1")
+    assert kernel_mode() is KernelType.INTERPRET
+
+
+def test_kernel_mode_backend_default(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_MODE", raising=False)
+    monkeypatch.setenv("FORCE_PALLAS_INTERPRET", "0")
+    expect = (KernelType.PALLAS if jax.default_backend() == "tpu"
+              else KernelType.XLA)
+    assert kernel_mode() is expect
+
+
+def test_kernel_mode_rejects_unknown(monkeypatch):
+    with pytest.raises(ValueError, match="unknown kernel mode"):
+        kernel_mode("metal")
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "bogus")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_MODE"):
+        kernel_mode()
+
+
+def test_dispatch_key_tracks_env(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "xla")
+    monkeypatch.delenv("REPRO_COMPRESS_FUSED", raising=False)
+    assert dispatch_key() == (KernelType.XLA, True)
+    monkeypatch.setenv("REPRO_COMPRESS_FUSED", "0")
+    assert not compress_fused()
+    assert dispatch_key() == (KernelType.XLA, False)
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    assert dispatch_key() == (KernelType.INTERPRET, False)
+
+
+# ----------------------------------------- Pallas-vs-XLA bit parity (fwd)
+
+@pytest.mark.parametrize("p", SIZES)
+def test_topk_parity_and_legacy(p):
+    v, ef, _, _ = _data(p)
+    k = _k(p)
+    out_i = topk_compress(v, k, mode="interpret")
+    out_x = topk_compress(v, k, mode="xla")
+    _assert_same(out_i, out_x, "topk")
+    _, idx = jax.lax.top_k(jnp.abs(v), k)
+    legacy = jnp.zeros_like(v).at[idx].set(v[idx])
+    np.testing.assert_array_equal(np.asarray(out_x[0]), np.asarray(legacy))
+    assert int((out_x[1] >= 0).sum()) == k
+
+
+@pytest.mark.parametrize("p", SIZES)
+def test_ef_topk_parity(p):
+    v, ef, _, _ = _data(p)
+    k = _k(p)
+    out_i = ef_topk_compress(v, ef, k, mode="interpret")
+    out_x = ef_topk_compress(v, ef, k, mode="xla")
+    _assert_same(out_i, out_x, "ef_topk")
+    # EF identity: chat + ef_new reconstructs the message exactly
+    # (selection writes each coordinate to exactly one of the two)
+    np.testing.assert_array_equal(np.asarray(out_x[0] + out_x[2]),
+                                  np.asarray(v + ef))
+
+
+@pytest.mark.parametrize("p", SIZES)
+@pytest.mark.parametrize("unbiased", [False, True])
+def test_randk_parity_and_legacy(p, unbiased):
+    v, _, u, _ = _data(p)
+    k = _k(p)
+    out_i = randk_compress(u, v, k, unbiased=unbiased, mode="interpret")
+    out_x = randk_compress(u, v, k, unbiased=unbiased, mode="xla")
+    _assert_same(out_i, out_x, "randk")
+    _, idx = jax.lax.top_k(u, k)
+    scale = (p / k) if unbiased else 1.0
+    legacy = jnp.zeros_like(v).at[idx].set(v[idx] * scale)
+    np.testing.assert_array_equal(np.asarray(out_x[0]), np.asarray(legacy))
+
+
+@pytest.mark.parametrize("p", SIZES)
+def test_ef_randk_parity(p):
+    v, ef, u, _ = _data(p)
+    k = _k(p)
+    out_i = ef_randk_compress(u, v, ef, k, mode="interpret")
+    out_x = ef_randk_compress(u, v, ef, k, mode="xla")
+    _assert_same(out_i, out_x, "ef_randk")
+    np.testing.assert_array_equal(np.asarray(out_x[0] + out_x[2]),
+                                  np.asarray(v + ef))
+
+
+@pytest.mark.parametrize("p", SIZES)
+def test_ef_int8_parity(p):
+    v, ef, _, noise = _data(p)
+    out_i = ef_quantize_int8(v, ef, noise, mode="interpret")
+    out_x = ef_quantize_int8(v, ef, noise, mode="xla")
+    _assert_same(out_i, out_x, "ef_int8")
+    # stochastic rounding stays within one quantization step per row
+    q, scales, dq, ef_new = out_x
+    rows = -(-p // 128)
+    step = np.repeat(np.asarray(scales), 128)[:p]
+    assert (np.abs(np.asarray(dq) - np.asarray(v + ef)) <= step).all()
+
+
+@pytest.mark.parametrize("p", SIZES)
+def test_sign_parity_and_scale(p):
+    v, ef, _, _ = _data(p)
+    out_i = sign_compress(v, mode="interpret")
+    out_x = sign_compress(v, mode="xla")
+    _assert_same(out_i, out_x, "sign")
+    bits, scale, dq = out_x
+    np.testing.assert_array_equal(
+        np.asarray(dq), np.asarray(jnp.mean(jnp.abs(v)) * jnp.sign(v)))
+    out_i = ef_sign_compress(v, ef, mode="interpret")
+    out_x = ef_sign_compress(v, ef, mode="xla")
+    _assert_same(out_i, out_x, "ef_sign")
+
+
+# ------------------------------------------------- wire-format roundtrips
+
+@pytest.mark.parametrize("p", SIZES)
+def test_topk_pack_unpack_roundtrip(p):
+    v, _, u, _ = _data(p)
+    k = _k(p)
+    for dq, ranks in (topk_compress(v, k, mode="xla"),
+                      randk_compress(u, v, k, mode="xla")):
+        vals, idx = pack_topk(dq, ranks, k)
+        assert vals.shape == (k,) and idx.shape == (k,)
+        assert (np.asarray(idx) >= 0).all()
+        back = unpack_topk(vals, idx, p)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(dq))
+
+
+@pytest.mark.parametrize("p", SIZES)
+def test_sign_pack_unpack_roundtrip(p):
+    v, _, _, _ = _data(p)
+    bits, scale, dq = sign_compress(v, mode="xla")
+    assert bits.dtype == jnp.uint8 and bits.shape == (-(-p // 128), 16)
+    dec = sign_unpack(bits, scale, p)
+    np.testing.assert_array_equal(
+        np.asarray(dec),
+        np.asarray(jnp.where(v >= 0, scale, -scale)))
+
+
+def test_int8_wire_dequantizes_to_dq():
+    from repro.kernels.quantize import dequantize_int8
+    p = 500
+    v, ef, _, noise = _data(p)
+    q, scales, dq, _ = ef_quantize_int8(v, ef, noise, mode="xla")
+    np.testing.assert_array_equal(np.asarray(dequantize_int8(q, scales)),
+                                  np.asarray(dq))
+
+
+# ------------------------------------------------ comm routing (the tree)
+
+def _tree(p1=130, p2=70, b=6):
+    key = jax.random.PRNGKey(7)
+    mk = lambda i, shape: jax.random.normal(jax.random.fold_in(key, i),
+                                            shape)
+    delta = {"w": mk(0, (2, 3, p1)), "b": mk(1, (2, 3, p2))}
+    ef = {"w": 0.1 * mk(2, (2, 3, p1)), "b": 0.1 * mk(3, (2, 3, p2))}
+    return delta, ef
+
+
+@pytest.mark.parametrize("name", ["identity", "topk", "randk", "int8",
+                                  "sign"])
+def test_compress_tree_fused_matches_legacy(name, monkeypatch):
+    """REPRO_COMPRESS_FUSED=0 (historical unfused ops) and the fused
+    default produce the identical decompressed tree."""
+    delta, _ = _tree()
+    cfg = CommConfig(name, k_frac=0.2)
+    key = jax.random.PRNGKey(3)
+    monkeypatch.setenv("REPRO_COMPRESS_FUSED", "0")
+    legacy = compress_tree(cfg, key, delta, (2, 3))
+    monkeypatch.setenv("REPRO_COMPRESS_FUSED", "1")
+    fused = compress_tree(cfg, key, delta, (2, 3))
+    for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(fused)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ["identity", "topk", "randk", "int8",
+                                  "sign"])
+def test_compress_tree_ef_matches_manual_arithmetic(name):
+    """compress_tree_ef == (msg = delta + ef; chat = C(msg);
+    ef_new = msg - chat), with identical PRNG streams."""
+    delta, ef = _tree()
+    cfg = CommConfig(name, k_frac=0.2)
+    key = jax.random.PRNGKey(5)
+    chat, ef_new = compress_tree_ef(cfg, key, delta, ef, (2, 3))
+    msg = jax.tree.map(lambda d, e: d + e, delta, ef)
+    chat2 = compress_tree(cfg, key, msg, (2, 3))
+    ef2 = jax.tree.map(lambda m, c: m - c, msg, chat2)
+    exact = name in ("identity", "topk", "randk")
+    for a, b in zip(jax.tree.leaves(chat), jax.tree.leaves(chat2)):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(ef_new), jax.tree.leaves(ef2)):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["topk", "randk", "int8", "sign"])
+def test_leaf_ef_compressor_vmap_parity(name):
+    """The per-leaf EF routers agree across interpret/xla under vmap
+    (the stacked (M, N) sender axes)."""
+    cfg = CommConfig(name, k_frac=0.2)
+    p, b = 300, 4
+    key = jax.random.PRNGKey(11)
+    keys = jax.random.split(key, b)
+    d = jax.random.normal(jax.random.fold_in(key, 0), (b, p))
+    e = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (b, p))
+    f_i = jax.vmap(make_leaf_ef_compressor(cfg, p, mode="interpret"))
+    f_x = jax.vmap(make_leaf_ef_compressor(cfg, p, mode="xla"))
+    _assert_same(f_i(keys, d, e), f_x(keys, d, e), f"vmap-{name}")
+
+
+def test_leaf_plan_static_and_cached():
+    cfg = CommConfig("topk", k_frac=0.25)
+    plan = leaf_plan(cfg, 1000)
+    assert plan.k == leaf_k(0.25, 1000) == 250
+    assert plan.rows == 8
+    assert leaf_plan(cfg, 1000) is plan       # lru-cached, zero per-round work
+    sign_plan = leaf_plan(CommConfig("sign"), 1000)
+    assert sign_plan.k is None
+    assert ("bits", (8, 16), "u8") in sign_plan.wire
+
+
+# --------------------------------------------------------- custom VJPs
+
+@pytest.mark.parametrize("mode", ["interpret", "xla"])
+def test_ef_topk_grad_matches_ref_autodiff(mode):
+    """The custom VJP is the exact a.e. gradient: identical to autodiff
+    of the reference implementation."""
+    from repro.kernels.compress import ref as R
+    p, k = 257, 25
+    v, ef, _, _ = _data(p, seed=42)
+
+    def loss_op(d, e):
+        dq, _, ef_new = ef_topk_compress(d, e, k, mode=mode)
+        return jnp.sum(dq ** 2) + jnp.sum(ef_new * d)
+
+    def loss_ref(d, e):
+        dq, _, ef_new = R.ef_topk_select_ref(d, e, k)
+        return jnp.sum(dq ** 2) + jnp.sum(ef_new * d)
+
+    g_op = jax.grad(loss_op, argnums=(0, 1))(v, ef)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1))(v, ef)
+    for a, b in zip(g_op, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_grad_parity_across_modes():
+    p, k = 300, 30
+    v, ef, u, noise = _data(p, seed=43)
+
+    def grads(mode):
+        gs = []
+        gs.append(jax.grad(lambda x: jnp.sum(
+            topk_compress(x, k, mode=mode)[0] ** 2))(v))
+        gs.append(jax.grad(lambda x: jnp.sum(
+            randk_compress(u, x, k, mode=mode)[0] ** 2))(v))
+        gs.append(jax.grad(lambda x: jnp.sum(
+            ef_quantize_int8(x, ef, noise, mode=mode)[2] ** 2))(v))
+        gs.append(jax.grad(lambda x: jnp.sum(
+            ef_sign_compress(x, ef, mode=mode)[2] ** 2))(v))
+        return gs
+
+    _assert_same(grads("interpret"), grads("xla"), "grads")
+
+
+def test_ste_gradients():
+    """int8/sign use the straight-through estimator: a loss that touches
+    v only through dq sees the identity jacobian."""
+    p = 200
+    v, ef, _, noise = _data(p, seed=44)
+    cot = jax.random.normal(jax.random.PRNGKey(8), (p,))
+    g = jax.grad(lambda x: jnp.sum(
+        ef_quantize_int8(x, ef, noise, mode="xla")[2] * cot))(v)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(cot))
+    g = jax.grad(lambda x: jnp.sum(
+        sign_compress(x, mode="xla")[2] * cot))(v)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(cot))
+    # selection ops: exact mask gradient, not STE
+    dq, ranks = topk_compress(v, 20, mode="xla")
+    g = jax.grad(lambda x: jnp.sum(
+        topk_compress(x, 20, mode="xla")[0] * cot))(v)
+    np.testing.assert_array_equal(
+        np.asarray(g), np.asarray(jnp.where(ranks >= 0, cot, 0.0)))

@@ -1,0 +1,121 @@
+"""Property tests for the fused compression stack (hypothesis).
+
+Randomized shapes/seeds pin the invariants the deterministic suite
+checks pointwise: Pallas(interpret)-vs-XLA bit-exactness, pack->unpack
+round-trips, the EF decomposition ``chat + ef_new == msg``, and the
+one-step stochastic-rounding error bound for int8. Skips cleanly when
+hypothesis is not installed (it is an optional dev dependency).
+"""
+import os
+
+os.environ.setdefault("FORCE_PALLAS_INTERPRET", "0")
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (optional dev dep)")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.compress import (ef_quantize_int8, ef_randk_compress,
+                                    ef_sign_compress, ef_topk_compress,
+                                    pack_topk, randk_compress, sign_compress,
+                                    sign_unpack, topk_compress, unpack_topk)
+
+COMMON = dict(deadline=None, max_examples=25)
+
+sizes = st.integers(min_value=1, max_value=1500)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+fracs = st.floats(min_value=0.01, max_value=1.0)
+
+
+def _arrs(p, seed):
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (p,))
+    ef = 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (p,))
+    u = jax.random.uniform(jax.random.fold_in(key, 3), (p,))
+    noise = jax.random.uniform(jax.random.fold_in(key, 4), (p,))
+    return v, ef, u, noise
+
+
+def _k(p, frac):
+    return max(1, min(p, int(round(frac * p))))
+
+
+def _eq(a, b, msg):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+@settings(**COMMON)
+@given(p=sizes, seed=seeds, frac=fracs)
+def test_select_parity_and_roundtrip(p, seed, frac):
+    v, ef, u, _ = _arrs(p, seed)
+    k = _k(p, frac)
+    for name, out_i, out_x in [
+        ("topk", topk_compress(v, k, mode="interpret"),
+         topk_compress(v, k, mode="xla")),
+        ("randk", randk_compress(u, v, k, mode="interpret"),
+         randk_compress(u, v, k, mode="xla")),
+    ]:
+        dq_i, r_i = out_i
+        dq_x, r_x = out_x
+        _eq(dq_i, dq_x, f"{name} dq parity")
+        _eq(r_i, r_x, f"{name} ranks parity")
+        assert int((r_x >= 0).sum()) == k
+        vals, idx = pack_topk(dq_x, r_x, k)
+        _eq(unpack_topk(vals, idx, p), dq_x, f"{name} roundtrip")
+
+
+@settings(**COMMON)
+@given(p=sizes, seed=seeds, frac=fracs)
+def test_ef_select_decomposition(p, seed, frac):
+    v, ef, u, _ = _arrs(p, seed)
+    k = _k(p, frac)
+    for name, out_i, out_x in [
+        ("ef_topk", ef_topk_compress(v, ef, k, mode="interpret"),
+         ef_topk_compress(v, ef, k, mode="xla")),
+        ("ef_randk", ef_randk_compress(u, v, ef, k, mode="interpret"),
+         ef_randk_compress(u, v, ef, k, mode="xla")),
+    ]:
+        for a, b in zip(out_i, out_x):
+            _eq(a, b, f"{name} parity")
+        dq, ranks, ef_new = out_x
+        # selection writes each coordinate to exactly one side, so the
+        # decomposition is exact in floating point, not just approximate
+        _eq(dq + ef_new, v + ef, f"{name} decomposition")
+        _eq(jnp.where(ranks >= 0, ef_new, 0.0),
+            jnp.zeros_like(ef_new), f"{name} kept coords have zero ef")
+
+
+@settings(**COMMON)
+@given(p=sizes, seed=seeds)
+def test_int8_parity_and_error_bound(p, seed):
+    v, ef, _, noise = _arrs(p, seed)
+    out_i = ef_quantize_int8(v, ef, noise, mode="interpret")
+    out_x = ef_quantize_int8(v, ef, noise, mode="xla")
+    for a, b in zip(out_i, out_x):
+        _eq(a, b, "ef_int8 parity")
+    q, scales, dq, ef_new = out_x
+    assert q.dtype == jnp.int8
+    step = np.repeat(np.asarray(scales), 128)[:p]
+    err = np.abs(np.asarray(dq) - np.asarray(v + ef))
+    assert (err <= step + 1e-12).all(), "stochastic rounding > 1 step"
+
+
+@settings(**COMMON)
+@given(p=sizes, seed=seeds)
+def test_sign_parity_and_roundtrip(p, seed):
+    v, ef, _, _ = _arrs(p, seed)
+    bits_i, scale_i, dq_i = sign_compress(v, mode="interpret")
+    bits_x, scale_x, dq_x = sign_compress(v, mode="xla")
+    _eq(bits_i, bits_x, "sign bits parity")
+    _eq(scale_i, scale_x, "sign scale parity")
+    _eq(dq_i, dq_x, "sign dq parity")
+    _eq(sign_unpack(bits_x, scale_x, p),
+        jnp.where(v >= 0, scale_x, -scale_x), "sign roundtrip")
+    for a, b in zip(ef_sign_compress(v, ef, mode="interpret"),
+                    ef_sign_compress(v, ef, mode="xla")):
+        _eq(a, b, "ef_sign parity")

@@ -14,6 +14,9 @@ PUBLIC_MODULES = (
     "repro.core",
     "repro.core.algorithm",
     "repro.comm",
+    "repro.kernels",
+    "repro.kernels.interface",
+    "repro.kernels.compress",
     "repro.train.engine",
     "repro.train.sweep",
     "repro.train.fl_trainer",
