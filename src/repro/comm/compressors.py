@@ -7,8 +7,10 @@ lives in ``repro.kernels.compress`` — fused Pallas kernels with an XLA
 reference, dispatched through :func:`repro.kernels.interface.kernel_mode`
 — so this module only derives per-leaf plans and PRNG streams and calls
 the right op. ``REPRO_COMPRESS_FUSED=0`` falls back to the historical
-unfused implementations (bit-identical selections by construction; used
-by the fused-vs-unfused engine benchmark).
+unfused implementations (bit-identical selections by construction: the
+fused select reproduces ``lax.top_k``'s lowest-index tie-breaking, so
+even tied magnitudes or colliding float32 uniforms keep the same set;
+used by the fused-vs-unfused engine benchmark).
 
 Static per-leaf facts (k, wire-buffer shapes) are computed once per
 (CommConfig, leaf size) by the cached :func:`leaf_plan` and reused across

@@ -18,6 +18,7 @@ from repro.kernels.compress.ops import (
     ef_topk_compress,
     pack_topk,
     randk_compress,
+    resolve_leaf_mode,
     sign_compress,
     sign_unpack,
     topk_compress,
@@ -28,4 +29,5 @@ __all__ = [
     "topk_compress", "ef_topk_compress", "randk_compress",
     "ef_randk_compress", "ef_quantize_int8", "sign_compress",
     "ef_sign_compress", "pack_topk", "unpack_topk", "sign_unpack",
+    "resolve_leaf_mode",
 ]

@@ -5,13 +5,16 @@ wire formats defined by ``ref.py`` — these must match it bit-for-bit in
 interpret mode):
 
 * **select** (top-k / rand-k): given the k-th-largest score as a (1,1)
-  scalar operand, compute the keep mask, each kept coordinate's global
+  scalar operand, compute the keep set (strictly-above entries plus
+  ``== threshold`` ties filled in flat-index order — ``lax.top_k``'s
+  exact kept set, see ``ref._select``), each kept coordinate's global
   rank (its slot in the ``(k,)`` wire buffer), the dense decompressed
   value, and — in the EF variant — the error-feedback residual, in one
-  VMEM-resident pass. Ranks come from two cumulative counts done as
-  MXU matmuls against triangular 0/1 matrices (lane-axis prefix via a
-  (128,128) upper-triangle, row-axis prefix via a (rows,rows) strict
-  lower-triangle) — no scatter, no sort, no unsupported scan.
+  VMEM-resident pass. The strict/tie prefix counts are cumulative
+  sums done as MXU matmuls against triangular 0/1 matrices (lane-axis
+  prefix via a (128,128) upper-triangle, row-axis prefix via a
+  (rows,rows) strict lower-triangle) — no scatter, no sort, no
+  unsupported scan.
 * **ef-quantize-int8**: ``msg = delta + ef`` -> row absmax scale ->
   stochastic round -> packed int8 + scales + dq + ef_new. Subsumes the
   ``kernels/quantize`` forward (that kernel remains for the bare op).
@@ -23,9 +26,9 @@ interpret mode):
 All kernels are gridless single blocks: the whole (rows, 128) array is
 one VMEM block, so they vmap safely over the stacked (M, N) sender axes
 (no program_id / scratch state for the batching rule to break). That
-bounds leaf size to VMEM — roughly p <= ~250k floats per leaf per
-sender, far above this repo's model zoo — bigger leaves belong to the
-XLA reference (DESIGN.md §10).
+bounds leaf size to VMEM — ``PALLAS_MAX_ELEMS`` floats per leaf per
+sender, far above this repo's model zoo — bigger leaves are routed to
+the XLA reference by ``ops.resolve_leaf_mode`` (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -38,6 +41,13 @@ from jax.experimental import pallas as pl
 
 LANES = 128
 
+# VMEM ceiling for the gridless kernels: the largest flat leaf size (in
+# elements) a single-block pallas_call can hold — a handful of f32
+# (rows, 128) operands/outputs must fit in ~16 MiB of VMEM at once.
+# ``ops.resolve_leaf_mode`` falls back to the XLA reference (same bits)
+# for bigger leaves instead of failing at Mosaic compile time.
+PALLAS_MAX_ELEMS = 256 * 1024
+
 
 def _pad_rows(x, size):
     rows = pl.cdiv(size, LANES)
@@ -48,26 +58,39 @@ def _pad_rows(x, size):
 
 
 def _select_core(score, v, thresh, k, scale, size):
-    """Shared select math: mask -> global rank (matmul cumsums) -> cap."""
+    """Shared select math, mirroring ``ref._select``: keep strictly-above
+    entries unconditionally, fill the remaining k - n_strict slots with
+    ``== thresh`` ties in flat-index order (``lax.top_k``'s exact kept
+    set), global ranks via matmul prefix counts."""
     rows = score.shape[0]
     ridx = lax.broadcasted_iota(jnp.int32, (rows, LANES), 0)
     lidx = lax.broadcasted_iota(jnp.int32, (rows, LANES), 1)
     real = (ridx * LANES + lidx) < size
-    mask = (score >= thresh) & real
-    maskf = mask.astype(jnp.float32)
+    strict = (score > thresh) & real
+    tie = (score == thresh) & real
     li = lax.broadcasted_iota(jnp.int32, (LANES, LANES), 0)
     lj = lax.broadcasted_iota(jnp.int32, (LANES, LANES), 1)
-    # HIGHEST precision: the MXU's default f32 matmul is inexact above
-    # ~2^8 and these products must be exact integer counts
-    incl = jnp.dot(maskf, (li <= lj).astype(jnp.float32),
-                   precision=lax.Precision.HIGHEST)
-    row_tot = incl[:, LANES - 1:LANES]
+    lane_tri = (li <= lj).astype(jnp.float32)
     ri = lax.broadcasted_iota(jnp.int32, (rows, rows), 0)
     rj = lax.broadcasted_iota(jnp.int32, (rows, rows), 1)
-    prefix = jnp.dot((rj < ri).astype(jnp.float32), row_tot,
-                     precision=lax.Precision.HIGHEST)
-    rank = (prefix + incl).astype(jnp.int32) - 1
-    sel = mask & (rank < k)
+    row_tri = (rj < ri).astype(jnp.float32)
+
+    def inc_count(mask):
+        # Inclusive flat-order prefix count of ``mask``. HIGHEST
+        # precision: the MXU's default f32 matmul is inexact above ~2^8
+        # and these products must be exact integer counts.
+        incl = jnp.dot(mask.astype(jnp.float32), lane_tri,
+                       precision=lax.Precision.HIGHEST)
+        prefix = jnp.dot(row_tri, incl[:, LANES - 1:LANES],
+                         precision=lax.Precision.HIGHEST)
+        return prefix + incl
+
+    inc_s = inc_count(strict)
+    inc_t = inc_count(tie)
+    # slots left for ties; counts are exact integers in f32 (< 2^24)
+    cap = jnp.float32(k) - inc_s[rows - 1:rows, LANES - 1:LANES]
+    sel = strict | (tie & (inc_t <= cap))
+    rank = (inc_s + jnp.minimum(inc_t, cap)).astype(jnp.int32) - 1
     dq = jnp.where(sel, v * scale, jnp.zeros((), v.dtype))
     ranks = jnp.where(sel, rank, -1)
     return dq, ranks

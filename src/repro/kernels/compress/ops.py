@@ -37,7 +37,21 @@ __all__ = [
     "topk_compress", "ef_topk_compress", "randk_compress",
     "ef_randk_compress", "ef_quantize_int8", "sign_compress",
     "ef_sign_compress", "pack_topk", "unpack_topk", "sign_unpack",
+    "resolve_leaf_mode",
 ]
+
+
+def resolve_leaf_mode(kt: KernelType, p) -> KernelType:
+    """Clamp compiled-Pallas dispatch to leaves that fit the gridless
+    kernels' VMEM budget (``compress.PALLAS_MAX_ELEMS`` elements).
+
+    Bigger leaves run the bit-identical XLA reference instead of dying
+    at Mosaic compile/run time; interpret mode has no VMEM and is left
+    alone. Every public op below routes through this, so callers never
+    see the size limit."""
+    if kt is KernelType.PALLAS and int(p) > _pal.PALLAS_MAX_ELEMS:
+        return KernelType.XLA
+    return kt
 
 
 def _zeros_like(x):
@@ -228,48 +242,57 @@ def topk_compress(v, k, *, mode=None):
     """Fused magnitude top-k on flat ``v`` (p,): keep the k largest-|·|
     coordinates (ties to the lowest index, exactly like ``lax.top_k``).
     Returns (dq (p,), ranks (p,) i32 — wire slot in [0, k) or -1)."""
-    return _topk(int(k), kernel_mode(mode), v)
+    return _topk(int(k), resolve_leaf_mode(kernel_mode(mode), v.shape[0]),
+                 v)
 
 
 def ef_topk_compress(delta, ef, k, *, mode=None):
     """Fused error-feedback + top-k: ``msg = delta + ef`` never hits HBM
     on the Pallas path. Returns (dq, ranks, ef_new = msg - dq)."""
-    return _ef_topk(int(k), kernel_mode(mode), delta, ef)
+    return _ef_topk(int(k),
+                    resolve_leaf_mode(kernel_mode(mode), delta.shape[0]),
+                    delta, ef)
 
 
 def randk_compress(u, v, k, *, unbiased=False, mode=None):
     """Fused rand-k on flat ``v``: keep the k coordinates with the
     largest uniform scores ``u`` (k indices without replacement, same
-    stream as the historical compressor). ``unbiased=True`` rescales
+    stream as the historical compressor — tied/colliding uniforms break
+    to the lowest index like ``lax.top_k``). ``unbiased=True`` rescales
     kept values by p/k (use without EF); contractive otherwise.
     Returns (dq, ranks)."""
     scale = v.shape[0] / int(k) if unbiased else 1.0
-    return _randk(int(k), scale, kernel_mode(mode), u, v)
+    return _randk(int(k), scale,
+                  resolve_leaf_mode(kernel_mode(mode), v.shape[0]), u, v)
 
 
 def ef_randk_compress(u, delta, ef, k, *, mode=None):
     """Fused error-feedback + contractive rand-k (EF absorbs the bias,
     so no p/k rescale). Returns (dq, ranks, ef_new)."""
-    return _ef_randk(int(k), kernel_mode(mode), u, delta, ef)
+    return _ef_randk(int(k),
+                     resolve_leaf_mode(kernel_mode(mode), delta.shape[0]),
+                     u, delta, ef)
 
 
 def ef_quantize_int8(delta, ef, noise, *, mode=None):
     """Fused error-feedback + stochastic int8 quantize/pack (subsumes
     ``repro.kernels.quantize`` on the EF path). Returns
     (q (p,) i8, scales (rows,) f32, dq (p,), ef_new (p,))."""
-    return _ef_int8(kernel_mode(mode), delta, ef, noise)
+    return _ef_int8(resolve_leaf_mode(kernel_mode(mode), delta.shape[0]),
+                    delta, ef, noise)
 
 
 def sign_compress(v, *, mode=None):
     """Fused 1-bit sign+pack with majority-friendly ``mean(|v|)`` scale.
     Returns (bits (rows,16) u8, scale () f32, dq = scale * sign(v))."""
-    return _sign(kernel_mode(mode), v)
+    return _sign(resolve_leaf_mode(kernel_mode(mode), v.shape[0]), v)
 
 
 def ef_sign_compress(delta, ef, *, mode=None):
     """Fused error-feedback + sign+pack. Returns
     (bits, scale, dq, ef_new = msg - dq)."""
-    return _ef_sign(kernel_mode(mode), delta, ef)
+    return _ef_sign(resolve_leaf_mode(kernel_mode(mode), delta.shape[0]),
+                    delta, ef)
 
 
 def pack_topk(dq, ranks, k):

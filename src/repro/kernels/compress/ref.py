@@ -7,11 +7,15 @@ conventions that make that possible:
 
 * flat ``(p,)`` arrays are zero-padded to ``(rows, 128)`` row-major,
   ``rows = ceil(p / 128)``; padding never selects (masked by index).
-* top-k / rand-k selection is *threshold + rank-cap*: keep positions
-  whose score reaches the k-th largest score, in flat-index order,
-  capped at k. ``lax.top_k`` breaks ties by lowest index, so the kept
-  set — and therefore the dense decompressed value — is identical to
-  the historical ``top_k`` + scatter implementation.
+* top-k / rand-k selection is *strict-above + tie-fill*: every
+  position whose score is strictly above the k-th largest score is
+  kept unconditionally (there are < k of them by definition), and the
+  remaining slots are filled with ``== threshold`` ties in flat-index
+  order. ``lax.top_k`` keeps exactly that set (stable sort, ties to
+  the lowest index), so the kept set — and therefore the dense
+  decompressed value — is identical to the historical ``top_k`` +
+  scatter implementation even under tied scores (duplicate values,
+  zero-heavy leaves, colliding float32 uniforms).
 * reductions that feed scales (sign's mean |v|, the int8 row absmax)
   are either order-insensitive (max) or computed once on the XLA side
   and passed into the kernel, so fused and unfused paths agree exactly.
@@ -55,11 +59,22 @@ def kth_threshold(score, k: int):
 
 
 def _select(score, v, k: int, scale: float, size: int):
-    """Threshold + rank-cap select on flat arrays -> (dq, ranks)."""
+    """Strict-above + tie-fill select on flat arrays -> (dq, ranks).
+
+    Keep everything with ``score > thresh`` unconditionally, then fill
+    the remaining ``k - n_strict`` slots with ``== thresh`` ties in
+    index order — the exact kept set of ``lax.top_k``. A plain
+    ``score >= thresh`` mask capped at k would let low-index ties crowd
+    out strictly larger entries (catastrophically: a leaf with > p-k
+    zeros has ``thresh == 0`` and would keep only leading zeros)."""
     thresh = kth_threshold(score, k)
-    mask = score >= thresh
-    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1     # 0-based, index order
-    sel = mask & (rank < k)
+    strict = score > thresh
+    tie = score == thresh
+    cap = k - jnp.sum(strict.astype(jnp.int32))       # slots left for ties
+    inc_s = jnp.cumsum(strict.astype(jnp.int32))      # inclusive counts,
+    inc_t = jnp.cumsum(tie.astype(jnp.int32))         # flat-index order
+    sel = strict | (tie & (inc_t <= cap))
+    rank = inc_s + jnp.minimum(inc_t, cap) - 1        # 0-based slot of sel
     dq = jnp.where(sel, v * scale, jnp.zeros((), v.dtype))
     ranks = jnp.where(sel, rank, -1).astype(jnp.int32)
     return dq, ranks
@@ -154,9 +169,9 @@ def sign_unpack_ref(bits, scale, size: int):
 
 def pack_selected_ref(dq, ranks, k: int):
     """Dense (dq, ranks) -> the ``(k,)`` wire buffers: (vals (k,), idx
-    (k,) i32). Selection always fills all k slots (the threshold keeps
-    >= k candidates); unused slots — impossible by construction — would
-    read 0 / -1."""
+    (k,) i32). Selection always fills all k slots exactly (n_strict
+    strictly-above entries plus k - n_strict ties); unused slots —
+    impossible by construction — would read 0 / -1."""
     p = dq.shape[0]
     safe = jnp.where(ranks >= 0, ranks, k)
     vals = jnp.zeros((k + 1,), dq.dtype).at[safe].set(dq)[:k]

@@ -21,8 +21,10 @@ from repro.comm import (CommConfig, compress_tree, compress_tree_ef,
                         make_leaf_ef_compressor)
 from repro.kernels.compress import (ef_quantize_int8, ef_randk_compress,
                                     ef_sign_compress, ef_topk_compress,
-                                    pack_topk, randk_compress, sign_compress,
+                                    pack_topk, randk_compress,
+                                    resolve_leaf_mode, sign_compress,
                                     sign_unpack, topk_compress, unpack_topk)
+from repro.kernels.compress.compress import PALLAS_MAX_ELEMS
 from repro.kernels.interface import (KernelType, compress_fused,
                                      dispatch_key, kernel_mode)
 
@@ -174,6 +176,109 @@ def test_sign_parity_and_scale(p):
     out_i = ef_sign_compress(v, ef, mode="interpret")
     out_x = ef_sign_compress(v, ef, mode="xla")
     _assert_same(out_i, out_x, "ef_sign")
+
+
+# ------------------------------------- ties & degenerate inputs (legacy eq)
+
+def _legacy_topk_dense(v, k):
+    _, idx = jax.lax.top_k(jnp.abs(v), k)
+    return jnp.zeros_like(v).at[idx].set(v[idx])
+
+
+TIE_CASES = [
+    (jnp.array([3.0, 5.0, 3.0, 5.0, 3.0]), 3),   # ties straddle the k-cut
+    (jnp.array([1.0, 1.0, 1.0, 1.0, 1.0, 1.0]), 2),          # all tied
+    (jnp.array([-2.0, 2.0, -2.0, 2.0, 0.0, 7.0]), 4),   # sign-mixed ties
+]
+
+
+@pytest.mark.parametrize("mode", ["interpret", "xla"])
+@pytest.mark.parametrize("case", range(len(TIE_CASES)))
+def test_topk_ties_match_legacy(mode, case):
+    """Tied magnitudes keep lax.top_k's exact set: a low-index tie must
+    never crowd out a strictly larger entry (the old rank-cap select
+    kept a tied 3 and dropped a strictly larger 5)."""
+    v, k = TIE_CASES[case]
+    dq, ranks = topk_compress(v, k, mode=mode)
+    np.testing.assert_array_equal(np.asarray(dq),
+                                  np.asarray(_legacy_topk_dense(v, k)))
+    r = np.asarray(ranks)
+    np.testing.assert_array_equal(np.sort(r[r >= 0]), np.arange(k))
+    vals, idx = pack_topk(dq, ranks, k)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_topk(vals, idx, v.shape[0])), np.asarray(dq))
+
+
+@pytest.mark.parametrize("mode", ["interpret", "xla"])
+def test_topk_zero_heavy_keeps_signal(mode):
+    """More than p-k zeros => threshold 0: every nonzero coordinate must
+    survive (the old rank-cap kept the first k flat indices — all
+    zeros — silently dropping the whole signal)."""
+    p, k = 300, 50
+    v = jnp.zeros(p).at[250].set(1.5).at[280].set(-2.0).at[299].set(0.5)
+    dq, ranks = topk_compress(v, k, mode=mode)
+    np.testing.assert_array_equal(np.asarray(dq),
+                                  np.asarray(_legacy_topk_dense(v, k)))
+    assert float(dq[250]) == 1.5 and float(dq[280]) == -2.0
+    assert float(dq[299]) == 0.5
+    assert int((ranks >= 0).sum()) == k
+
+
+@pytest.mark.parametrize("mode", ["interpret", "xla"])
+def test_ef_topk_sparse_delta_no_permanent_drop(mode):
+    """The catastrophic EF case from the review: a sparse delta with
+    > p-k zeros must be transmitted, not zeroed — with error feedback
+    an all-zero dq would recur identically every round and the signal
+    would never leave the device."""
+    p, k = 256, 25
+    delta = jnp.zeros(p).at[200].set(3.0).at[130].set(-1.0)
+    ef = jnp.zeros(p)
+    dq, ranks, ef_new = ef_topk_compress(delta, ef, k, mode=mode)
+    assert float(dq[200]) == 3.0 and float(dq[130]) == -1.0
+    np.testing.assert_array_equal(np.asarray(ef_new), np.zeros(p))
+    assert int((ranks >= 0).sum()) == k
+
+
+@pytest.mark.parametrize("mode", ["interpret", "xla"])
+def test_randk_tied_uniforms_match_legacy(mode):
+    """Colliding scores (forced here by quantizing the uniforms to 8
+    levels) still reproduce lax.top_k's kept set bit-for-bit — the
+    float32-collision case the birthday bound makes likely at real p."""
+    p, k = 500, 60
+    key = jax.random.PRNGKey(9)
+    u = jnp.floor(jax.random.uniform(key, (p,)) * 8.0) / 8.0
+    v = jax.random.normal(jax.random.fold_in(key, 1), (p,))
+    dq, ranks = randk_compress(u, v, k, mode=mode)
+    _, idx = jax.lax.top_k(u, k)
+    legacy = jnp.zeros_like(v).at[idx].set(v[idx])
+    np.testing.assert_array_equal(np.asarray(dq), np.asarray(legacy))
+    vals, iw = pack_topk(dq, ranks, k)
+    np.testing.assert_array_equal(np.asarray(unpack_topk(vals, iw, p)),
+                                  np.asarray(dq))
+
+
+# --------------------------------------------------- VMEM-bound fallback
+
+def test_resolve_leaf_mode_vmem_fallback():
+    assert resolve_leaf_mode(KernelType.PALLAS,
+                             PALLAS_MAX_ELEMS) is KernelType.PALLAS
+    assert resolve_leaf_mode(KernelType.PALLAS,
+                             PALLAS_MAX_ELEMS + 1) is KernelType.XLA
+    assert resolve_leaf_mode(KernelType.INTERPRET,
+                             10 ** 9) is KernelType.INTERPRET
+    assert resolve_leaf_mode(KernelType.XLA, 10 ** 9) is KernelType.XLA
+
+
+def test_oversized_leaf_routes_to_xla_reference():
+    """A leaf beyond the gridless kernels' VMEM budget must run (via the
+    XLA reference) even under explicit pallas dispatch — on this CPU
+    host a compiled pallas_call would fail outright, so completing at
+    all proves the routing."""
+    p = PALLAS_MAX_ELEMS + 128
+    v = jnp.zeros(p).at[p - 3].set(4.0).at[17].set(-1.0)
+    dq, ranks = topk_compress(v, 2, mode="pallas")
+    assert float(dq[p - 3]) == 4.0 and float(dq[17]) == -1.0
+    assert int((ranks >= 0).sum()) == 2
 
 
 # ------------------------------------------------- wire-format roundtrips

@@ -70,6 +70,36 @@ def test_select_parity_and_roundtrip(p, seed, frac):
 
 
 @settings(**COMMON)
+@given(p=sizes, seed=seeds, frac=fracs,
+       levels=st.integers(min_value=1, max_value=4))
+def test_select_parity_with_ties(p, seed, frac, levels):
+    """Tie-heavy inputs (values/uniforms quantized to <= 4 levels, so
+    duplicate scores and zero-heavy leaves are the norm): the fused
+    select must still reproduce lax.top_k's lowest-index-tie kept set
+    bit-for-bit, across both backends."""
+    v, _, u, _ = _arrs(p, seed)
+    v = jnp.round(v * levels) / levels
+    u = jnp.floor(u * levels) / levels
+    k = _k(p, frac)
+    _, tidx = jax.lax.top_k(jnp.abs(v), k)
+    _, ridx = jax.lax.top_k(u, k)
+    for name, out_i, out_x, legacy in [
+        ("topk", topk_compress(v, k, mode="interpret"),
+         topk_compress(v, k, mode="xla"),
+         jnp.zeros_like(v).at[tidx].set(v[tidx])),
+        ("randk", randk_compress(u, v, k, mode="interpret"),
+         randk_compress(u, v, k, mode="xla"),
+         jnp.zeros_like(v).at[ridx].set(v[ridx])),
+    ]:
+        _eq(out_i[0], out_x[0], f"{name} tie dq parity")
+        _eq(out_i[1], out_x[1], f"{name} tie ranks parity")
+        _eq(out_x[0], legacy, f"{name} tie legacy equivalence")
+        r = np.asarray(out_x[1])
+        np.testing.assert_array_equal(np.sort(r[r >= 0]), np.arange(k),
+                                      err_msg=f"{name} tie rank perm")
+
+
+@settings(**COMMON)
 @given(p=sizes, seed=seeds, frac=fracs)
 def test_ef_select_decomposition(p, seed, frac):
     v, ef, u, _ = _arrs(p, seed)
