@@ -19,10 +19,14 @@ plus a `sweep` mode comparing a multi-config hyperparameter grid run as a
 sequential loop of scanned experiments vs ONE vmapped program
 (train.sweep.run_sweep), reporting configs/sec for both, and a `probes`
 measurement re-running the scanned path with the run-telemetry probes on
-(`repro.obs.TraceConfig`) to report the observability overhead, and a
+(`repro.obs.TraceConfig`) to report the observability overhead, a
 `comm` measurement running a comm-heavy top-k scenario probes-off with
 the fused compression stack (default) vs the historical unfused chain
-(`REPRO_COMPRESS_FUSED=0`), reporting rounds/sec for both.
+(`REPRO_COMPRESS_FUSED=0`), reporting rounds/sec for both, and a
+`cohort` N-scaling measurement running the virtualized cohort engine
+(fixed cohort width, populations N in {10^2, 10^3, 10^4}) — per-round
+cost must track the cohort, not the population, so the N=10^4/N=10^2
+slowdown is asserted < 2x in timed mode.
 
 Reproduction target: the scanned path beats legacy per-round dispatch in
 rounds/sec (the paper's multi-algorithm sweeps were dispatch-bound, not
@@ -58,7 +62,7 @@ from repro.core.permfl import eval_stacked, init_state, permfl_round
 from repro.train.engine import run_experiment
 from repro.train.sweep import run_sweep
 
-from repro.scenarios import DataSpec, FLScenario, build_scenario
+from repro.scenarios import AlgoSpec, DataSpec, FLScenario, build_scenario
 
 # per-round eval, as every figure/table benchmark runs (their default)
 EVAL_EVERY = 1
@@ -78,6 +82,18 @@ COMM_SCENARIO = dataclasses.replace(
     BENCH_SCENARIO, name="bench/engine/mnist-mclr-topk",
     comm=CommConfig("topk", k_frac=0.1),
     notes="fused-vs-unfused compression rounds/sec workload")
+
+# cohort-engine N-scaling workload (DESIGN.md §11): fixed cohort width
+# over growing populations — per-round cost must track the cohort
+COHORT_SCENARIO = FLScenario(
+    name="bench/engine/virtual-cohort",
+    data=DataSpec(dataset="virtual", partitioner="tabular", m_teams=2,
+                  n_devices=100, samples_per_device=8),
+    algo=AlgoSpec("permfl", (("k_team", 2), ("l_local", 2))),
+    cohort_size=32, data_seed=9,
+    notes="cohort-engine rounds/sec vs population size")
+
+COHORT_NS = (100, 1_000, 10_000)
 
 
 def _setup():
@@ -172,6 +188,65 @@ def _bench_comm(csv, *, rounds: int, reps: int):
     return failures, entry
 
 
+def _bench_cohort(csv, *, rounds: int, reps: int, gate: bool):
+    """Cohort-engine N-scaling: rounds/sec at fixed cohort width over
+    populations ``COHORT_NS``, one eval at the end so timing stays
+    cohort-dominated (a per-round full-population eval would scale with
+    N and mask the gather/scatter cost under test). ``rounds`` should be
+    large (hundreds): the one end-of-run full-population eval + final
+    state materialization is an O(N) *fixed* cost per dispatch, and only
+    a long scan amortizes it down to the marginal per-round cost the
+    ratio is meant to measure. Also runs a 2-config vmapped sweep at the
+    largest N — the engine+sweep acceptance path. With ``gate`` the
+    N=10^4-over-N=10^2 slowdown must stay < 2x (not asserted in smoke
+    mode, where reps=1 timings are noisy; the recorded rates still feed
+    the regress gate). Returns ``(failures, marker_entry)``."""
+    c = COHORT_SCENARIO.cohort_size
+    rps = {}
+    for n in COHORT_NS:
+        b = build_scenario(COHORT_SCENARIO.scaled(n_devices=n))
+        kw = dict(metric_fn=b.metric_fn, rounds=rounds, m=b.m, n=b.n,
+                  cohort=c, eval_every=rounds, scan=True)
+        run = lambda: run_experiment(b.algo, b.params0, b.train, b.val,
+                                     **kw)
+        res = run()                   # warm-up: populate the jit cache
+        assert np.isfinite(res.pm_acc).all() and res.cohort == c
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            run()
+            best = min(best, time.time() - t0)
+        rps[f"n{n}"] = rounds / best
+        csv(f"bench_engine,virtual,mclr,cohort,rounds_per_sec,n{n},"
+            f"{rps[f'n{n}']:.2f}")
+
+    slowdown = rps[f"n{COHORT_NS[0]}"] / rps[f"n{COHORT_NS[-1]}"]
+    csv(f"bench_engine,virtual,mclr,cohort,slowdown_n{COHORT_NS[-1]}"
+        f"_over_n{COHORT_NS[0]},,{slowdown:.2f}")
+
+    b = build_scenario(COHORT_SCENARIO.scaled(n_devices=COHORT_NS[-1]))
+    sw = run_sweep(b.algo, SWEEP_GRID[:2], (0,), b.params0, b.train,
+                   b.val, metric_fn=b.metric_fn, rounds=2, m=b.m, n=b.n,
+                   cohort=c)
+    failures = []
+    if not (len(sw) == 2 and sw.dispatches == 1
+            and all(np.isfinite(r.pm_acc).all() for r in sw)):
+        failures.append("bench_engine: cohort sweep at N="
+                        f"{COHORT_NS[-1]} failed")
+    if gate and not slowdown < 2.0:
+        failures.append(
+            f"bench_engine: cohort rounds/sec degrades {slowdown:.2f}x "
+            f"from N={COHORT_NS[0]} to N={COHORT_NS[-1]} (limit 2.0x — "
+            "per-round cost must track the cohort, not the population)")
+    entry = {"cohort_size": c, "population": list(COHORT_NS),
+             "rounds": rounds,
+             "rounds_per_sec": {k: round(v, 2) for k, v in rps.items()},
+             f"slowdown_n{COHORT_NS[-1]}_over_n{COHORT_NS[0]}":
+                 round(slowdown, 2),
+             "sweep_configs": len(sw)}
+    return failures, entry
+
+
 def smoke() -> list:
     """CI guard: 2 rounds through the scanned path, then a 2-config x
     2-round sweep through the vmapped path — asserting both configs
@@ -211,9 +286,18 @@ def smoke() -> list:
     print(f"# bench_engine smoke: comm fused/unfused x"
           f"{comm_entry['fused_over_unfused']} OK")
 
+    # cohort-engine N-scaling (rates recorded; the <2x slowdown gate
+    # only applies to timed runs). 300 rounds even in smoke: the scan is
+    # sub-second per population and the ratio needs the amortization.
+    cohort_fails, cohort_entry = _bench_cohort(print, rounds=300, reps=1,
+                                               gate=False)
+    print(f"# bench_engine smoke: cohort N-scaling over "
+          f"{list(COHORT_NS)} OK, sweep in 1 dispatch")
+
     write_bench_json({
         "mode": "smoke",
         "comm": comm_entry,
+        "cohort": cohort_entry,
         "engine": {"rounds": 2,
                    "rounds_per_sec": round(2 / max(warm.seconds, 1e-9), 2),
                    "cold_seconds": round(res.seconds, 3),
@@ -232,7 +316,7 @@ def smoke() -> list:
                     (pr_warm.seconds - warm.seconds)
                     / max(warm.seconds, 1e-9) * 100, 1)},
     })
-    return comm_fails
+    return comm_fails + cohort_fails
 
 
 def main(quick: bool = True, csv=print) -> list:
@@ -310,9 +394,14 @@ def main(quick: bool = True, csv=print) -> list:
                                          reps=reps)
     failures += comm_fails
 
+    cohort_fails, cohort_entry = _bench_cohort(csv, rounds=300, reps=reps,
+                                               gate=True)
+    failures += cohort_fails
+
     write_bench_json({
         "mode": "quick" if quick else "full",
         "comm": comm_entry,
+        "cohort": cohort_entry,
         "engine": {"rounds": rounds,
                    "rounds_per_sec": {k: round(v, 2)
                                       for k, v in rps.items()},

@@ -36,7 +36,7 @@ from typing import Any, Callable, Optional, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.comm import CommConfig, CommLedger
+from repro.comm import CommConfig, CommLedger, CommState
 from repro.core import permfl as P
 from repro.obs.probes import (masked_max, masked_mean, stacked_sq_norm,
                               tree_diff_norm)
@@ -107,6 +107,24 @@ class FLAlgorithmBase:
         if trace.grads:
             out["update_norm"] = tree_diff_norm(prev_state, state)
         return out
+
+    def device_axes(self, state, m: int, n: int):
+        """Which state leaves are device-tier, i.e. stacked (M, N, ...)
+        per (team, device) — the split the virtualized cohort engine
+        uses to decide what lives in the `DeviceStateStore` and rides
+        each round's gather/scatter (DESIGN.md §11).
+
+        Returns a pytree of bools matching ``state``'s structure: True
+        leaves are gathered to cohort width per round, False leaves
+        (team/global tiers, counters, PRNG keys) stay resident at full
+        shape. The default is a shape heuristic — a leaf is device-tier
+        iff its leading axes are exactly (m, n) — which is ambiguous
+        when a trailing dimension collides with n, so stateful
+        algorithms override it with their explicit tier split.
+        """
+        return jax.tree.map(
+            lambda l: bool(getattr(l, "ndim", 0) >= 2
+                           and l.shape[:2] == (m, n)), state)
 
     def tree_hparams(self):
         """Split this config into sweepable leaves vs static structure.
@@ -238,6 +256,24 @@ class PerMFL(FLAlgorithmBase):
             losses = jax.vmap(jax.vmap(self.loss_fn))(state.theta, data)
             out["part_loss"] = masked_mean(losses, gated)
         return out
+
+    def device_axes(self, state, m, n):
+        """Explicit tier split (the shape heuristic would misfire when a
+        model dimension collides with n): device models ``theta`` and
+        per-device EF residuals ``ef_dev`` are device-tier; team models
+        ``x``/``w``, the round counter, team residuals and the comm
+        PRNG key stay resident."""
+        comm = None
+        if state.comm is not None:
+            comm = CommState(
+                ef_dev=jax.tree.map(lambda _: True, state.comm.ef_dev),
+                ef_team=jax.tree.map(lambda _: False, state.comm.ef_team),
+                key=False)
+        return P.PerMFLState(
+            x=jax.tree.map(lambda _: False, state.x),
+            w=jax.tree.map(lambda _: False, state.w),
+            theta=jax.tree.map(lambda _: True, state.theta),
+            round=False, comm=comm)
 
     # -- byte accounting (host side) ----------------------------------------
 

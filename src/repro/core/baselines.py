@@ -240,6 +240,10 @@ class FedAvg(FLAlgorithmBase):
     def eval(self, x, train_data, val_data, metric_fn):
         return {"gm": eval_global(x, val_data, metric_fn)}
 
+    def device_axes(self, state, m, n):
+        """Global-model-only state: nothing rides the cohort gather."""
+        return jax.tree.map(lambda _: False, state)
+
 
 @dataclass(frozen=True)
 class PerFedAvg(FLAlgorithmBase):
@@ -265,6 +269,10 @@ class PerFedAvg(FLAlgorithmBase):
                                       inner_lr=self.inner_lr, m=m, n=n)
         return {"pm": eval_personal(theta, val_data, metric_fn),
                 "gm": eval_global(x, val_data, metric_fn)}
+
+    def device_axes(self, state, m, n):
+        """Global-model-only state (personalization is eval-time)."""
+        return jax.tree.map(lambda _: False, state)
 
 
 @dataclass(frozen=True)
@@ -294,6 +302,12 @@ class PFedMe(FLAlgorithmBase):
         return {"pm": eval_personal(theta, val_data, metric_fn),
                 "gm": eval_global(x, val_data, metric_fn)}
 
+    def device_axes(self, state, m, n):
+        """(global x, per-device theta): only theta is device-tier."""
+        x, theta = state
+        return (jax.tree.map(lambda _: False, x),
+                jax.tree.map(lambda _: True, theta))
+
 
 @dataclass(frozen=True)
 class Ditto(FLAlgorithmBase):
@@ -319,6 +333,13 @@ class Ditto(FLAlgorithmBase):
         return {"pm": eval_personal(v, val_data, metric_fn),
                 "gm": eval_global(x, val_data, metric_fn)}
 
+    def device_axes(self, state, m, n):
+        """(global x, per-device v): the persistent personal models v
+        are the device tier the cohort store virtualizes."""
+        x, v = state
+        return (jax.tree.map(lambda _: False, x),
+                jax.tree.map(lambda _: True, v))
+
 
 @dataclass(frozen=True)
 class HSGD(FLAlgorithmBase):
@@ -339,6 +360,10 @@ class HSGD(FLAlgorithmBase):
 
     def eval(self, x, train_data, val_data, metric_fn):
         return {"gm": eval_global(x, val_data, metric_fn)}
+
+    def device_axes(self, state, m, n):
+        """Global-model-only state: nothing rides the cohort gather."""
+        return jax.tree.map(lambda _: False, state)
 
 
 @dataclass(frozen=True)
@@ -366,3 +391,9 @@ class L2GD(FLAlgorithmBase):
         x, theta = state
         return {"pm": eval_personal(theta, val_data, metric_fn),
                 "gm": eval_global(x, val_data, metric_fn)}
+
+    def device_axes(self, state, m, n):
+        """(global x, per-device theta): only theta is device-tier."""
+        x, theta = state
+        return (jax.tree.map(lambda _: False, x),
+                jax.tree.map(lambda _: True, theta))

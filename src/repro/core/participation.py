@@ -33,6 +33,35 @@ def sample_masks(key, m_teams: int, n_devices: int, *,
     return team_mask, device_mask
 
 
+def sample_cohort(key, m_teams: int, n_devices: int, cohort_size: int):
+    """Per-team cohort indices for the virtualized engine (DESIGN.md §11).
+
+    Returns an (M, cohort_size) i32 index map: for each team, a sorted
+    uniform sample of ``cohort_size`` distinct device slots out of the
+    ``n_devices`` resident in the store. Sorting makes the map canonical
+    (gather/scatter order-independent) and means ``cohort_size ==
+    n_devices`` degenerates to ``arange(n_devices)`` — an identity
+    gather, which is what makes the full-population equivalence in
+    tests/test_cohort_engine.py *bit*-exact rather than approximate.
+
+    The engine derives ``key`` by folding a salt into the round's mask
+    key, so consuming cohort indices never advances the participation
+    mask stream (see ``_COHORT_SALT`` in repro.train.engine).
+
+    Sampled as the top-``cohort_size`` of N iid uniforms per team (the
+    Gumbel-top-k trick degenerated to uniform weights) rather than
+    ``jax.random.permutation``: a full random permutation runs several
+    sort rounds over the population and dominates the round at
+    N >= 10^4, while one uniform draw + ``lax.top_k`` keeps per-round
+    sampling cost negligible up to N = 10^6.
+    """
+    def one_team(k):
+        z = jax.random.uniform(k, (n_devices,))
+        return jnp.sort(jax.lax.top_k(z, cohort_size)[1]).astype(jnp.int32)
+
+    return jax.vmap(one_team)(jax.random.split(key, m_teams))
+
+
 def keep_fastest(team_mask, device_mask, score, candidates):
     """Guarantee a non-empty round after mask-thinning (e.g. deadline
     straggler drops, `repro.system`): if ``device_mask * team_mask[:,N]``

@@ -107,6 +107,15 @@ def _split_train_val(xs, ys, samples_per_device: int, val_fraction: float):
         val_x=xs[:, :, :n_val], val_y=ys[:, :, :n_val])
 
 
+def stack_virtual(xs, ys, *, samples_per_device: int,
+                  val_fraction: float = 0.25) -> FederatedData:
+    """Wrap pre-stacked (M, N, S, ...) arrays — e.g. from
+    ``repro.data.synthetic.virtual_tabular`` — as FederatedData with the
+    standard 3:1 train/val split. The cohort-scale path: no per-device
+    partitioning loop ever touches the population."""
+    return _split_train_val(xs, ys, samples_per_device, val_fraction)
+
+
 def partition_label_skew(rng: np.random.Generator, x, y, *, m_teams: int,
                          n_devices: int, classes_per_device: int = 2,
                          samples_per_device: int = 64,

@@ -74,6 +74,10 @@ def run_events(res, *, run_id: Optional[str] = None, algo: Any = None,
               "hparams": (dict(algo.tree_hparams()[0])
                           if hasattr(algo, "tree_hparams") else {}),
               "rounds": rounds, "eval_every": eval_every}
+    cohort = getattr(res, "cohort", None)
+    if cohort is not None:
+        header["cohort"] = int(cohort)
+        header["population"] = int(getattr(res, "population", 0) or 0)
     header.update(meta or {})
     events = [header]
 
@@ -82,7 +86,10 @@ def run_events(res, *, run_id: Optional[str] = None, algo: Any = None,
     sim = list(getattr(res, "sim_seconds", []) or [])
     trace = getattr(res, "trace", None)
     probe_segs = trace.at_points(points) if trace is not None else None
+    cohort_idx = (list(getattr(res, "cohort_indices", []) or [])
+                  if cohort is not None else None)
 
+    prev_rnd = 0
     for i, rnd in enumerate(points):
         ev = {"event": "eval", "schema": SCHEMA, "run": run_id,
               "round": rnd,
@@ -94,6 +101,9 @@ def run_events(res, *, run_id: Optional[str] = None, algo: Any = None,
             ev["sim_seconds"] = float(sim[i])
         if probe_segs is not None:
             ev["probes"] = probe_segs[i]
+        if cohort_idx:
+            ev["cohort_indices"] = cohort_idx[prev_rnd:rnd]
+        prev_rnd = rnd
         events.append(ev)
 
     footer = {"event": "run_footer", "schema": SCHEMA, "run": run_id,

@@ -4,9 +4,10 @@ CI used to only *upload* the benchmark marker; this comparator makes it a
 gate: load the committed baseline and the freshly produced marker,
 extract every throughput metric present in both (engine rounds/sec per
 execution model, sweep configs/sec, probes-on rounds/sec, comm-round
-rounds/sec fused and unfused, and per-compressor kernel XLA rates from
-``BENCH_kernels.json``), and fail when any current rate falls more than
-``tol`` below its baseline:
+rounds/sec fused and unfused, cohort-engine rounds/sec per population
+size, and per-compressor kernel XLA rates from ``BENCH_kernels.json``),
+and fail when any current rate falls more than ``tol`` below its
+baseline:
 
     python -m repro.obs.regress benchmarks/baselines/BENCH_engine.json \
         BENCH_engine.json --tol 0.2
@@ -54,6 +55,11 @@ def load_rates(payload: dict) -> dict:
     rate_group("obs.rounds_per_sec",
                payload.get("obs", {}).get("rounds_per_sec_probes"),
                "probes")
+    # cohort section: gate the absolute per-N rounds/sec rates (the
+    # N-scaling *ratio* is asserted inside bench_engine itself — a ratio
+    # is not a throughput, so gating it here would invert the direction)
+    rate_group("cohort.rounds_per_sec",
+               payload.get("cohort", {}).get("rounds_per_sec"), "cohort")
 
     # BENCH_engine comm section: fused/unfused compressed-round rates
     comm = payload.get("comm")

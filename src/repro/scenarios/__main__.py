@@ -6,7 +6,8 @@
     PYTHONPATH=src python -m repro.scenarios profiles
     PYTHONPATH=src python -m repro.scenarios run NAME [--rounds R]
         [--seed S] [--eval-every E] [--system PROFILE]
-        [--deadline SECONDS] [--smoke] [--trace-dir DIR] [--json]
+        [--deadline SECONDS] [--smoke] [--cohort C] [--trace-dir DIR]
+        [--json]
 
 ``list`` prints one line per registered scenario (name, topology,
 partitioner, algorithm, default rounds, spec hash); ``describe`` shows
@@ -64,6 +65,9 @@ def _cmd_describe(args) -> int:
     print(f"  algo:  {s.algo.name} {dict(s.algo.overrides) or '(paper defaults)'}")
     print(f"  rounds={s.rounds} team_frac={s.team_frac} "
           f"device_frac={s.device_frac} data_seed={s.data_seed}")
+    if s.cohort_size is not None:
+        print(f"  cohort: {s.cohort_size} of {s.data.n_devices} devices "
+              "materialized per team per round")
     if s.comm is not None:
         print(f"  comm:  {s.comm}")
     if s.system is not None:
@@ -105,6 +109,10 @@ def _cmd_run(args) -> int:
     if args.smoke:
         s = s.scaled(m_teams=2, n_devices=3, samples_per_device=16,
                      rounds=2)
+    if args.cohort is not None:
+        import dataclasses
+
+        s = dataclasses.replace(s, cohort_size=args.cohort or None)
     if args.system:
         s = s.with_system(args.system)
     if args.deadline:
@@ -185,6 +193,9 @@ def main(argv=None) -> int:
                    help="per-round straggler deadline, simulated seconds")
     p.add_argument("--smoke", action="store_true",
                    help="2x3x16 topology, 2 rounds (CI liveness)")
+    p.add_argument("--cohort", type=int, default=None,
+                   help="override cohort_size (devices materialized per "
+                        "team per round); 0 disables cohort sampling")
     p.add_argument("--trace-dir", default=None,
                    help="enable probes + write the JSONL event log here")
     p.add_argument("--json", action="store_true",

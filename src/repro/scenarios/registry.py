@@ -13,7 +13,7 @@ Naming: ``{family}/{...}`` with the family as the first segment —
 ``fig2/{dataset}/{model}/{algo}``, ``fig4/.../{mode}``,
 ``comm/.../{compressor}``, ``dirichlet/{dataset}/a{alpha}``,
 ``quantity/{dataset}/q{min_frac}``, ``featshift/{model}/s{shift}``,
-``teams/{strategy}/m{M}n{N}``.
+``teams/{strategy}/m{M}n{N}``, ``cohort/virtual/n{N}``.
 
 Registered ``rounds`` are the paper-scale (--full) budgets; quick-mode
 benchmarks override rounds (and derive shrunken CNN variants via
@@ -216,6 +216,27 @@ def _register_featshift():
                 notes="team-shifted features, shared labeling concept"))
 
 
+def _register_cohort():
+    """Virtualized cohort-engine scale-out (DESIGN.md §11): populations
+    of 10^3-10^6 devices per team, of which only a ``cohort_size`` slab
+    is materialized per round. Uses the fully vectorized "virtual"
+    dataset so even the 10^6 population builds in seconds; PerMFL runs
+    with shallow inner loops — the point is the N-scaling, not the
+    paper's accuracy cells."""
+    algo = AlgoSpec("permfl", (("k_team", 2), ("l_local", 2)))
+    for n, cohort, rounds in ((1_000, 64, 20), (10_000, 64, 10),
+                              (100_000, 128, 10), (1_000_000, 256, 5)):
+        register(FLScenario(
+            name=f"cohort/virtual/n{n}",
+            data=DataSpec(dataset="virtual", partitioner="tabular",
+                          m_teams=2, n_devices=n, samples_per_device=8),
+            algo=algo,
+            cohort_size=cohort,
+            rounds=rounds, data_seed=21, family="cohort",
+            notes=f"sample-then-materialize: {cohort} of {n} devices "
+                  "per team per round"))
+
+
 def _register_team_grids():
     """Worst/average-case formation at larger (M, N) than the paper's
     2x10 ablation; n_per_class grows so worst-case single-class team
@@ -240,3 +261,4 @@ _register_dirichlet()
 _register_quantity()
 _register_featshift()
 _register_team_grids()
+_register_cohort()

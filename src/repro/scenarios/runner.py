@@ -143,7 +143,7 @@ def run_scenario(name_or_spec, *, rounds: Optional[int] = None,
         b.algo, b.params0, b.train, b.val, metric_fn=b.metric_fn,
         rounds=s.rounds if rounds is None else rounds, m=b.m, n=b.n,
         team_frac=s.team_frac, device_frac=s.device_frac, seed=seed,
-        eval_every=eval_every, scan=scan,
+        eval_every=eval_every, scan=scan, cohort=s.cohort_size,
         system=s.system if system is _KEEP_SPEC_SYSTEM else system,
         trace=trace, trace_dir=trace_dir,
         event_meta={"scenario": s.name, "family": s.family,
@@ -180,7 +180,7 @@ def sweep_scenario(name_or_spec, grid=({},), seeds=(0,), *,
         b.train, b.val, metric_fn=b.metric_fn,
         rounds=s.rounds if rounds is None else rounds, m=b.m, n=b.n,
         team_frac=s.team_frac, device_frac=s.device_frac,
-        eval_every=eval_every, mesh=mesh,
+        eval_every=eval_every, mesh=mesh, cohort=s.cohort_size,
         system=s.system if system is _KEEP_SPEC_SYSTEM else system,
         trace=trace, trace_dir=trace_dir,
         event_meta={"scenario": s.name, "family": s.family,

@@ -46,9 +46,10 @@ from repro.core import baselines as B
 from repro.core.permfl import PerMFLHParams
 from repro.data.federated import (FederatedData, partition_dirichlet,
                                   partition_label_skew,
-                                  partition_quantity_skew, partition_tabular)
+                                  partition_quantity_skew, partition_tabular,
+                                  stack_virtual)
 from repro.data.synthetic import (feature_shift_tabular, make_dataset,
-                                  synthetic_tabular)
+                                  synthetic_tabular, virtual_tabular)
 from repro.models import paper_models as PM
 
 __all__ = ["ALGO_METRICS", "AlgoSpec", "DataSpec", "FLScenario",
@@ -72,7 +73,7 @@ ALGO_METRICS = {
     "l2gd": ("pm", "gm"),
 }
 
-_TABULAR_DATASETS = ("synthetic", "featshift")
+_TABULAR_DATASETS = ("synthetic", "featshift", "virtual")
 _PARTITIONERS = ("label_skew", "dirichlet", "quantity", "tabular")
 
 
@@ -108,8 +109,10 @@ class DataSpec:
     """What the federation holds: dataset, partitioner, and topology.
 
     dataset: "mnist" | "fmnist" | "emnist10" (image sets), "synthetic"
-        (the paper's §D.2.6 tabular set), or "featshift" (covariate-shift
-        tabular — shared concept, team-shifted features).
+        (the paper's §D.2.6 tabular set), "featshift" (covariate-shift
+        tabular — shared concept, team-shifted features), or "virtual"
+        (the cohort-scale featshift variant: fully vectorized
+        construction, viable at 10^4-10^6 devices per team).
     partitioner: "label_skew" (paper §4.1.4), "dirichlet" (Dir(alpha)
         class mixes), "quantity" (power-law effective sizes), or
         "tabular" (per-device tabular stacking; implied by the tabular
@@ -162,6 +165,10 @@ class DataSpec:
                                          samples_per_device=spd)
             return partition_tabular(devs, m_teams=m, n_devices=n,
                                      samples_per_device=spd)
+        if self.dataset == "virtual":
+            x, y = virtual_tabular(rng, m, n, shift=self.shift,
+                                   samples_per_device=spd)
+            return stack_virtual(x, y, samples_per_device=spd)
         x, y = make_dataset(self.dataset, rng,
                             n_per_class=self.n_per_class or 40 * n)
         if self.partitioner == "label_skew":
@@ -303,6 +310,11 @@ class FLScenario:
         device/link profile (`repro.system`); results gain a Timeline +
         sim_seconds, and a deadline_s drops stragglers from the masks.
         Serialized only when set, so legacy specs hash unchanged.
+    cohort_size: optional per-team cohort width C — the engine samples C
+        of the N devices each round and materializes only the (M, C)
+        slab (the virtualized cohort engine, DESIGN.md §11). None keeps
+        the full-population stacked path bit-identical to before.
+        Serialized only when set, so legacy specs hash unchanged.
     data_seed: PRNG seed the federated partition is built from (model
         init / participation seeds are run-time arguments, so one data
         universe serves multi-seed sweeps — the paper's table protocol).
@@ -319,6 +331,7 @@ class FLScenario:
     device_frac: float = 1.0
     comm: Optional[CommConfig] = None
     system: Optional[SystemSpec] = None
+    cohort_size: Optional[int] = None
     data_seed: int = 0
     family: str = ""
     paper_ref: Tuple[Tuple[str, float], ...] = ()
@@ -327,6 +340,11 @@ class FLScenario:
     def __post_init__(self):
         object.__setattr__(self, "paper_ref", tuple(
             (str(k), float(v)) for k, v in self.paper_ref))
+        if self.cohort_size is not None and not (
+                1 <= self.cohort_size <= self.data.n_devices):
+            raise ValueError(
+                f"cohort_size must be in [1, n_devices="
+                f"{self.data.n_devices}], got {self.cohort_size}")
 
     # -- identity ----------------------------------------------------------
 
@@ -351,7 +369,7 @@ class FLScenario:
 
     def to_dict(self) -> dict:
         """Plain JSON-able dict; `from_dict` inverts it exactly. The
-        ``system`` key appears only when a system model is attached, so
+        ``system`` and ``cohort_size`` keys appear only when set, so
         pre-existing specs (and their spec_hash) are byte-stable."""
         d = {
             "name": self.name,
@@ -370,6 +388,8 @@ class FLScenario:
         }
         if self.system is not None:
             d["system"] = self.system.to_dict()
+        if self.cohort_size is not None:
+            d["cohort_size"] = self.cohort_size
         return d
 
     @classmethod
@@ -388,6 +408,7 @@ class FLScenario:
             comm=CommConfig(**d["comm"]) if d.get("comm") else None,
             system=(SystemSpec.from_dict(d["system"])
                     if d.get("system") else None),
+            cohort_size=d.get("cohort_size"),
             data_seed=d["data_seed"],
             family=d.get("family", ""),
             paper_ref=tuple(tuple(p) for p in d.get("paper_ref", ())),
@@ -400,10 +421,13 @@ class FLScenario:
                n_devices: Optional[int] = None,
                samples_per_device: Optional[int] = None,
                rounds: Optional[int] = None,
+               cohort_size: Optional[int] = None,
                algo_overrides: Optional[dict] = None) -> "FLScenario":
         """A derived scenario at a different scale (the benchmarks' quick
         mode shrinks CNN cells this way). Unset arguments keep the
-        spec's values; `algo_overrides` merge over `algo.overrides`."""
+        spec's values; `algo_overrides` merge over `algo.overrides`. An
+        inherited or given cohort_size is clamped to the (possibly
+        shrunk) population so `--smoke` derivations stay valid."""
         data = dataclasses.replace(
             self.data,
             m_teams=m_teams if m_teams is not None else self.data.m_teams,
@@ -417,8 +441,11 @@ class FLScenario:
             merged = dict(algo.overrides)
             merged.update(algo_overrides)
             algo = AlgoSpec(algo.name, tuple(merged.items()))
+        cohort = cohort_size if cohort_size is not None else self.cohort_size
+        if cohort is not None:
+            cohort = min(int(cohort), data.n_devices)
         return dataclasses.replace(
-            self, data=data, algo=algo,
+            self, data=data, algo=algo, cohort_size=cohort,
             rounds=rounds if rounds is not None else self.rounds)
 
     def with_system(self, profile) -> "FLScenario":

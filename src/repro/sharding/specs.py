@@ -186,6 +186,33 @@ def fl_pspecs(stacked_tree, *, team_axis="pod", device_axis="data"):
     return jax.tree.map(spec_for, stacked_tree)
 
 
+def store_pspecs(store_tree, *, m: int, population: int,
+                 population_axis="data", sweep: bool = False,
+                 sweep_axis="sweep"):
+    """Device-state-store sharding (DESIGN.md §11): store leaves are
+    stacked (M, N_pop, ...) over the *resident population*, so the
+    population axis — the one that grows to 10^4-10^6 — shards over
+    ``population_axis`` (the mesh `data` axis, next to the `sweep` axis
+    run_sweep already uses). Teams stay replicated: M is small and the
+    per-round gather indexes within each team row.
+
+    With ``sweep=True`` leaves carry a leading (S,) config axis sharded
+    over ``sweep_axis`` (the per-config stores run_sweep vmaps over).
+    m / population disambiguate the tier axes from model dims; route
+    through ``to_named(..., shape_tree=...)`` so non-dividing axes drop.
+    """
+    lead = (sweep_axis,) if sweep else ()
+    off = len(lead)
+
+    def spec_for(leaf):
+        if (leaf.ndim >= off + 2 and leaf.shape[off] == m
+                and leaf.shape[off + 1] == population):
+            return P(*lead, None, population_axis,
+                     *([None] * (leaf.ndim - off - 2)))
+        return P(*lead, *([None] * (leaf.ndim - off)))
+    return jax.tree.map(spec_for, store_tree)
+
+
 def sweep_pspecs(sweep_tree, *, m: int, n: int, sweep_axis="sweep",
                  team_axis="data", device_axis="model"):
     """Sweep-stacked FL sharding (DESIGN.md §6): every leaf carries a

@@ -72,6 +72,9 @@ def simulate_round(leaves: dict, wl: RoundWorkload, key, team_mask,
     wl: the static RoundWorkload (loop counts, wire bytes).
     key: this round's PRNG key (fresh split from the scan carry).
     team_mask (M,) / device_mask (M, N): sampled participation in {0,1}.
+        Under the virtualized cohort engine N here is the cohort width C,
+        not the population — all shapes derive from the mask, so the
+        round is priced over exactly the devices that were materialized.
 
     Returns ``(team_mask', device_mask', t_round, dropped_teams,
     dropped_devices)`` — masks after deadline drops (device mask

@@ -34,6 +34,17 @@ time at each eval point, so accuracy-vs-seconds curves fall out.
 ``scan=False`` runs the same semantics as a per-round host-dispatch loop
 (the legacy execution model) — kept for equivalence tests and for
 benchmarks/bench_engine.py to quantify the dispatch win.
+
+``cohort=c`` switches to the virtualized cohort engine (DESIGN.md §11):
+the scan carry holds the device-tier store (`repro.train.store`) next
+to the resident tiers, and each round samples a per-team index map
+(`core.participation.sample_cohort`, PRNG stream salted off the round's
+mask key so mask chains never move), gathers the cohort's data + device
+state to (M, c), runs the unchanged algorithm round at cohort width,
+and scatters the updated rows back. Participation masks, ledger counts,
+the system round-time model and the probes all see the (M, c) cohort —
+the population only ever exists as store rows. ``cohort=None`` (and,
+bit-for-bit, ``cohort=n``) is the stacked full-population path.
 """
 from __future__ import annotations
 
@@ -47,13 +58,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import CommLedger
-from repro.core.participation import sample_masks
+from repro.core.participation import sample_cohort, sample_masks
 from repro.kernels.interface import dispatch_key
 from repro.obs.events import write_run
 from repro.obs.profiling import compiled_cost, profile_ctx
 from repro.obs.trace import RunTrace, TraceConfig, eval_points
 from repro.system import (Timeline, get_profile, simulate_round,
                           workload_for)
+from repro.train.store import (gather_cohort, scatter_cohort,
+                               split_device_state)
 
 __all__ = ["FLResult", "eval_points", "run_experiment"]
 
@@ -90,6 +103,9 @@ class FLResult:
     eval_every: int = 1                  # eval cadence (aligns histories)
     dispatches: int = 0                  # jitted calls that executed it
     events_path: Optional[str] = None    # JSONL event log (trace_dir runs)
+    cohort: Optional[int] = None         # cohort width (virtualized runs)
+    population: Optional[int] = None     # resident devices/team (ditto)
+    cohort_indices: list = field(default_factory=list)  # (M, C) idx / rnd
 
     def last(self, which="pm"):
         """Final-eval value of metric `which` ('pm'|'tm'|'gm'); NaN if the
@@ -110,6 +126,12 @@ _METRIC_FIELDS = {"pm": "pm_acc", "tm": "tm_acc", "gm": "gm_acc",
 # stream from the participation-sampling stream (ASCII "SYST")
 _SYSTEM_SALT = 0x53595354
 
+# ditto for the cohort-sampling stream (ASCII "CHRT"): cohort indices are
+# folded out of the round's mask key, never split off the carry chain, so
+# running with any cohort_size — or none — leaves the mask and system
+# streams bit-identical (pinned by tests/test_cohort_engine.py)
+_COHORT_SALT = 0x43485254
+
 
 def check_participation(algo, team_frac: float, device_frac: float):
     """Reject sampled participation for algorithms that ignore the masks —
@@ -124,7 +146,7 @@ def check_participation(algo, team_frac: float, device_frac: float):
 
 
 def _round_body(algo, m, n, team_frac, device_frac, system=None,
-                trace=None):
+                trace=None, cohort=None, merge=None):
     """Scan step: in-graph mask sampling (key in the carry), optional
     system simulation (round time + deadline mask thinning), one
     algorithm round, and a dict of realized per-round outputs — gated
@@ -138,20 +160,45 @@ def _round_body(algo, m, n, team_frac, device_frac, system=None,
     trace: None (default — the emitted graph is byte-identical to the
     pre-trace engine), or a `TraceConfig`: ``algo.probe_round`` runs on
     the post-round state and its scalars ride the scan outputs.
+    cohort: None for the stacked full-population body (carry is
+    ``(state, key)``), or the cohort width: the carry becomes
+    ``(dev_store, rest, key)`` (see `repro.train.store`), the round runs
+    on the gathered (M, cohort) slice, and ``merge`` (from
+    `split_device_state` at population width) rebuilds cohort states.
+    Masks, system model and probes all run at cohort width, so
+    participation/ledger counts and probe reductions cover exactly the
+    materialized devices; the sampled index map rides the outputs as
+    ``cohort_idx``.
     """
     sampled = team_frac < 1.0 or device_frac < 1.0
+    nc = n if cohort is None else cohort
 
     def body(carry, _, data, sleaves=None):
-        state, key = carry
+        if cohort is None:
+            state, key = carry
+        else:
+            dev, rest, key = carry
         if sampled:
             key, sub = jax.random.split(key)
-            tm, dm = sample_masks(sub, m, n, team_frac=team_frac,
+            tm, dm = sample_masks(sub, m, nc, team_frac=team_frac,
                                   device_frac=device_frac)
         else:
             sub = None
             tm = jnp.ones((m,), jnp.float32)
-            dm = jnp.ones((m, n), jnp.float32)
+            dm = jnp.ones((m, nc), jnp.float32)
         out = {}
+        if cohort is not None:
+            if sub is None:
+                # full participation consumes no mask key; split one for
+                # the cohort (and, below, the system) stream instead —
+                # the split matches the stacked engine's unsampled
+                # system split, so system streams stay bit-identical
+                key, sub = jax.random.split(key)
+            idx = sample_cohort(jax.random.fold_in(sub, _COHORT_SALT),
+                                m, n, cohort)
+            data = gather_cohort(data, idx)
+            state = merge(gather_cohort(dev, idx), rest)
+            out["cohort_idx"] = idx
         if system is not None:
             _, workload = system
             if sampled:
@@ -161,6 +208,8 @@ def _round_body(algo, m, n, team_frac, device_frac, system=None,
                 # a no-deadline system model is pure measurement under
                 # every participation mode
                 skey = jax.random.fold_in(sub, _SYSTEM_SALT)
+            elif cohort is not None:
+                skey = sub
             else:
                 key, skey = jax.random.split(key)
             tm, dm, t_round, drop_t, drop_d = simulate_round(
@@ -177,7 +226,10 @@ def _round_body(algo, m, n, team_frac, device_frac, system=None,
                                       device_mask=dm, trace=trace)
             out.update({f"probe:{k}": jnp.asarray(v, jnp.float32)
                         for k, v in probes.items()})
-        return (state, key), out
+        if cohort is None:
+            return (state, key), out
+        cdev, crest, _ = split_device_state(algo, state, m, cohort)
+        return (scatter_cohort(dev, idx, cdev), crest, key), out
 
     return body
 
@@ -193,7 +245,7 @@ def hparam_skeleton(algo):
 
 
 def _chunk_runner(skel, metric_fn, m, n, team_frac, device_frac,
-                  system=None, trace=None):
+                  system=None, trace=None, cohort=None):
     """The traceable heart of an experiment — shared verbatim by the
     per-experiment program below and train.sweep's vmapped grid program:
     rebuild the algorithm from its hparam leaves, then scan `n_steps`
@@ -202,24 +254,44 @@ def _chunk_runner(skel, metric_fn, m, n, team_frac, device_frac,
     static skeleton/workload pair) is a traced operand like the hparam
     leaves — sweeps stack system profiles the same way they stack
     hyperparameters. ``trace`` (a static `TraceConfig` or None) selects
-    the probe outputs the round body emits."""
+    the probe outputs the round body emits. ``cohort`` (static) splits
+    the state into a device-tier store + resident rest for the inner
+    scan — rounds run on gathered (M, cohort) slices, eval still sees
+    the merged full-population state at each chunk boundary — and the
+    external contract is unchanged: full state in, full state out."""
     _, rebuild = skel.tree_hparams()
 
     def run_chunks(hleaves, state, key, tr, va, *, sleaves=None, length,
                    n_steps):
         algo = rebuild(hleaves)
+        if cohort is None:
+            body = _round_body(algo, m, n, team_frac, device_frac, system,
+                               trace)
+
+            def chunk(carry, _):
+                state, key = carry
+                (state, key), outs = jax.lax.scan(
+                    lambda c, x: body(c, x, tr, sleaves), (state, key),
+                    length=length)
+                return (state, key), (algo.eval(state, tr, va, metric_fn),
+                                      outs)
+
+            return jax.lax.scan(chunk, (state, key), length=n_steps)
+
+        dev, rest, merge = split_device_state(algo, state, m, n)
         body = _round_body(algo, m, n, team_frac, device_frac, system,
-                           trace)
+                           trace, cohort=cohort, merge=merge)
 
         def chunk(carry, _):
-            state, key = carry
-            (state, key), outs = jax.lax.scan(
-                lambda c, x: body(c, x, tr, sleaves), (state, key),
-                length=length)
-            return (state, key), (algo.eval(state, tr, va, metric_fn),
-                                  outs)
+            carry, outs = jax.lax.scan(
+                lambda c, x: body(c, x, tr, sleaves), carry, length=length)
+            dev, rest, _ = carry
+            return carry, (algo.eval(merge(dev, rest), tr, va, metric_fn),
+                           outs)
 
-        return jax.lax.scan(chunk, (state, key), length=n_steps)
+        (dev, rest, key), hist = jax.lax.scan(chunk, (dev, rest, key),
+                                              length=n_steps)
+        return (merge(dev, rest), key), hist
 
     return run_chunks
 
@@ -235,9 +307,9 @@ def _chunk_runner(skel, metric_fn, m, n, team_frac, device_frac,
 # re-traces instead of reusing a program that baked in the old kernels.
 @functools.lru_cache(maxsize=128)
 def _scan_program(skel, metric_fn, m, n, team_frac, device_frac,
-                  system=None, trace=None, kdispatch=None):
+                  system=None, trace=None, kdispatch=None, cohort=None):
     run_chunks = _chunk_runner(skel, metric_fn, m, n, team_frac,
-                               device_frac, system, trace)
+                               device_frac, system, trace, cohort)
     return functools.partial(jax.jit, static_argnames=(
         "length", "n_steps"))(run_chunks)
 
@@ -272,7 +344,8 @@ def run_experiment(algo, params0, train_data, val_data, *,
                    team_frac: float = 1.0, device_frac: float = 1.0,
                    seed: int = 0, eval_every: int = 1, scan: bool = True,
                    system=None, trace=None, trace_dir=None,
-                   event_meta: Optional[dict] = None) -> FLResult:
+                   event_meta: Optional[dict] = None,
+                   cohort: Optional[int] = None) -> FLResult:
     """Drive `algo` for `rounds` global rounds, evaluating every
     `eval_every` rounds (and after the final round). Returns an FLResult
     whose metric histories hold one entry per eval point.
@@ -292,8 +365,19 @@ def run_experiment(algo, params0, train_data, val_data, *,
     trace_dir: when set, write the run's JSONL event log (header / eval
     points / footer, `repro.obs.events`) into this directory;
     ``event_meta`` is merged into the header (scenario identity etc.).
+    cohort: optional cohort width for the virtualized engine (module
+    docstring / DESIGN.md §11): only a sampled (M, cohort) slice of the
+    population is materialized per round; ``FLResult.cohort_indices``
+    records each round's index map and participation/ledger counts
+    cover cohort devices only. ``team_frac``/``device_frac`` then
+    sample within the cohort.
     """
     check_participation(algo, team_frac, device_frac)
+    if cohort is not None:
+        cohort = int(cohort)
+        if not 1 <= cohort <= n:
+            raise ValueError(
+                f"cohort must be in [1, n_devices={n}], got {cohort}")
     if trace is True:
         trace = TraceConfig()
     state = algo.init_state(params0, m, n)
@@ -309,12 +393,11 @@ def run_experiment(algo, params0, train_data, val_data, *,
     skel, hleaves = hparam_skeleton(algo)
     kdisp = dispatch_key()
     scanned = _scan_program(skel, metric_fn, m, n, team_frac, device_frac,
-                            sys_key, trace, kdisp)
-    round_body = _round_body(algo, m, n, team_frac, device_frac, sys_key,
-                             trace)
+                            sys_key, trace, kdisp, cohort)
     eval_jit = _eval_program(skel, metric_fn, kdisp)
 
-    res = FLResult(rounds=rounds, eval_every=eval_every)
+    res = FLResult(rounds=rounds, eval_every=eval_every, cohort=cohort,
+                   population=n if cohort is not None else None)
     ledger = algo.make_ledger(params0)
     outs_flat = {}          # output name -> flat per-round list
     t0 = time.time()
@@ -322,11 +405,18 @@ def run_experiment(algo, params0, train_data, val_data, *,
 
     def record(metrics_hist, outs):
         """metrics_hist: dict of (chunks,) arrays; outs: dict of
-        (chunks, length) per-round output arrays."""
+        (chunks, length) per-round output arrays (cohort_idx rides as
+        (chunks, length, M, C) and lands in res.cohort_indices)."""
         for k, v in metrics_hist.items():
             getattr(res, _METRIC_FIELDS[k]).extend(
                 float(x) for x in np.asarray(v))
         for k, v in outs.items():
+            if k == "cohort_idx":
+                arr = np.asarray(v)
+                res.cohort_indices.extend(
+                    arr.reshape((-1,) + arr.shape[-2:]).astype(int)
+                    .tolist())
+                continue
             outs_flat.setdefault(k, []).extend(
                 np.asarray(v).reshape(-1).tolist())
 
@@ -344,23 +434,37 @@ def run_experiment(algo, params0, train_data, val_data, *,
                     t_first = time.time()
                 record(metrics, outs)
         else:
+            if cohort is None:
+                round_body = _round_body(algo, m, n, team_frac,
+                                         device_frac, sys_key, trace)
+                carry, unpack = (state, key), lambda c: c[0]
+            else:
+                dev, rest, mrg = split_device_state(algo, state, m, n)
+                round_body = _round_body(algo, m, n, team_frac,
+                                         device_frac, sys_key, trace,
+                                         cohort=cohort, merge=mrg)
+                carry, unpack = (dev, rest, key), lambda c: mrg(c[0], c[1])
             for t in range(rounds):
-                (state, key), outs = round_body((state, key), None,
-                                                train_data, sleaves)
+                carry, outs = round_body(carry, None, train_data, sleaves)
                 res.dispatches += 1
                 if t_first is None:
-                    jax.block_until_ready(state)
+                    jax.block_until_ready(carry)
                     t_first = time.time()
                 for k, v in outs.items():
+                    if k == "cohort_idx":
+                        res.cohort_indices.append(
+                            np.asarray(v).astype(int).tolist())
+                        continue
                     outs_flat.setdefault(k, []).append(
                         float(v) if k == "t_round"
                         or k.startswith("probe:") else int(v))
                 if (t + 1) % eval_every == 0 or t == rounds - 1:
-                    metrics = eval_jit(hleaves, state, train_data,
+                    metrics = eval_jit(hleaves, unpack(carry), train_data,
                                        val_data)
                     res.dispatches += 1
                     for k, v in metrics.items():
                         getattr(res, _METRIC_FIELDS[k]).append(float(v))
+            state, key = unpack(carry), carry[-1]
 
     t_end = time.time()
     res.compile_seconds = (t_first if t_first is not None else t_end) - t0
@@ -398,5 +502,6 @@ def run_experiment(algo, params0, train_data, val_data, *,
             meta={"m": m, "n": n, "seed": seed, "team_frac": team_frac,
                   "device_frac": device_frac, "scan": scan,
                   "system": system.name if system is not None else None,
+                  **({"cohort": cohort} if cohort is not None else {}),
                   **(event_meta or {})}))
     return res

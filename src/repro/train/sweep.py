@@ -125,9 +125,9 @@ class FLSweepResult:
 # runs the engine's chunk program (_chunk_runner) verbatim.
 @functools.lru_cache(maxsize=64)
 def _sweep_program(skel, metric_fn, m, n, team_frac, device_frac,
-                   sys_key=None, trace=None, kdispatch=None):
+                   sys_key=None, trace=None, kdispatch=None, cohort=None):
     run_chunks = _chunk_runner(skel, metric_fn, m, n, team_frac,
-                               device_frac, sys_key, trace)
+                               device_frac, sys_key, trace, cohort)
 
     @functools.partial(jax.jit, static_argnames=("length", "n_steps"))
     def swept(hstack, states, keys, sstack, tr, va, *, length, n_steps):
@@ -251,13 +251,17 @@ def _prepare(algo, grid, seeds, params0, m, n, team_frac, device_frac,
 
 def _collect(prep: _Prepared, states, metric_hist, outs_hist, *,
              seconds, compile_seconds, run_seconds, dispatches, rounds,
-             eval_every, trace=None) -> FLSweepResult:
+             eval_every, trace=None, cohort=None,
+             population=None) -> FLSweepResult:
     """Slice one sweep's stacked outputs into per-config FLResults.
 
     metric_hist: field -> list of (S, n_steps) arrays; outs_hist: list of
     per-segment dicts of (S, n_steps, length) per-round output arrays.
     trace: the sweep's TraceConfig — when set, each config's ``probe:``
     output streams become a per-config `RunTrace`.
+    cohort/population: the sweep's virtualized-engine dims, recorded on
+    each FLResult; per-config ``cohort_idx`` streams land in
+    ``FLResult.cohort_indices``.
     """
     S = len(prep.configs)
     out = FLSweepResult(configs=prep.configs, state_stacked=states,
@@ -267,13 +271,20 @@ def _collect(prep: _Prepared, states, metric_hist, outs_hist, *,
         res = FLResult(seconds=seconds / S,
                        compile_seconds=compile_seconds / S,
                        run_seconds=run_seconds / S, rounds=rounds,
-                       eval_every=eval_every, dispatches=dispatches)
+                       eval_every=eval_every, dispatches=dispatches,
+                       cohort=cohort, population=population)
         for k, segs in metric_hist.items():
             getattr(res, _METRIC_FIELDS[k]).extend(
                 float(x) for seg in segs for x in seg[i])
         flat = {}
         for seg in outs_hist:
             for k, v in seg.items():
+                if k == "cohort_idx":
+                    arr = np.asarray(v[i])
+                    res.cohort_indices.extend(
+                        arr.reshape((-1,) + arr.shape[-2:]).astype(int)
+                        .tolist())
+                    continue
                 flat.setdefault(k, []).extend(v[i].reshape(-1).tolist())
         if trace is not None:
             res.trace = RunTrace(config=trace, series={
@@ -300,7 +311,8 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
               metric_fn: Callable, rounds: int, m: int, n: int,
               team_frac: float = 1.0, device_frac: float = 1.0,
               eval_every: int = 1, mesh=None, system=None, trace=None,
-              trace_dir=None, event_meta=None) -> FLSweepResult:
+              trace_dir=None, event_meta=None,
+              cohort: Optional[int] = None) -> FLSweepResult:
     """Run ``len(grid) * len(seeds) [* len(system)]`` experiments as one
     compiled program.
 
@@ -328,6 +340,9 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
         `RunTrace` — identical streams to running the config alone.
     trace_dir / event_meta: when set, write the whole sweep's JSONL event
         stream (sweep_header + per-config run sections) into trace_dir.
+    cohort: optional cohort width — every config runs on the virtualized
+        cohort engine (`run_experiment(cohort=...)`) with its own
+        per-config device-state store riding the vmap axis.
     Remaining arguments match ``run_experiment``.
 
     Returns an FLSweepResult; equivalence with the sequential loop
@@ -336,6 +351,11 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
     """
     if trace is True:
         trace = TraceConfig()
+    if cohort is not None:
+        cohort = int(cohort)
+        if not 1 <= cohort <= n:
+            raise ValueError(
+                f"cohort must be in [1, n_devices={n}], got {cohort}")
     prep = _prepare(algo, grid, seeds, params0, m, n, team_frac,
                     device_frac, system)
     states, keys, hstack, sstack = (prep.states, prep.keys, prep.hstack,
@@ -365,7 +385,7 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
 
     swept = _sweep_program(prep.skel, metric_fn, m, n, team_frac,
                            device_frac, prep.sys_key, trace,
-                           dispatch_key())
+                           dispatch_key(), cohort)
     n_chunks, rem = divmod(rounds, eval_every)
 
     metric_hist = {}           # field -> list of (S, n_steps) arrays
@@ -392,7 +412,9 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
     out = _collect(prep, states, metric_hist, outs_hist,
                    seconds=t_end - t0, compile_seconds=t_first - t0,
                    run_seconds=t_end - t_first, dispatches=dispatches,
-                   rounds=rounds, eval_every=eval_every, trace=trace)
+                   rounds=rounds, eval_every=eval_every, trace=trace,
+                   cohort=cohort,
+                   population=n if cohort is not None else None)
     if trace_dir is not None:
         out.events_path = str(write_sweep(
             trace_dir, out, algo=algo,
@@ -408,8 +430,8 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
 @functools.lru_cache(maxsize=32)
 def _multi_program(member_keys, metric_fn, m, n, kdispatch=None):
     runners = [_chunk_runner(skel, metric_fn, m, n, tf, df, sys_key,
-                             trace)
-               for skel, sys_key, tf, df, trace in member_keys]
+                             trace, cohort)
+               for skel, sys_key, tf, df, trace, cohort in member_keys]
 
     @functools.partial(jax.jit, static_argnames=("length", "n_steps"))
     def multi(ops, tr, va, *, length, n_steps):
@@ -445,10 +467,11 @@ def run_multi_sweep(variants, train_data, val_data, *,
     variants: sequence of dicts, each with keys ``algo`` and ``params0``
         plus optional ``grid`` (default ``[{}]``), ``seeds`` (default
         ``(0,)``), ``team_frac`` / ``device_frac`` (default 1.0),
-        ``system``, and ``trace`` (as in ``run_sweep`` — per-variant, so
-        probed and probe-free members can share the program). Data,
-        metric_fn, rounds, and dims are shared — variants are views of
-        one experiment family.
+        ``system``, ``trace``, and ``cohort`` (as in ``run_sweep`` —
+        per-variant, so probed and probe-free — or virtualized and
+        stacked — members can share the program). Data, metric_fn,
+        rounds, and dims are shared — variants are views of one
+        experiment family.
 
     Returns one FLSweepResult per variant, in order; every result
     reports the same ``dispatches`` count (1, or 2 with a remainder
@@ -456,6 +479,7 @@ def run_multi_sweep(variants, train_data, val_data, *,
     """
     preps = []
     traces = []
+    cohorts = []
     for v in variants:
         v = dict(v)
         preps.append(_prepare(
@@ -464,10 +488,12 @@ def run_multi_sweep(variants, train_data, val_data, *,
             v.get("device_frac", 1.0), v.get("system")))
         t = v.get("trace")
         traces.append(TraceConfig() if t is True else t)
+        c = v.get("cohort")
+        cohorts.append(None if c is None else int(c))
 
     member_keys = tuple(
-        (p.skel, p.sys_key, p.team_frac, p.device_frac, t)
-        for p, t in zip(preps, traces))
+        (p.skel, p.sys_key, p.team_frac, p.device_frac, t, c)
+        for p, t, c in zip(preps, traces, cohorts))
     multi = _multi_program(member_keys, metric_fn, m, n, dispatch_key())
     ops = tuple((p.hstack, p.states, p.keys, p.sstack) for p in preps)
     n_chunks, rem = divmod(rounds, eval_every)
@@ -507,5 +533,7 @@ def run_multi_sweep(variants, train_data, val_data, *,
             outs_hist[i], seconds=(t_end - t0) * share,
             compile_seconds=(t_first - t0) * share,
             run_seconds=(t_end - t_first) * share, dispatches=dispatches,
-            rounds=rounds, eval_every=eval_every, trace=traces[i]))
+            rounds=rounds, eval_every=eval_every, trace=traces[i],
+            cohort=cohorts[i],
+            population=n if cohorts[i] is not None else None))
     return out

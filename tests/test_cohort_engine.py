@@ -1,0 +1,332 @@
+"""Virtualized cohort engine vs the stacked engine (DESIGN.md §11).
+
+The lockdown suite for sample-then-materialize training: with
+``cohort == n`` the index map is the identity, so every trajectory,
+final state, ledger, probe stream, and simulated timeline must be
+*bit*-identical to the stacked engine's (assert_array_equal) — for
+PerMFL with and without comm/participation and for the baselines. At
+``cohort < n`` the scan and dispatch execution models must agree
+(allclose, the same tolerance test_engine.py uses for scan-vs-dispatch),
+cohort sampling must never perturb the participation mask stream, and
+error-feedback residuals of never-sampled devices must stay untouched.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig
+from repro.core import PerMFL, baselines as B
+from repro.core.permfl import PerMFLHParams
+from repro.train.engine import run_experiment
+from repro.train.sweep import run_multi_sweep, run_sweep
+
+M, N, D = 3, 6, 5
+COHORT = 4
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum((params - batch["c"]) ** 2)
+
+
+def neg_loss(params, batch):
+    return -quad_loss(params, batch)
+
+
+@pytest.fixture(scope="module")
+def quad_data():
+    rng = np.random.default_rng(0)
+    return {"c": jnp.asarray(rng.normal(size=(M, N, D)).astype(np.float32))}
+
+
+HP = PerMFLHParams(alpha=0.05, eta=0.04, beta=0.3, lam=0.8, gamma=2.0,
+                   k_team=3, l_local=4)
+
+
+def _algos():
+    return {
+        "permfl": PerMFL(quad_loss, HP),
+        "permfl_comm": PerMFL(quad_loss, HP,
+                              comm=CommConfig("topk", k_frac=0.4)),
+        "fedavg": B.FedAvg(quad_loss, lr=0.1, local_steps=3),
+        "ditto": B.Ditto(quad_loss, lr=0.05, lam=0.5, local_steps=3),
+    }
+
+
+def _assert_bit_identical(a, b):
+    for f in ("pm_acc", "tm_acc", "gm_acc", "train_loss"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+    for x, y in zip(jax.tree.leaves(a.state), jax.tree.leaves(b.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert a.participation == b.participation
+    if a.comm is not None or b.comm is not None:
+        assert a.comm.totals() == b.comm.totals()
+
+
+# ---------------------------------------------------------------------------
+# cohort == n: the identity gather — bit-exact full-population equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["permfl", "permfl_comm", "fedavg",
+                                  "ditto"])
+def test_full_width_cohort_matches_stacked(quad_data, name):
+    algo = _algos()[name]
+    kw = dict(metric_fn=neg_loss, rounds=5, m=M, n=N, seed=3)
+    stacked = run_experiment(algo, jnp.zeros(D), quad_data, quad_data, **kw)
+    cohort = run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                            cohort=N, **kw)
+    _assert_bit_identical(stacked, cohort)
+    assert cohort.cohort == N and cohort.population == N
+    for per_round in cohort.cohort_indices:
+        np.testing.assert_array_equal(np.asarray(per_round),
+                                      np.tile(np.arange(N), (M, 1)))
+
+
+def test_full_width_cohort_matches_stacked_sampled_comm(quad_data):
+    """Partial team/device participation + compressed uplinks: masks,
+    byte ledgers, and EF residuals all ride the identity gather."""
+    algo = _algos()["permfl_comm"]
+    kw = dict(metric_fn=neg_loss, rounds=5, m=M, n=N, seed=11,
+              team_frac=0.5, device_frac=0.75)
+    stacked = run_experiment(algo, jnp.zeros(D), quad_data, quad_data, **kw)
+    cohort = run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                            cohort=N, **kw)
+    _assert_bit_identical(stacked, cohort)
+    assert len(cohort.comm.rounds) == 5
+
+
+def test_full_width_cohort_matches_stacked_system(quad_data):
+    """The wall-clock simulator prices the materialized masks: at
+    cohort == n the simulated timeline is bit-identical to stacked."""
+    from repro.system import get_profile
+
+    algo = _algos()["permfl"]
+    kw = dict(metric_fn=neg_loss, rounds=4, m=M, n=N, seed=5,
+              team_frac=0.5, system=get_profile("wan-cellular"))
+    stacked = run_experiment(algo, jnp.zeros(D), quad_data, quad_data, **kw)
+    cohort = run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                            cohort=N, **kw)
+    _assert_bit_identical(stacked, cohort)
+    np.testing.assert_array_equal(
+        np.asarray(stacked.timeline.round_seconds),
+        np.asarray(cohort.timeline.round_seconds))
+
+
+# ---------------------------------------------------------------------------
+# cohort < n: scan == dispatch, bookkeeping, key-stream isolation
+# ---------------------------------------------------------------------------
+
+def test_cohort_scan_matches_dispatch(quad_data):
+    """Both execution models run the same gather -> round -> scatter
+    chain (test_engine.py's scan-vs-dispatch tolerance conventions)."""
+    algo = _algos()["permfl_comm"]
+    kw = dict(metric_fn=neg_loss, rounds=5, m=M, n=N, seed=7, cohort=COHORT,
+              team_frac=0.5, device_frac=0.75, trace=True)
+    scan = run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                          scan=True, **kw)
+    disp = run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                          scan=False, **kw)
+    for f in ("pm_acc", "tm_acc", "gm_acc", "train_loss"):
+        np.testing.assert_allclose(getattr(scan, f), getattr(disp, f),
+                                   atol=1e-5, err_msg=f)
+    for a, b in zip(jax.tree.leaves(scan.state),
+                    jax.tree.leaves(disp.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # identical PRNG chain => identical cohorts, masks, and ledgers
+    np.testing.assert_array_equal(np.asarray(scan.cohort_indices),
+                                  np.asarray(disp.cohort_indices))
+    assert scan.participation == disp.participation
+    assert scan.comm.totals() == disp.comm.totals()
+    assert scan.trace.names() == disp.trace.names()
+    for name in scan.trace.names():
+        np.testing.assert_allclose(scan.trace[name], disp.trace[name],
+                                   atol=1e-5, err_msg=name)
+    assert scan.dispatches < disp.dispatches
+
+
+def test_cohort_indices_and_participation_bookkeeping(quad_data):
+    """cohort_indices records one sorted (M, C) map per round; the
+    participation ledger counts within the cohort, not the population."""
+    res = run_experiment(_algos()["permfl"], jnp.zeros(D), quad_data,
+                         quad_data, metric_fn=neg_loss, rounds=6, m=M, n=N,
+                         seed=2, cohort=COHORT, device_frac=0.5)
+    assert len(res.cohort_indices) == 6
+    for per_round in res.cohort_indices:
+        arr = np.asarray(per_round)
+        assert arr.shape == (M, COHORT)
+        for row in arr:
+            assert (np.diff(row) > 0).all()
+            assert row.min() >= 0 and row.max() < N
+    for n_teams, n_devices in res.participation:
+        assert n_teams == M
+        assert n_devices == M * max(1, round(COHORT * 0.5))
+
+
+def test_cohort_sampling_never_perturbs_mask_stream(quad_data):
+    """Determinism pin: the cohort key is salted off the round's mask
+    key, so the same seed yields the same participation mask stream for
+    cohort=None and any cohort size — different cohort widths change
+    *which* devices materialize, never *how many teams* the masks keep."""
+    algo = _algos()["permfl"]
+    kw = dict(metric_fn=neg_loss, rounds=6, m=M, n=N, seed=9,
+              team_frac=0.5)
+    runs = {c: run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                              cohort=c, **kw)
+            for c in (None, 3, 5, N)}
+    team_counts = {c: [t for t, _ in r.participation]
+                   for c, r in runs.items()}
+    for c in (3, 5, N):
+        assert team_counts[c] == team_counts[None], c
+    # and the full-width run is the stacked run, masks included
+    _assert_bit_identical(runs[None], runs[N])
+
+
+def test_ef_residuals_of_unsampled_devices_untouched(quad_data):
+    """Error-feedback state is per-device: a device that was never in
+    any cohort must keep its residuals exactly at init (zero)."""
+    algo = _algos()["permfl_comm"]
+    res = run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                         metric_fn=neg_loss, rounds=3, m=M, n=N, seed=4,
+                         cohort=2)
+    sampled = [set() for _ in range(M)]
+    for per_round in res.cohort_indices:
+        for t, row in enumerate(np.asarray(per_round)):
+            sampled[t].update(int(j) for j in row)
+    ef = np.asarray(jax.tree.leaves(res.state.comm.ef_dev)[0])
+    never = [(t, j) for t in range(M) for j in range(N)
+             if j not in sampled[t]]
+    assert never, "pick rounds/cohort so some device is never sampled"
+    for t, j in never:
+        np.testing.assert_array_equal(ef[t, j], np.zeros_like(ef[t, j]))
+    # devices that did participate moved their residuals
+    assert any(np.any(ef[t, j] != 0) for t in range(M)
+               for j in sampled[t])
+
+
+def test_eval_every_chunking_with_cohort(quad_data):
+    """Chunk-boundary evals merge the store back to full width; the
+    remainder chunk works and matches the per-round-eval run."""
+    algo = _algos()["permfl"]
+    kw = dict(metric_fn=neg_loss, rounds=7, m=M, n=N, seed=6,
+              cohort=COHORT)
+    res = run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                         eval_every=3, **kw)
+    assert len(res.pm_acc) == 3               # rounds 3, 6, remainder 7
+    assert len(res.participation) == 7
+    full = run_experiment(algo, jnp.zeros(D), quad_data, quad_data, **kw)
+    np.testing.assert_allclose(res.pm_acc[-1], full.pm_acc[-1], atol=1e-5)
+    for a, b in zip(jax.tree.leaves(res.state),
+                    jax.tree.leaves(full.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_cohort_validation(quad_data):
+    algo = _algos()["permfl"]
+    kw = dict(metric_fn=neg_loss, rounds=2, m=M, n=N)
+    for bad in (0, -1, N + 1):
+        with pytest.raises(ValueError, match="cohort"):
+            run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                           cohort=bad, **kw)
+    with pytest.raises(ValueError, match="cohort"):
+        run_sweep(algo, [{}], (0,), jnp.zeros(D), quad_data, quad_data,
+                  cohort=N + 1, **kw)
+
+
+def test_cohort_system_runs_at_cohort_width(quad_data):
+    """The simulator prices exactly the materialized (M, C) slab."""
+    from repro.system import get_profile
+
+    res = run_experiment(_algos()["permfl"], jnp.zeros(D), quad_data,
+                         quad_data, metric_fn=neg_loss, rounds=3, m=M, n=N,
+                         seed=8, cohort=COHORT,
+                         system=get_profile("wan-cellular"))
+    assert len(res.timeline) == 3
+    assert all(t > 0 for t in res.timeline.round_seconds)
+
+
+# ---------------------------------------------------------------------------
+# sweep lanes
+# ---------------------------------------------------------------------------
+
+def test_sweep_cohort_lane_matches_solo_run(quad_data):
+    """One vmapped sweep lane at cohort < n reproduces the solo scanned
+    run — same PRNG chain, same gather/scatter, one dispatch."""
+    algo = _algos()["permfl"]
+    kw = dict(metric_fn=neg_loss, rounds=4, m=M, n=N, cohort=COHORT)
+    solo = run_experiment(algo, jnp.zeros(D), quad_data, quad_data,
+                          seed=0, **kw)
+    sw = run_sweep(algo, [{}, dict(lam=0.3)], (0,), jnp.zeros(D),
+                   quad_data, quad_data, **kw)
+    assert sw.dispatches == 1 and len(sw) == 2
+    np.testing.assert_allclose(sw[0].pm_acc, solo.pm_acc, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sw[0].cohort_indices),
+                                  np.asarray(solo.cohort_indices))
+    assert sw[0].participation == solo.participation
+    for a, b in zip(jax.tree.leaves(sw[0].state),
+                    jax.tree.leaves(solo.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # the perturbed lane actually diverges (the sweep swept something)
+    assert sw[1].pm_acc != sw[0].pm_acc
+
+
+def test_multi_sweep_mixes_cohort_and_stacked_members(quad_data):
+    """run_multi_sweep members choose virtualization independently; each
+    member must reproduce its solo sweep."""
+    algo = _algos()["permfl"]
+    kw = dict(metric_fn=neg_loss, rounds=3, m=M, n=N)
+    multi = run_multi_sweep(
+        [dict(algo=algo, params0=jnp.zeros(D), cohort=COHORT),
+         dict(algo=algo, params0=jnp.zeros(D))],
+        quad_data, quad_data, **kw)
+    solo_c = run_sweep(algo, [{}], (0,), jnp.zeros(D), quad_data,
+                       quad_data, cohort=COHORT, **kw)
+    solo_s = run_sweep(algo, [{}], (0,), jnp.zeros(D), quad_data,
+                       quad_data, **kw)
+    np.testing.assert_allclose(multi[0][0].pm_acc, solo_c[0].pm_acc,
+                               atol=1e-5)
+    np.testing.assert_allclose(multi[1][0].pm_acc, solo_s[0].pm_acc,
+                               atol=1e-5)
+    assert multi[0][0].cohort == COHORT and multi[1][0].cohort is None
+    np.testing.assert_array_equal(np.asarray(multi[0][0].cohort_indices),
+                                  np.asarray(solo_c[0].cohort_indices))
+
+
+# ---------------------------------------------------------------------------
+# scenario + events surface
+# ---------------------------------------------------------------------------
+
+def test_cohort_scenario_spec_roundtrip_and_clamp():
+    from repro.scenarios import get_scenario
+    from repro.scenarios.spec import FLScenario
+
+    s = get_scenario("cohort/virtual/n1000")
+    assert s.cohort_size == 64 and s.family == "cohort"
+    assert FLScenario.from_dict(s.to_dict()) == s
+    # legacy specs serialize without the key (spec_hash byte-stability)
+    assert "cohort_size" not in get_scenario(
+        "table1/mnist/mclr/permfl").to_dict()
+    sm = s.scaled(n_devices=3)
+    assert sm.cohort_size == 3                # clamped to the population
+    with pytest.raises(ValueError, match="cohort_size"):
+        dataclasses.replace(s, cohort_size=s.data.n_devices + 1)
+
+
+def test_run_events_carry_cohort_identity(quad_data):
+    """The JSONL schema records cohort/population in the header and the
+    per-eval cohort index slices."""
+    from repro.obs.events import run_events
+
+    res = run_experiment(_algos()["permfl"], jnp.zeros(D), quad_data,
+                         quad_data, metric_fn=neg_loss, rounds=4, m=M, n=N,
+                         seed=1, cohort=COHORT, eval_every=2)
+    events = run_events(res, run_id="t")
+    header = events[0]
+    assert header["cohort"] == COHORT and header["population"] == N
+    evals = [e for e in events if e["event"] == "eval"]
+    assert [len(e["cohort_indices"]) for e in evals] == [2, 2]
+    flat = [idx for e in evals for idx in e["cohort_indices"]]
+    np.testing.assert_array_equal(np.asarray(flat),
+                                  np.asarray(res.cohort_indices))

@@ -1,0 +1,242 @@
+"""Gather/scatter equivalence suite for the virtualized device-state
+store (repro.train.store, DESIGN.md §11).
+
+Each property (scatter-after-gather identity, non-sampled-row
+immutability, permutation equivariance, sorted/unique/in-range index
+maps) is one ``_check_*`` function exercised two ways: a deterministic
+seeded grid that always runs, and a Hypothesis fuzz layer over the same
+checks when hypothesis is installed (requirements-dev.txt pins it for
+CI; the grid keeps the suite meaningful without it). Alongside: the
+``device_axes`` split/merge contract and the DeviceStateStore pytree."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig
+from repro.core import PerMFL, baselines as B
+from repro.core.participation import sample_cohort
+from repro.core.permfl import PerMFLHParams
+from repro.sharding.specs import store_pspecs
+from repro.train.store import (DeviceStateStore, gather_cohort,
+                               scatter_cohort, split_device_state)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+M, N, D = 3, 4, 5
+HP = PerMFLHParams(alpha=0.05, eta=0.04, beta=0.3, lam=0.8, gamma=2.0,
+                   k_team=3, l_local=4)
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum((params - batch["c"]) ** 2)
+
+
+def _tree(rng, m, n):
+    """A device-tier pytree with leaves of varying trailing shapes."""
+    f32 = lambda *s: rng.normal(size=s).astype(np.float32)
+    return {"a": jnp.asarray(f32(m, n)),
+            "b": jnp.asarray(f32(m, n, 3)),
+            "c": [jnp.asarray(f32(m, n, 2, 2))]}
+
+
+# the deterministic grid: every (m, n, c) is a distinct compile, so keep
+# it small but cover the edges (c=1, c=n, n=1)
+GRID = [(1, 1, 1, 0), (2, 5, 1, 1), (2, 5, 3, 2), (3, 8, 8, 3),
+        (3, 8, 5, 4), (2, 7, 6, 5)]
+
+
+def _check_index_map(m, n, c, seed):
+    idx = np.asarray(sample_cohort(jax.random.PRNGKey(seed), m, n, c))
+    assert idx.shape == (m, c) and idx.dtype == np.int32
+    for row in idx:
+        assert (np.diff(row) > 0).all()        # sorted => also distinct
+        assert row.min() >= 0 and row.max() < n
+
+
+def _check_roundtrip(m, n, c, seed):
+    tree = _tree(np.random.default_rng(seed), m, n)
+    idx = sample_cohort(jax.random.PRNGKey(seed), m, n, c)
+    out = scatter_cohort(tree, idx, gather_cohort(tree, idx))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _check_untouched_rows(m, n, c, seed):
+    tree = _tree(np.random.default_rng(seed), m, n)
+    idx = sample_cohort(jax.random.PRNGKey(seed), m, n, c)
+    update = jax.tree.map(lambda l: l + 1.0, gather_cohort(tree, idx))
+    out = scatter_cohort(tree, idx, update)
+    idx = np.asarray(idx)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        a, b = np.asarray(a), np.asarray(b)
+        for t in range(m):
+            sampled = np.zeros(n, bool)
+            sampled[idx[t]] = True
+            np.testing.assert_array_equal(a[t][~sampled], b[t][~sampled])
+            np.testing.assert_array_equal(a[t][sampled], b[t][sampled] + 1)
+
+
+def _check_permutation_equivariance(m, n, c, seed, perm=None):
+    if perm is None:
+        perm = np.random.default_rng(seed + 1).permutation(c)
+    perm = np.asarray(perm)
+    tree = _tree(np.random.default_rng(seed), m, n)
+    idx = sample_cohort(jax.random.PRNGKey(seed), m, n, c)
+    direct = gather_cohort(tree, jnp.asarray(np.asarray(idx)[:, perm]))
+    reordered = jax.tree.map(lambda l: l[:, perm],
+                             gather_cohort(tree, idx))
+    for a, b in zip(jax.tree.leaves(direct), jax.tree.leaves(reordered)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("m,n,c,seed", GRID)
+def test_sample_cohort_sorted_unique_in_range(m, n, c, seed):
+    _check_index_map(m, n, c, seed)
+
+
+def test_sample_cohort_full_width_is_arange():
+    """cohort_size == n must degenerate to the identity index map — the
+    property that makes full-population equivalence bit-exact."""
+    for seed, (m, n) in enumerate(((1, 1), (2, 5), (3, 8))):
+        idx = sample_cohort(jax.random.PRNGKey(seed), m, n, n)
+        np.testing.assert_array_equal(np.asarray(idx),
+                                      np.tile(np.arange(n), (m, 1)))
+
+
+@pytest.mark.parametrize("m,n,c,seed", GRID)
+def test_scatter_after_gather_is_identity(m, n, c, seed):
+    _check_roundtrip(m, n, c, seed)
+
+
+@pytest.mark.parametrize("m,n,c,seed", GRID)
+def test_scatter_touches_only_sampled_rows(m, n, c, seed):
+    _check_untouched_rows(m, n, c, seed)
+
+
+@pytest.mark.parametrize("m,n,c,seed", GRID)
+def test_gather_is_permutation_equivariant(m, n, c, seed):
+    _check_permutation_equivariance(m, n, c, seed)
+
+
+if HAVE_HYPOTHESIS:
+    # fuzz the same checks; shape diversity stays low (every fresh
+    # (m, n, c) is a new XLA compile — the properties are about values)
+    _SMALL = dict(m=st.integers(1, 3), n=st.integers(1, 8),
+                  seed=st.integers(0, 999))
+
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.data(), **_SMALL)
+    def test_hypothesis_index_map(data, m, n, seed):
+        _check_index_map(m, n, data.draw(st.integers(1, n)), seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.data(), **_SMALL)
+    def test_hypothesis_roundtrip(data, m, n, seed):
+        _check_roundtrip(m, n, data.draw(st.integers(1, n)), seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.data(), **_SMALL)
+    def test_hypothesis_untouched_rows(data, m, n, seed):
+        _check_untouched_rows(m, n, data.draw(st.integers(1, n)), seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.data(), **_SMALL)
+    def test_hypothesis_permutation_equivariance(data, m, n, seed):
+        c = data.draw(st.integers(1, n))
+        perm = data.draw(st.permutations(range(c)))
+        _check_permutation_equivariance(m, n, c, seed, perm=perm)
+
+
+def test_split_merge_roundtrip_permfl_with_comm():
+    """device_axes on PerMFL selects exactly the per-device tiers (theta
+    + EF device residuals); merge(split(state)) is the identity."""
+    cfg = CommConfig("topk", k_frac=0.5)
+    algo = PerMFL(quad_loss, HP, comm=cfg)
+    state = algo.init_state(jnp.zeros(D), M, N)
+    dev, rest, merge = split_device_state(algo, state, M, N)
+    assert len(dev) == 2                      # theta + comm.ef_dev
+    assert all(l.shape[:2] == (M, N) for l in dev)
+    back = merge(dev, rest)
+    assert jax.tree.structure(back) == jax.tree.structure(state)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_baselines_device_tier_selection():
+    """Purely global baselines expose no device tier; personalized ones
+    put exactly their per-device params on it."""
+    fa = B.FedAvg(quad_loss, lr=0.1, local_steps=2)
+    dev, rest, merge = split_device_state(
+        fa, fa.init_state(jnp.zeros(D), M, N), M, N)
+    assert dev == ()
+    dt = B.Ditto(quad_loss, lr=0.1, lam=0.5, local_steps=2)
+    state = dt.init_state(jnp.zeros(D), M, N)
+    dev, rest, merge = split_device_state(dt, state, M, N)
+    assert len(dev) == 1 and dev[0].shape[:2] == (M, N)
+    back = merge(dev, rest)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_flag_count_mismatch_raises():
+    """A device_axes override that misses leaves must fail loudly, not
+    silently misclassify tiers."""
+    algo = PerMFL(quad_loss, HP)
+    state = algo.init_state(jnp.zeros(D), M, N)
+
+    class Bad(PerMFL):
+        def device_axes(self, state, m, n):
+            return (True,)                    # wrong flag count
+
+    with pytest.raises(ValueError, match="flags"):
+        split_device_state(Bad(quad_loss, HP), state, M, N)
+
+
+def test_store_pspecs_population_axis():
+    """store_pspecs shards exactly the population axis of (M, pop, ...)
+    leaves over the mesh data axis; other leaves fully replicate."""
+    from jax.sharding import PartitionSpec as P
+
+    tree = {"dev": jnp.zeros((M, 100, 3)), "team": jnp.zeros((M, D)),
+            "glob": jnp.zeros((D,))}
+    specs = store_pspecs(tree, m=M, population=100)
+    assert specs["dev"] == P(None, "data", None)
+    assert specs["team"] == P(None, None)
+    assert specs["glob"] == P(None)
+    swept = store_pspecs(
+        jax.tree.map(lambda l: l[None], tree), m=M, population=100,
+        sweep=True)
+    assert swept["dev"] == P("sweep", None, "data", None)
+    assert swept["glob"] == P("sweep", None)
+
+
+def test_device_state_store_pytree_and_methods():
+    """DeviceStateStore is a pytree (scan/vmap-carriable) whose gather/
+    scatter methods agree with the functional API."""
+    from jax.sharding import PartitionSpec as P
+
+    rng = np.random.default_rng(7)
+    store = DeviceStateStore(_tree(rng, M, N), M, N)
+    leaves, treedef = jax.tree.flatten(store)
+    back = jax.tree.unflatten(treedef, leaves)
+    assert (back.m, back.n) == (M, N)
+    idx = sample_cohort(jax.random.PRNGKey(0), M, N, 2)
+    cohort = store.gather(idx)
+    for a, b in zip(jax.tree.leaves(cohort),
+                    jax.tree.leaves(gather_cohort(store.tree, idx))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    upd = jax.tree.map(lambda l: l * 2.0, cohort)
+    s2 = jax.jit(lambda s: s.scatter(idx, upd))(store)
+    assert isinstance(s2, DeviceStateStore) and (s2.m, s2.n) == (M, N)
+    for a, b in zip(jax.tree.leaves(s2.tree),
+                    jax.tree.leaves(
+                        scatter_cohort(store.tree, idx, upd))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for s in jax.tree.leaves(s2.pspecs(),
+                             is_leaf=lambda x: isinstance(x, P)):
+        assert s[1] == "data"                 # every store leaf is (M, N, ...)

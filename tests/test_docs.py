@@ -18,6 +18,7 @@ PUBLIC_MODULES = (
     "repro.kernels.interface",
     "repro.kernels.compress",
     "repro.train.engine",
+    "repro.train.store",
     "repro.train.sweep",
     "repro.train.fl_trainer",
     "repro.scenarios",
