@@ -7,16 +7,59 @@ recurrent state, or Whisper cross-attention — all four cache families),
 generates continuations for a batch of prompts, and reports tokens/s.
 The same prefill/decode steps are what the decode_32k / long_500k
 dry-runs lower onto the production mesh.
+
+Serving quickstart — the *personalized* path (DESIGN.md §12):
+
+    PYTHONPATH=src python examples/serve_model.py --personalized
+
+trains a tiny PerMFL scenario, exports the (team, device)-keyed
+`ModelStore` (exact bit-pattern deltas against each team's anchor),
+round-trips it through disk, and serves one batch where every request
+carries its own (team, device) tag — including an unknown device and an
+unknown team, which fall back to the team anchor and the global model.
 """
 import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_reduced_config
 from repro.models import model as M
 from repro.serve.engine import ServeEngine
+
+
+def personalized_demo(tmp="/tmp/permfl_store.zip"):
+    """Train -> export ModelStore -> reload -> serve a tagged batch."""
+    from repro.models import paper_models
+    from repro.scenarios import SCENARIOS, build_scenario, run_scenario
+    from repro.serve import ModelStore, PersonalizedServer
+
+    s = SCENARIOS["table1/mnist/mclr/permfl"].scaled(
+        m_teams=2, n_devices=3, samples_per_device=16, rounds=2)
+    res = run_scenario(s, seed=0)
+    b = build_scenario(s, seed=0)
+
+    store = ModelStore.from_result(b.algo, res, m=b.m, n=b.n)
+    store.save(tmp)
+    store = ModelStore.load(tmp)
+    print(f"store: {b.m}x{b.n} devices, encoding={store.encoding}, "
+          f"device tier {store.device_tier_nbytes() / 1e3:.0f} kB -> {tmp}")
+
+    server = PersonalizedServer(
+        store, lambda p, x: paper_models.apply(p, b.config, x[None])[0])
+    xv = np.asarray(b.val["x"], np.float32)
+    xs = jnp.asarray(xv.reshape((-1,) + xv.shape[3:])[:4])
+    # one known device, a second known device, an unknown device (team
+    # fallback), an unknown team (global fallback) — one batched call
+    teams, devices = np.array([0, 1, 0, 9]), np.array([0, 2, 7, 0])
+    logits = server.serve(teams, devices, xs)
+    for t, d, row in zip(teams, devices, np.asarray(logits)):
+        tier = ("device" if d < b.n and t < b.m
+                else "team" if t < b.m else "global")
+        print(f"  request (team={t}, device={d}) -> {tier}-tier model, "
+              f"class {int(row.argmax())}")
 
 
 def main(argv=None):
@@ -26,7 +69,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--sample", default="greedy", choices=["greedy", "temp"])
+    ap.add_argument("--personalized", action="store_true",
+                    help="run the personalized (team, device) store demo "
+                         "instead of the LLM decode loop")
     args = ap.parse_args(argv)
+
+    if args.personalized:
+        return personalized_demo()
 
     cfg = get_reduced_config(args.arch).replace(vocab_size=512)
     params = M.init_params(jax.random.PRNGKey(0), cfg)

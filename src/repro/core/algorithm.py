@@ -108,6 +108,26 @@ class FLAlgorithmBase:
             out["update_norm"] = tree_diff_norm(prev_state, state)
         return out
 
+    def serving_params(self, state, team=None, device=None):
+        """The model this algorithm serves to one principal — the export
+        hook the personalized serving subsystem (`repro.serve.store`,
+        DESIGN.md §12) builds its (team, device)-keyed `ModelStore`
+        from. Tier selection by argument:
+
+            serving_params(state)              -> global-tier model
+            serving_params(state, t)           -> team t's model
+            serving_params(state, t, d)        -> device (t, d)'s model
+
+        ``team`` / ``device`` may be traced indices, so the exporter can
+        vmap the hook over ``arange(m)`` x ``arange(n)`` and materialize
+        whole tiers as one gather. Default: the state *is* one global
+        model served to everybody (FedAvg / h-SGD / Per-FedAvg — the
+        latter personalizes at eval time from data, which a parameter
+        store cannot carry). Personalized algorithms override to route
+        the personal tier.
+        """
+        return state
+
     def device_axes(self, state, m: int, n: int):
         """Which state leaves are device-tier, i.e. stacked (M, N, ...)
         per (team, device) — the split the virtualized cohort engine
@@ -256,6 +276,17 @@ class PerMFL(FLAlgorithmBase):
             losses = jax.vmap(jax.vmap(self.loss_fn))(state.theta, data)
             out["part_loss"] = masked_mean(losses, gated)
         return out
+
+    def serving_params(self, state, team=None, device=None):
+        """Full three-tier serving: device (t, d) gets its personal
+        ``theta[t, d]``, a team-only principal gets ``w[t]``, and the
+        global tier is ``x`` — exactly the fallback ladder the serving
+        store resolves unknown principals down (DESIGN.md §12)."""
+        if team is None:
+            return state.x
+        if device is None:
+            return jax.tree.map(lambda l: l[team], state.w)
+        return jax.tree.map(lambda l: l[team, device], state.theta)
 
     def device_axes(self, state, m, n):
         """Explicit tier split (the shape heuristic would misfire when a

@@ -221,6 +221,17 @@ from repro.core.algorithm import (FLAlgorithmBase, eval_global,  # noqa: E402
                                   eval_personal)
 
 
+def _serve_personal(state, team, device):
+    """Shared `serving_params` for the single-tier personalized baselines
+    whose state is ``(global x, personal (M, N, ...) models)``: a device
+    principal gets its personal row, team and global principals both get
+    x (these methods have no team tier to fall back through)."""
+    x, personal = state
+    if team is None or device is None:
+        return x
+    return jax.tree.map(lambda l: l[team, device], personal)
+
+
 @dataclass(frozen=True)
 class FedAvg(FLAlgorithmBase):
     loss_fn: Callable
@@ -308,6 +319,11 @@ class PFedMe(FLAlgorithmBase):
         return (jax.tree.map(lambda _: False, x),
                 jax.tree.map(lambda _: True, theta))
 
+    def serving_params(self, state, team=None, device=None):
+        """Device (t, d) gets its Moreau-envelope personal theta; pFedMe
+        is single-tier, so team and global requests both get x."""
+        return _serve_personal(state, team, device)
+
 
 @dataclass(frozen=True)
 class Ditto(FLAlgorithmBase):
@@ -339,6 +355,11 @@ class Ditto(FLAlgorithmBase):
         x, v = state
         return (jax.tree.map(lambda _: False, x),
                 jax.tree.map(lambda _: True, v))
+
+    def serving_params(self, state, team=None, device=None):
+        """Device (t, d) gets its prox-regularized personal v; team and
+        global requests get the FedAvg global x (single-tier method)."""
+        return _serve_personal(state, team, device)
 
 
 @dataclass(frozen=True)
@@ -397,3 +418,9 @@ class L2GD(FLAlgorithmBase):
         x, theta = state
         return (jax.tree.map(lambda _: False, x),
                 jax.tree.map(lambda _: True, theta))
+
+    def serving_params(self, state, team=None, device=None):
+        """Device (t, d) gets its personal theta; the cluster tier is a
+        derived team mean (not carried in the state), so team and
+        global requests both resolve to the global x."""
+        return _serve_personal(state, team, device)

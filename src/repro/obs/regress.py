@@ -5,14 +5,17 @@ gate: load the committed baseline and the freshly produced marker,
 extract every throughput metric present in both (engine rounds/sec per
 execution model, sweep configs/sec, probes-on rounds/sec, comm-round
 rounds/sec fused and unfused, cohort-engine rounds/sec per population
-size, and per-compressor kernel XLA rates from ``BENCH_kernels.json``),
-and fail when any current rate falls more than ``tol`` below its
-baseline:
+size, per-compressor kernel XLA rates from ``BENCH_kernels.json``, and
+the personalized-serving qps / inverted-latency rates from
+``BENCH_serving.json``), and fail when any current rate falls more than
+``tol`` below its baseline:
 
     python -m repro.obs.regress benchmarks/baselines/BENCH_engine.json \
         BENCH_engine.json --tol 0.2
     python -m repro.obs.regress benchmarks/baselines/BENCH_kernels.json \
         BENCH_kernels.json --tol 0.5
+    python -m repro.obs.regress benchmarks/baselines/BENCH_serving.json \
+        BENCH_serving.json --tol 0.5
 
 Rate shapes are normalized across bench modes: smoke mode reports single
 scalars (the scanned/vmapped paths only), quick/full mode per-model
@@ -60,6 +63,12 @@ def load_rates(payload: dict) -> dict:
     # is not a throughput, so gating it here would invert the direction)
     rate_group("cohort.rounds_per_sec",
                payload.get("cohort", {}).get("rounds_per_sec"), "cohort")
+
+    # BENCH_serving section: every entry is a higher-is-better rate by
+    # construction (qps + inverted-latency rates; raw ms latencies live
+    # in the ungated serving_detail section), so the generic flatten is
+    # the whole gate
+    rate_group("serving", payload.get("serving"), "qps")
 
     # BENCH_engine comm section: fused/unfused compressed-round rates
     comm = payload.get("comm")

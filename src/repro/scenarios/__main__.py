@@ -8,6 +8,10 @@
         [--seed S] [--eval-every E] [--system PROFILE]
         [--deadline SECONDS] [--smoke] [--cohort C] [--trace-dir DIR]
         [--json]
+    PYTHONPATH=src python -m repro.scenarios serve NAME [--rounds R]
+        [--seed S] [--smoke] [--encoding delta|int8|raw] [--store PATH]
+        [--requests Q] [--batch B] [--alpha A] [--unknown-frac F]
+        [--cached] [--json]
 
 ``list`` prints one line per registered scenario (name, topology,
 partitioner, algorithm, default rounds, spec hash); ``describe`` shows
@@ -15,7 +19,12 @@ the full spec plus paper references and a reproduce one-liner; ``dump``
 emits the spec as JSON (feed it back via FLScenario.from_dict);
 ``profiles`` lists the wall-clock system profiles (`repro.system`);
 ``run`` executes through the scanned engine and prints the final
-metrics — with ``--system`` the run is priced on that device/link
+metrics; ``serve`` closes the train → deploy → measure loop — it trains
+the scenario, exports the personalized (team, device) `ModelStore`
+(DESIGN.md §12; ``--store PATH`` persists it and reloads it from disk,
+``--encoding`` picks the device-tier delta encoding), then replays
+Zipf-popularity traffic through the tier-fallback batched server and
+prints p50/p95/p99 latency + queries/sec — with ``--system`` the run is priced on that device/link
 profile (simulated time-to-accuracy, optional ``--deadline`` straggler
 drops). ``--smoke`` shrinks the scenario to 2 teams x 3 devices x 16
 samples for 2 rounds — the CI liveness check (pair with
@@ -164,6 +173,53 @@ def _cmd_run(args) -> int:
     return 0
 
 
+def _cmd_serve(args) -> int:
+    import numpy as np
+
+    from repro.models import paper_models as pm
+    from repro.scenarios import build_scenario, get_scenario, run_scenario
+    from repro.serve import ModelStore, PersonalizedServer, replay_traffic
+
+    s = get_scenario(args.name)
+    if args.smoke:
+        s = s.scaled(m_teams=2, n_devices=3, samples_per_device=16,
+                     rounds=2)
+    res = run_scenario(s, rounds=args.rounds, seed=args.seed)
+    b = build_scenario(s, seed=args.seed)
+    store = ModelStore.from_result(b.algo, res, m=b.m, n=b.n,
+                                   encoding=args.encoding)
+    if args.store:
+        store.save(args.store)
+        store = ModelStore.load(args.store)
+        print(f"# store: {args.store} ({store.encoding}, "
+              f"{store.m}x{store.n}, device tier "
+              f"{store.device_tier_nbytes() / 1e6:.2f} MB)")
+    cfg = b.config
+    xv = np.asarray(b.val["x"], np.float32)
+    pool = xv.reshape((-1,) + xv.shape[3:])
+    server = PersonalizedServer(
+        store, lambda p, x: pm.apply(p, cfg, x[None])[0])
+    stats = replay_traffic(server, pool, requests=args.requests,
+                           batch=args.batch, alpha=args.alpha,
+                           unknown_frac=args.unknown_frac,
+                           seed=args.seed, cached=args.cached)
+    stats["scenario"] = s.name
+    if args.json:
+        print(json.dumps(stats, sort_keys=True))
+        return 0
+    print(f"{s.name}: served {stats['requests']} requests "
+          f"(batch {stats['batch']}, Zipf a={stats['alpha']:g}, "
+          f"{stats['unknown_frac']:.0%} unknown, "
+          f"encoding={stats['encoding']}"
+          + (", cached" if stats["cached"] else "") + ")")
+    print(f"  qps={stats['qps']:.1f} p50={stats['p50_ms']:.3f}ms "
+          f"p95={stats['p95_ms']:.3f}ms p99={stats['p99_ms']:.3f}ms "
+          f"mean={stats['mean_ms']:.3f}ms")
+    print(f"  device tier: {stats['device_tier_bytes'] / 1e6:.2f} MB "
+          f"({stats['m']}x{stats['n']} devices)")
+    return 0
+
+
 def main(argv=None) -> int:
     """Entry point: dispatch list / describe / dump / run."""
     ap = argparse.ArgumentParser(
@@ -201,6 +257,33 @@ def main(argv=None) -> int:
     p.add_argument("--json", action="store_true",
                    help="print the run-footer event as JSON on stdout")
     p.set_defaults(fn=_cmd_run)
+    p = sub.add_parser(
+        "serve", help="train -> export personalized store -> replay "
+                      "Zipf traffic (DESIGN.md §12)")
+    p.add_argument("name")
+    p.add_argument("--rounds", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--smoke", action="store_true",
+                   help="2x3x16 topology, 2 rounds (CI liveness)")
+    p.add_argument("--encoding", default="delta",
+                   choices=("delta", "int8", "raw"),
+                   help="device-tier encoding (delta = exact bit-pattern "
+                        "residual, int8 = fused-quantized residual)")
+    p.add_argument("--store", default=None,
+                   help="persist the exported store here and reload it "
+                        "from disk before serving")
+    p.add_argument("--requests", type=int, default=512)
+    p.add_argument("--batch", type=int, default=64)
+    p.add_argument("--alpha", type=float, default=1.2,
+                   help="Zipf popularity exponent (>1)")
+    p.add_argument("--unknown-frac", type=float, default=0.0,
+                   help="fraction of requests tagged with unknown "
+                        "principals (exercises tier fallback)")
+    p.add_argument("--cached", action="store_true",
+                   help="serve through the LRU unique-principal path")
+    p.add_argument("--json", action="store_true",
+                   help="print the replay stats as JSON on stdout")
+    p.set_defaults(fn=_cmd_serve)
     args = ap.parse_args(argv)
     return args.fn(args)
 

@@ -1,5 +1,21 @@
+"""Serving: deploy trained models and answer inference traffic.
+
+Two serving shapes live here. `repro.serve.engine` is the single-model
+autoregressive loop (prefill + decode against a KV cache) used by the
+LLM-side examples and launcher dry-runs. `repro.serve.store` +
+`repro.serve.personalized` are the *personalized* path the PerMFL
+reproduction actually needs: a (team, device)-keyed :class:`ModelStore`
+exported from a trained federated state, and a
+:class:`PersonalizedServer` that batches requests tagged with their
+principal and resolves each one down the device → team → global tier
+ladder in-graph (DESIGN.md §12).
+"""
 from repro.serve.engine import ServeEngine, make_decode_step, \
     make_prefill_step
-from repro.serve import sampler
+from repro.serve import personalized, sampler, store
+from repro.serve.personalized import PersonalizedServer, replay_traffic
+from repro.serve.store import ModelStore
 
-__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step", "sampler"]
+__all__ = ["ModelStore", "PersonalizedServer", "ServeEngine",
+           "make_decode_step", "make_prefill_step", "personalized",
+           "replay_traffic", "sampler", "store"]

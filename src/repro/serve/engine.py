@@ -20,6 +20,8 @@ from repro.serve import sampler as sampler_lib
 
 
 def make_prefill_step(cfg):
+    """Jittable prefill unit: ``(params, batch, cache) -> (last-token
+    logits, filled cache)`` for one whole-prompt forward under ``cfg``."""
     def prefill_step(params, batch, cache):
         logits, cache = model_lib.prefill(params, cfg, batch, cache,
                                           last_only=True)
@@ -28,6 +30,8 @@ def make_prefill_step(cfg):
 
 
 def make_decode_step(cfg, *, sample: str = "greedy", temp: float = 1.0):
+    """Jittable decode unit: one new token against a ``max_len`` KV cache
+    at traced position ``pos``, sampled greedily or by temperature."""
     def decode_step(params, cache, tokens, pos, key):
         batch = {"tokens": tokens}
         if cfg.family == "vlm":
@@ -45,6 +49,9 @@ def make_decode_step(cfg, *, sample: str = "greedy", temp: float = 1.0):
 
 @dataclass
 class ServeEngine:
+    """Single-model autoregressive serving loop: jitted prefill once,
+    then jitted one-token decode steps up to ``max_new_tokens``. (The
+    personalized multi-model path is `repro.serve.personalized`.)"""
     cfg: object
     params: object
     max_len: int

@@ -1,0 +1,280 @@
+"""(team, device)-keyed model store for personalized serving (DESIGN.md §12).
+
+Training ends with every device owning its own model (PerMFL's theta,
+pFedMe/Ditto/L2GD's personal tier, or one shared model for the global
+baselines) — this module is where those models live between training and
+inference. A :class:`ModelStore` is exported from a trained state through
+the ``FLAlgorithm.serving_params`` hook and holds three tiers:
+
+* **global** — one template pytree, the last-resort fallback;
+* **team** — ``(M, ...)`` stacked team anchors;
+* **device** — ``(M, N, ...)`` personal models, stored as *deltas
+  against the owning team's anchor* so the per-device cost is the
+  residual, not a full copy.
+
+Two delta encodings: ``"delta"`` (default) stores the *bit-pattern*
+difference — the float leaves bitcast to same-width integers and
+subtracted with wrapping arithmetic — so decode is exactly invertible
+and a served device is bit-identical to its trained params; ``"int8"``
+feeds the float residual through the fused stochastic-quantize kernel
+(PR 7) for ~3.9x smaller device tiers at bounded error. ``"raw"`` keeps
+full per-device copies (debug / size baseline).
+
+Lookup resolves down the tier ladder in-graph: a request tagged with an
+unknown device falls back to its team anchor, an unknown team to the
+global model — out-of-range indices are clipped and masked, never an
+error, because serving traffic is exactly where stale IDs show up. The
+store is a registered pytree (tiers are leaves, layout is aux data), so
+:meth:`ModelStore.gather` jits and batches like any other model code,
+and a host-side LRU keeps hot devices' decoded params out of the decode
+path entirely. Persistence rides `repro.train.checkpoint`.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.quantize.ops import dequantize_int8, quantize_int8
+from repro.kernels.quantize.ref import LANES
+from repro.train.checkpoint import load_checkpoint_arrays, save_checkpoint
+
+__all__ = ["ENCODINGS", "ModelStore"]
+
+ENCODINGS = ("delta", "int8", "raw")
+
+
+def _int_twin(dtype):
+    """Same-width signed integer dtype for bit-pattern arithmetic."""
+    return jnp.dtype(f"int{jnp.dtype(dtype).itemsize * 8}")
+
+
+def _bitcast(x, dtype):
+    return jax.lax.bitcast_convert_type(x, dtype)
+
+
+def _padded_len(leaf_size: int) -> int:
+    return -(-leaf_size // LANES) * LANES
+
+
+def _encode_device_tier(device_tree, team_tree, encoding: str):
+    """device_tree: (M, N, ...) leaves; team_tree: (M, ...) anchors."""
+    if encoding == "raw":
+        return device_tree
+
+    def anchor_like(dev, team):
+        return jnp.broadcast_to(jnp.expand_dims(team, 1), dev.shape)
+
+    if encoding == "delta":
+        def enc(dev, team):
+            a = anchor_like(dev, team)
+            if jnp.issubdtype(dev.dtype, jnp.floating):
+                it = _int_twin(dev.dtype)
+                return _bitcast(dev, it) - _bitcast(a, it)
+            return dev - a
+        return jax.tree.map(enc, device_tree, team_tree)
+
+    if encoding == "int8":
+        def enc(dev, team):
+            if not jnp.issubdtype(dev.dtype, jnp.floating):
+                raise ValueError(
+                    f"int8 encoding needs float leaves, got {dev.dtype}")
+            m, n = dev.shape[:2]
+            size = int(np.prod(dev.shape[2:], dtype=np.int64))
+            lp = _padded_len(size)
+            resid = (dev - anchor_like(dev, team)).reshape(m, n, size)
+            resid = jnp.pad(resid, ((0, 0), (0, 0), (0, lp - size)))
+            # noise 0.5 = deterministic round-to-nearest: the store is an
+            # export artifact, not an unbiased-in-expectation uplink.
+            q, scales, _ = quantize_int8(
+                resid, jnp.full(resid.shape, 0.5, resid.dtype))
+            return {"q": q, "scales": scales.reshape(m, n, lp // LANES)}
+        return jax.tree.map(enc, device_tree, team_tree)
+
+    raise ValueError(f"unknown encoding {encoding!r}; want one of {ENCODINGS}")
+
+
+@jax.tree_util.register_pytree_node_class
+class ModelStore:
+    """Three-tier (global / team / device) parameter store with in-graph
+    tier fallback, exported from a trained algorithm state and served
+    batched (see `repro.serve.personalized`)."""
+
+    def __init__(self, global_params, team_params, device_payload,
+                 *, encoding: str, m: int, n: int, cache_size: int = 64):
+        """Normally built via :meth:`from_state` / :meth:`load` rather
+        than directly. ``device_payload`` is the encoded device tier:
+        the template tree of bit-pattern ints for ``"delta"``, of
+        ``{"q", "scales"}`` dicts for ``"int8"``, of full copies for
+        ``"raw"``."""
+        self.global_params = global_params
+        self.team_params = team_params
+        self.device_payload = device_payload
+        self.encoding = encoding
+        self.m = int(m)
+        self.n = int(n)
+        self.cache_size = int(cache_size)
+        self._cache: OrderedDict = OrderedDict()
+
+    def tree_flatten(self):
+        """Pytree protocol: the three tiers are leaves; layout is aux.
+        The LRU cache is host state and is reborn empty on unflatten."""
+        return ((self.global_params, self.team_params, self.device_payload),
+                (self.encoding, self.m, self.n, self.cache_size))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from tiers + (encoding, m, n, lru)."""
+        encoding, m, n, cache_size = aux
+        return cls(*children, encoding=encoding, m=m, n=n,
+                   cache_size=cache_size)
+
+    @classmethod
+    def from_state(cls, algo, state, *, m: int, n: int,
+                   encoding: str = "delta", cache_size: int = 64):
+        """Export a trained algorithm ``state`` into a store.
+
+        Materializes the tiers by vmapping ``algo.serving_params`` over
+        ``arange(m)`` (team anchors) and ``arange(m) x arange(n)``
+        (device models) — one gather per tier, no per-device Python —
+        then encodes the device tier as deltas against its team anchor.
+        """
+        if encoding not in ENCODINGS:
+            raise ValueError(
+                f"unknown encoding {encoding!r}; want one of {ENCODINGS}")
+        g = jax.tree.map(jnp.asarray, algo.serving_params(state))
+        team = jax.vmap(lambda t: algo.serving_params(state, t))(
+            jnp.arange(m))
+        dev = jax.vmap(lambda t: jax.vmap(
+            lambda d: algo.serving_params(state, t, d))(jnp.arange(n)))(
+            jnp.arange(m))
+        payload = _encode_device_tier(dev, team, encoding)
+        return cls(g, team, payload, encoding=encoding, m=m, n=n,
+                   cache_size=cache_size)
+
+    @classmethod
+    def from_result(cls, algo, result, *, m: int, n: int,
+                    encoding: str = "delta", cache_size: int = 64):
+        """:meth:`from_state` on a finished ``FLResult.state``."""
+        return cls.from_state(algo, result.state, m=m, n=n,
+                              encoding=encoding, cache_size=cache_size)
+
+    # ---------------------------------------------------------- lookup
+
+    def _decode_rows(self, t, d, team_rows):
+        """Decoded device models for index arrays ``t``/``d`` (already
+        clipped in-range), given the matching gathered team anchors."""
+        batch_shape = t.shape
+
+        if self.encoding == "raw":
+            return jax.tree.map(lambda l: l[t, d], self.device_payload)
+
+        if self.encoding == "delta":
+            def dec(g, tm, leaf):
+                delta = leaf[t, d]
+                if jnp.issubdtype(g.dtype, jnp.floating):
+                    it = _int_twin(g.dtype)
+                    return _bitcast(_bitcast(tm, it) + delta, g.dtype)
+                return tm + delta
+            return jax.tree.map(dec, self.global_params, team_rows,
+                                self.device_payload)
+
+        def dec(g, tm, pack):
+            size = int(np.prod(g.shape, dtype=np.int64))
+            q, scales = pack["q"][t, d], pack["scales"][t, d]
+            dq = dequantize_int8(q, scales.reshape(-1))
+            dq = dq.reshape(batch_shape + (-1,))[..., :size]
+            return tm + dq.reshape(batch_shape + g.shape).astype(g.dtype)
+        return jax.tree.map(dec, self.global_params, team_rows,
+                            self.device_payload)
+
+    def gather(self, team, device):
+        """Batched tier-resolved lookup: ``(B,)`` int team/device tags in,
+        ``(B, ...)``-stacked params out, fully in-graph (jit/vmap safe).
+
+        Fallback ladder per request: in-range ``(team, device)`` → the
+        decoded personal model; in-range team with unknown device → the
+        team anchor; unknown team → the global model. Out-of-range
+        indices are clipped for the gather and masked out of the result.
+        """
+        team = jnp.asarray(team, jnp.int32)
+        device = jnp.asarray(device, jnp.int32)
+        ok_t = (team >= 0) & (team < self.m)
+        ok_d = ok_t & (device >= 0) & (device < self.n)
+        t = jnp.clip(team, 0, self.m - 1)
+        d = jnp.clip(device, 0, self.n - 1)
+        team_rows = jax.tree.map(lambda l: l[t], self.team_params)
+        dev_rows = self._decode_rows(t, d, team_rows)
+
+        def pick(g, tm, dv):
+            okd = ok_d.reshape(ok_d.shape + (1,) * g.ndim)
+            okt = ok_t.reshape(ok_t.shape + (1,) * g.ndim)
+            return jnp.where(okd, dv,
+                             jnp.where(okt, tm,
+                                       jnp.broadcast_to(g, tm.shape)))
+        return jax.tree.map(pick, self.global_params, team_rows, dev_rows)
+
+    def params_for(self, team=None, device=None):
+        """Single-principal lookup with the host-side LRU in front.
+
+        ``params_for()`` is the global model, ``params_for(t)`` the team
+        anchor, ``params_for(t, d)`` the decoded personal model — each
+        with the same fallback ladder as :meth:`gather`. Decoded params
+        are cached (``cache_size`` hot principals, least-recently-used
+        eviction), so repeat traffic skips delta decode entirely.
+        """
+        if team is None:
+            return self.global_params
+        key = (int(team), None if device is None else int(device))
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            return hit
+        t = jnp.asarray([key[0]], jnp.int32)
+        d = jnp.asarray([-1 if device is None else key[1]], jnp.int32)
+        val = jax.tree.map(lambda l: l[0], self.gather(t, d))
+        self._cache[key] = val
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+        return val
+
+    # ----------------------------------------------------- persistence
+
+    def device_tier_nbytes(self) -> int:
+        """On-disk footprint of the encoded device tier, in bytes."""
+        return int(sum(np.asarray(l).nbytes
+                       for l in jax.tree.leaves(self.device_payload)))
+
+    def save(self, path: str):
+        """Persist all three tiers + layout metadata as one checkpoint
+        (`repro.train.checkpoint` zip-of-npy format)."""
+        tree = {"global": self.global_params, "team": self.team_params,
+                "device": self.device_payload}
+        save_checkpoint(path, tree, metadata={
+            "kind": "model_store", "encoding": self.encoding,
+            "m": self.m, "n": self.n, "cache_size": self.cache_size})
+
+    @classmethod
+    def load(cls, path: str, *, cache_size: int | None = None):
+        """Rebuild a store from :meth:`save` output — no template tree
+        needed; the nested layout is recovered from the manifest's key
+        paths (stores are nested string-keyed mappings by construction).
+        """
+        arrays, meta = load_checkpoint_arrays(path)
+        if meta.get("kind") != "model_store":
+            raise ValueError(f"{path!r} is not a saved ModelStore "
+                             f"(metadata kind={meta.get('kind')!r})")
+        root: dict = {}
+        for key, arr in arrays.items():
+            parts = key.split("/")
+            d = root
+            for p in parts[:-1]:
+                d = d.setdefault(p, {})
+            d[parts[-1]] = jnp.asarray(arr)
+        return cls(root["global"], root["team"], root["device"],
+                   encoding=meta["encoding"], m=meta["m"], n=meta["n"],
+                   cache_size=(meta.get("cache_size", 64)
+                               if cache_size is None else cache_size))

@@ -1,8 +1,17 @@
-"""Pytree checkpointing: msgpack index + raw npy payloads in a zip.
+"""Pytree checkpointing: JSON manifest + raw npy payloads in a zip.
 
 No orbax in this environment; this is a self-contained format:
-np.savez with flattened key paths, plus a msgpack manifest carrying tree
-structure and metadata (step, config name).
+one ``.npy`` payload per leaf, named by the leaf's flattened key path,
+plus a JSON manifest carrying the key list, the tree structure string,
+and caller metadata (step, config name, store layout ...).
+
+``restore_checkpoint`` matches payloads to the template tree *by key
+path* — a checkpoint whose key set differs from the template's raises a
+``CheckpointKeyError`` naming the missing and extra paths instead of
+silently zipping leaves together by position. ``load_checkpoint_arrays``
+reads a checkpoint without any template (flat ``{key path: array}``) —
+what the serving `ModelStore` reloads its manifest through
+(DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -13,6 +22,13 @@ import zipfile
 
 import jax
 import numpy as np
+
+__all__ = ["CheckpointKeyError", "load_checkpoint_arrays",
+           "restore_checkpoint", "save_checkpoint"]
+
+
+class CheckpointKeyError(KeyError):
+    """A checkpoint's key paths do not match the restore template's."""
 
 
 def _flatten_with_paths(tree):
@@ -25,12 +41,18 @@ def _flatten_with_paths(tree):
 
 
 def save_checkpoint(path: str, tree, *, metadata: dict | None = None):
+    """Write `tree` to `path`: one npy member per leaf (key-path named)
+    plus a JSON manifest with the key list and `metadata`."""
     flat = _flatten_with_paths(tree)
     treedef = jax.tree.structure(tree)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with zipfile.ZipFile(path, "w", zipfile.ZIP_STORED) as zf:
         manifest = {
             "keys": list(flat.keys()),
+            # npy round-trips extension dtypes (bfloat16 & co.) as raw
+            # void records; the manifest keeps the real name so load can
+            # reinterpret the bytes
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
             "treedef": str(treedef),
             "metadata": metadata or {},
         }
@@ -41,21 +63,46 @@ def save_checkpoint(path: str, tree, *, metadata: dict | None = None):
             zf.writestr(f"arrays/{k.replace('/', '__')}.npy", buf.getvalue())
 
 
-def restore_checkpoint(path: str, like_tree):
-    """Restores into the structure of `like_tree` (leaf order match)."""
+def load_checkpoint_arrays(path: str):
+    """Read a checkpoint with no template: returns
+    ``({key path: np.ndarray}, metadata dict)`` straight from the
+    manifest — the caller owns re-assembling a structure (the serving
+    ModelStore rebuilds its nested-dict layout from the key paths)."""
     with zipfile.ZipFile(path, "r") as zf:
         manifest = json.loads(zf.read("manifest.json"))
+        dtypes = manifest.get("dtypes", {})
         arrays = {}
         for k in manifest["keys"]:
             buf = io.BytesIO(zf.read(f"arrays/{k.replace('/', '__')}.npy"))
-            arrays[k] = np.load(buf)
-    ref = _flatten_with_paths(like_tree)
-    assert set(ref.keys()) == set(arrays.keys()), \
-        f"checkpoint/tree key mismatch: {set(ref) ^ set(arrays)}"
-    leaves, treedef = jax.tree.flatten(like_tree)
+            arr = np.load(buf)
+            want = dtypes.get(k)
+            if want and str(arr.dtype) != want:
+                arr = arr.view(jax.numpy.dtype(want))
+            arrays[k] = arr
+    return arrays, json.loads(json.dumps(manifest["metadata"]))
+
+
+def restore_checkpoint(path: str, like_tree):
+    """Restore into the structure of `like_tree`, matching every payload
+    to its leaf by flattened key path (manifest order and template leaf
+    order are irrelevant). Returns ``(tree, metadata)``.
+
+    Raises :class:`CheckpointKeyError` listing the offending paths when
+    the checkpoint is missing template keys or carries extra ones — a
+    renamed layer or a layout drift fails loudly instead of restoring
+    arrays into the wrong slots.
+    """
+    arrays, metadata = load_checkpoint_arrays(path)
     paths = [
-        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                 for p in pth)
         for pth, _ in jax.tree_util.tree_flatten_with_path(like_tree)[0]]
-    new_leaves = [arrays[p] for p in paths]
-    return jax.tree.unflatten(treedef, new_leaves), \
-        json.loads(json.dumps(manifest["metadata"]))
+    missing = sorted(set(paths) - set(arrays))
+    extra = sorted(set(arrays) - set(paths))
+    if missing or extra:
+        raise CheckpointKeyError(
+            f"checkpoint {path!r} does not match the template tree: "
+            f"missing from checkpoint {missing or '[]'}; "
+            f"extra in checkpoint {extra or '[]'}")
+    treedef = jax.tree.structure(like_tree)
+    return jax.tree.unflatten(treedef, [arrays[p] for p in paths]), metadata

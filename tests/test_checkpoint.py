@@ -1,0 +1,74 @@
+"""Checkpoint format: key-path matched restore, metadata, error paths."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (CheckpointKeyError,
+                                    load_checkpoint_arrays,
+                                    restore_checkpoint, save_checkpoint)
+
+
+def _nested_tree():
+    return {"enc": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                    "b": jnp.full((4,), -2.5, jnp.float64)},
+            "head": [jnp.arange(5, dtype=jnp.int32),
+                     {"scale": jnp.asarray(3.0, jnp.bfloat16)}],
+            "step": jnp.asarray(7, jnp.int64)}
+
+
+def test_roundtrip_identity_dtype_shape_value(tmp_path):
+    tree = _nested_tree()
+    path = str(tmp_path / "ckpt.zip")
+    save_checkpoint(path, tree, metadata={"note": "nested"})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, _ = restore_checkpoint(path, like)
+    assert jax.tree.structure(restored) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        assert np.asarray(a).shape == np.asarray(b).shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_metadata_roundtrip(tmp_path):
+    path = str(tmp_path / "ckpt.zip")
+    meta = {"step": 42, "cfg": {"name": "mclr", "lr": 0.03},
+            "tags": ["a", "b"]}
+    save_checkpoint(path, {"w": jnp.zeros(3)}, metadata=meta)
+    _, got = restore_checkpoint(path, {"w": jnp.zeros(3)})
+    assert got == meta
+    _, got2 = load_checkpoint_arrays(path)
+    assert got2 == meta
+
+
+def test_restore_ignores_leaf_order(tmp_path):
+    # restore matches by key path, not position: a template whose dict
+    # insertion order differs must still land every array in its slot
+    path = str(tmp_path / "ckpt.zip")
+    save_checkpoint(path, {"a": jnp.ones(2), "b": jnp.full(3, 2.0)})
+    like = {"b": jnp.zeros(3), "a": jnp.zeros(2)}
+    restored, _ = restore_checkpoint(path, like)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.ones(2))
+    np.testing.assert_array_equal(np.asarray(restored["b"]),
+                                  np.full(3, 2.0))
+
+
+def test_missing_and_extra_keys_raise_with_paths(tmp_path):
+    path = str(tmp_path / "ckpt.zip")
+    save_checkpoint(path, {"enc": {"w": jnp.zeros(2)}, "old": jnp.zeros(1)})
+    with pytest.raises(CheckpointKeyError) as ei:
+        restore_checkpoint(path, {"enc": {"w": jnp.zeros(2)},
+                                  "new": jnp.zeros(1)})
+    msg = str(ei.value)
+    assert "new" in msg and "old" in msg
+
+
+def test_load_checkpoint_arrays_flat_view(tmp_path):
+    path = str(tmp_path / "ckpt.zip")
+    tree = {"enc": {"w": jnp.arange(4.0)}, "b": jnp.ones(2)}
+    save_checkpoint(path, tree)
+    arrays, _ = load_checkpoint_arrays(path)
+    assert set(arrays) == {"enc/w", "b"}
+    np.testing.assert_array_equal(arrays["enc/w"], np.arange(4.0))

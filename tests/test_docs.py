@@ -36,6 +36,9 @@ PUBLIC_MODULES = (
     "repro.obs.profiling",
     "repro.obs.regress",
     "repro.train.metrics",
+    "repro.serve",
+    "repro.serve.store",
+    "repro.serve.personalized",
 )
 
 _EXEMPT_METHODS = {"tree_flatten", "tree_unflatten"}

@@ -1,0 +1,239 @@
+"""Personalized serving subsystem (DESIGN.md §12): serving identity for
+every algorithm family, tier fallback, encodings, persistence, replay."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import paper_models
+from repro.scenarios import SCENARIOS, build_scenario, run_scenario
+from repro.serve.personalized import (PersonalizedServer, replay_traffic,
+                                      zipf_requests)
+from repro.serve.store import ModelStore
+
+ALGOS = ("permfl", "fedavg", "perfedavg", "pfedme", "ditto", "hsgd",
+         "l2gd")
+
+
+@functools.lru_cache(maxsize=None)
+def _trained(algo: str):
+    s = SCENARIOS[f"table1/mnist/mclr/{algo}"].scaled(
+        m_teams=2, n_devices=3, samples_per_device=16, rounds=1)
+    res = run_scenario(s, seed=0)
+    b = build_scenario(s, seed=0)
+    xv = np.asarray(b.val["x"], np.float32)
+    pool = jnp.asarray(xv.reshape((-1,) + xv.shape[3:]))
+    apply1 = lambda p, x: paper_models.apply(p, b.config, x[None])[0]
+    return b, res.state, apply1, pool
+
+
+def _all_pairs(m, n):
+    return (np.repeat(np.arange(m), n), np.tile(np.arange(n), m))
+
+
+# ---------------------------------------------------------------------------
+# serving identity: store-served == direct evaluation, per family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_served_predictions_bit_identical_per_family(algo):
+    b, state, apply1, pool = _trained(algo)
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n)
+    server = PersonalizedServer(store, apply1)
+    ts, ds = _all_pairs(b.m, b.n)
+    xs = pool[: b.m * b.n]
+    served = server.serve(ts, ds, xs)
+    # reference: the device's trained params straight out of the state,
+    # through the same vmapped forward program
+    direct = jax.tree.map(
+        lambda *ls: jnp.stack(ls),
+        *[b.algo.serving_params(state, int(t), int(d))
+          for t, d in zip(ts, ds)])
+    ref = server._fwd(direct, xs)
+    np.testing.assert_array_equal(np.asarray(served), np.asarray(ref))
+    assert bool(jnp.isfinite(served).all())
+
+
+@pytest.mark.parametrize("algo", ("permfl", "ditto"))
+def test_single_model_forward_agrees(algo):
+    # same logits as a plain single-model apply per device (batch-of-one
+    # forwards): the batched tier-resolved path adds nothing numerically
+    b, state, apply1, pool = _trained(algo)
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n)
+    server = PersonalizedServer(store, apply1)
+    ts, ds = _all_pairs(b.m, b.n)
+    xs = pool[: b.m * b.n]
+    served = np.asarray(server.serve(ts, ds, xs))
+    for i, (t, d) in enumerate(zip(ts, ds)):
+        p = b.algo.serving_params(state, int(t), int(d))
+        one = paper_models.apply(p, b.config, xs[i][None])[0]
+        np.testing.assert_allclose(served[i], np.asarray(one),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# tier fallback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("encoding", ("delta", "int8", "raw"))
+def test_unknown_device_falls_back_to_team(encoding):
+    b, state, apply1, pool = _trained("permfl")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n,
+                                  encoding=encoding)
+    server = PersonalizedServer(store, apply1)
+    x = pool[:1]
+    for t in range(b.m):
+        for bad_d in (-1, b.n, b.n + 7):
+            out = server.serve(np.array([t]), np.array([bad_d]), x)
+            ref = paper_models.apply(b.algo.serving_params(state, t),
+                                     b.config, x)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("encoding", ("delta", "int8"))
+def test_unknown_team_falls_back_to_global(encoding):
+    b, state, apply1, pool = _trained("permfl")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n,
+                                  encoding=encoding)
+    server = PersonalizedServer(store, apply1)
+    x = pool[:1]
+    ref = paper_models.apply(b.algo.serving_params(state), b.config, x)
+    for bad_t in (-3, b.m, b.m + 9):
+        for d in (0, b.n + 1):
+            out = server.serve(np.array([bad_t]), np.array([d]), x)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_params_for_walks_the_same_ladder():
+    b, state, _, _ = _trained("permfl")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n)
+    g = store.params_for()
+    team0 = store.params_for(0)
+    dev01 = store.params_for(0, 1)
+    for got, want in ((g, b.algo.serving_params(state)),
+                      (team0, b.algo.serving_params(state, 0)),
+                      (dev01, b.algo.serving_params(state, 0, 1)),
+                      (store.params_for(0, b.n + 1),
+                       b.algo.serving_params(state, 0)),
+                      (store.params_for(b.m + 1, 0),
+                       b.algo.serving_params(state))):
+        for a, c in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_params_for_lru_caches_and_evicts():
+    b, state, _, _ = _trained("permfl")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n,
+                                  cache_size=2)
+    p = store.params_for(0, 0)
+    assert store.params_for(0, 0) is p          # hit: same object
+    store.params_for(0, 1)
+    store.params_for(0, 2)                      # evicts (0, 0)
+    assert store.params_for(0, 0) is not p
+    assert len(store._cache) == 2
+
+
+# ---------------------------------------------------------------------------
+# encodings and the cached serve path
+# ---------------------------------------------------------------------------
+
+def test_cached_path_bit_identical_for_exact_encodings():
+    b, state, apply1, pool = _trained("pfedme")
+    ts, ds = _all_pairs(b.m, b.n)
+    ts, ds = np.concatenate([ts, ts]), np.concatenate([ds, ds])
+    xs = pool[: len(ts)]
+    for encoding in ("delta", "raw"):
+        store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n,
+                                      encoding=encoding)
+        server = PersonalizedServer(store, apply1)
+        np.testing.assert_array_equal(
+            np.asarray(server.serve(ts, ds, xs)),
+            np.asarray(server.serve_cached(ts, ds, xs)))
+
+
+def test_int8_encoding_bounded_error_and_smaller():
+    b, state, apply1, pool = _trained("permfl")
+    exact = ModelStore.from_state(b.algo, state, m=b.m, n=b.n)
+    lossy = ModelStore.from_state(b.algo, state, m=b.m, n=b.n,
+                                  encoding="int8")
+    assert lossy.device_tier_nbytes() < exact.device_tier_nbytes() / 3
+    ts, ds = _all_pairs(b.m, b.n)
+    pe = exact.gather(jnp.asarray(ts), jnp.asarray(ds))
+    pl = lossy.gather(jnp.asarray(ts), jnp.asarray(ds))
+    for e, l, t in zip(jax.tree.leaves(pe), jax.tree.leaves(pl),
+                       jax.tree.leaves(exact.team_params)):
+        # int8 residual quantization: error per element bounded by the
+        # per-128-lane scale = max|residual| / 127
+        resid = np.abs(np.asarray(e) - np.asarray(t)[ts])
+        bound = resid.reshape(len(ts), -1).max(axis=1) / 127 + 1e-7
+        err = np.abs(np.asarray(e) - np.asarray(l)).reshape(len(ts), -1)
+        assert (err.max(axis=1) <= bound).all()
+
+
+def test_unknown_encoding_rejected():
+    b, state, _, _ = _trained("permfl")
+    with pytest.raises(ValueError, match="encoding"):
+        ModelStore.from_state(b.algo, state, m=b.m, n=b.n,
+                              encoding="float8")
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("encoding", ("delta", "int8"))
+def test_save_load_roundtrip_serves_identically(tmp_path, encoding):
+    b, state, apply1, pool = _trained("l2gd")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n,
+                                  encoding=encoding)
+    path = str(tmp_path / "store.zip")
+    store.save(path)
+    loaded = ModelStore.load(path)
+    assert (loaded.encoding, loaded.m, loaded.n) == (encoding, b.m, b.n)
+    ts, ds = _all_pairs(b.m, b.n)
+    xs = pool[: len(ts)]
+    np.testing.assert_array_equal(
+        np.asarray(PersonalizedServer(store, apply1).serve(ts, ds, xs)),
+        np.asarray(PersonalizedServer(loaded, apply1).serve(ts, ds, xs)))
+
+
+def test_load_rejects_non_store_checkpoint(tmp_path):
+    from repro.train.checkpoint import save_checkpoint
+
+    path = str(tmp_path / "not_store.zip")
+    save_checkpoint(path, {"w": jnp.zeros(2)}, metadata={"step": 1})
+    with pytest.raises(ValueError, match="ModelStore"):
+        ModelStore.load(path)
+
+
+# ---------------------------------------------------------------------------
+# traffic replay
+# ---------------------------------------------------------------------------
+
+def test_zipf_requests_skewed_and_fallback_tagged():
+    teams, devices = zipf_requests(4, 10, 2000, alpha=1.3,
+                                   unknown_frac=0.2, seed=3)
+    known = (teams < 4) & (devices < 10)
+    assert 0.05 < 1 - known.mean() < 0.4
+    assert (teams[known] >= 0).all() and (devices[known] >= 0).all()
+    # popularity is skewed: the most popular principal dominates a
+    # uniform draw's expected share several-fold
+    flat = teams[known] * 10 + devices[known]
+    top_share = np.bincount(flat).max() / len(flat)
+    assert top_share > 3.0 / 40
+
+
+def test_replay_traffic_stats_shape():
+    b, state, apply1, pool = _trained("permfl")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n)
+    server = PersonalizedServer(store, apply1)
+    stats = replay_traffic(server, np.asarray(pool), requests=64,
+                           batch=16, unknown_frac=0.1, seed=1)
+    assert stats["requests"] == 64 and stats["batch"] == 16
+    assert stats["qps"] > 0
+    assert stats["p50_ms"] <= stats["p95_ms"] <= stats["p99_ms"]
+    assert stats["device_tier_bytes"] == store.device_tier_nbytes()

@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.train import optim
-from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.checkpoint import (CheckpointKeyError, restore_checkpoint,
+                                    save_checkpoint)
 from repro.train.train_state import TrainState
 
 
@@ -103,7 +104,7 @@ def test_checkpoint_roundtrip(tmp_path):
 def test_checkpoint_key_mismatch_raises(tmp_path):
     path = str(tmp_path / "c.zip")
     save_checkpoint(path, {"a": jnp.zeros(2)})
-    with pytest.raises(AssertionError):
+    with pytest.raises(CheckpointKeyError):
         restore_checkpoint(path, {"b": jnp.zeros(2)})
 
 
