@@ -16,11 +16,15 @@ along unchanged.
         tiny topology/batch/new-tokens, liveness + marker only
 
 Either mode writes ``BENCH_serving.json`` at the repo root. The
-``serving`` section holds only higher-is-better rates (qps and inverted
-latencies), so ``python -m repro.obs.regress`` gates it against the
-committed baseline in ``benchmarks/baselines/`` with no special-casing;
-raw millisecond latencies live in the ungated ``serving_detail``
-section.
+``serving`` section holds only higher-is-better rates — qps, inverted
+batch latencies (percentiles over *all* timed batches, from the raw
+per-batch array `replay_traffic` now returns), the LRU hit rate, and
+the per-tier resolution rates — so ``python -m repro.obs.regress``
+gates it against the committed baseline in ``benchmarks/baselines/``
+with no special-casing; raw millisecond latencies and tier counts live
+in the ungated ``serving_detail`` section. The replay's full metrics
+registry also lands as Prometheus text in
+``BENCH_serving_metrics.prom`` next to the marker.
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ import jax
 from repro.configs import get_reduced_config
 from repro.models import model as M
 from repro.models import paper_models
+from repro.obs.metrics import MetricsRegistry, percentile
 from repro.scenarios import DataSpec, FLScenario, build_scenario, \
     run_scenario
 from repro.serve import ModelStore, PersonalizedServer, replay_traffic
@@ -50,6 +55,7 @@ BENCH_SCENARIO = FLScenario(
 
 _BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / \
     "BENCH_serving.json"
+_BENCH_PROM = _BENCH_JSON.with_name("BENCH_serving_metrics.prom")
 
 
 def write_bench_json(payload: dict) -> None:
@@ -100,10 +106,20 @@ def bench_replay(csv=print, *, scenario=BENCH_SCENARIO, requests=1024,
         b.algo, res, m=b.m, n=b.n, encoding="int8").device_tier_nbytes()
 
     server = PersonalizedServer(store, apply1)
+    metrics = MetricsRegistry()
     kw = dict(requests=requests, batch=batch, alpha=alpha,
-              unknown_frac=unknown_frac, seed=seed)
+              unknown_frac=unknown_frac, seed=seed, metrics=metrics)
     stats = replay_traffic(server, pool, **kw)
     stats_cached = replay_traffic(server, pool, cached=True, **kw)
+    _BENCH_PROM.write_text(metrics.to_prometheus())
+
+    # percentiles over *all* timed batches from the raw per-batch
+    # latencies — the marker's tail stats come straight from the array,
+    # so two percentile points only coincide when the workload is too
+    # short for them to differ (the smoke replay sizes itself to avoid
+    # exactly that)
+    lat_ms = stats["lat_ms"]
+    p50, p95, p99 = (percentile(lat_ms, p) for p in (50, 95, 99))
 
     for name, st in (("gather", stats), ("cached", stats_cached)):
         csv(f"serving,replay/{name},requests={st['requests']} "
@@ -112,29 +128,50 @@ def bench_replay(csv=print, *, scenario=BENCH_SCENARIO, requests=1024,
         csv(f"serving,replay/{name},,latency_ms,"
             f"p50={st['p50_ms']:.3f} p95={st['p95_ms']:.3f} "
             f"p99={st['p99_ms']:.3f}")
+    tiers = stats["tier_counts"]
+    csv(f"serving,replay/gather,,tier_counts,"
+        f"device={tiers['device']} team={tiers['team']} "
+        f"global={tiers['global']}")
+    csv(f"serving,replay/cached,,cache_hit_rate,"
+        f"{stats_cached['cache_hit_rate']:.4f}")
     csv(f"serving,store,{store.m}x{store.n},device_tier_bytes,"
         f"delta={stats['device_tier_bytes']} int8={int8_bytes}")
 
     failures = []
-    if not (stats["qps"] > 0 and stats["p50_ms"] > 0):
+    if not (stats["qps"] > 0 and p50 > 0):
         failures.append("bench_serving: degenerate replay timings")
+    if sum(tiers.values()) != stats["requests"]:
+        failures.append("bench_serving: tier counts do not sum to "
+                        f"requests ({tiers} vs {stats['requests']})")
+    total = stats["requests"]
     rates = {
         "qps": round(stats["qps"], 2),
         # inverted batch latencies: batches/sec at each percentile, so
         # the regress gate's higher-is-better convention applies
-        "rate_p50": round(1e3 / stats["p50_ms"], 2),
-        "rate_p95": round(1e3 / stats["p95_ms"], 2),
-        "rate_p99": round(1e3 / stats["p99_ms"], 2),
+        "rate_p50": round(1e3 / p50, 2),
+        "rate_p95": round(1e3 / p95, 2),
+        "rate_p99": round(1e3 / p99, 2),
+        # telemetry rates, all higher-is-better under the same generic
+        # flatten: the LRU hit rate and the share of requests resolved
+        # at each tier (deterministic for a fixed seed/workload)
+        "cache_hit_rate": round(stats_cached["cache_hit_rate"], 4),
+        "tier_device_rate": round(tiers["device"] / total, 4),
+        "tier_team_rate": round(tiers["team"] / total, 4),
+        "tier_global_rate": round(tiers["global"] / total, 4),
     }
     detail = {
         "scenario": scenario.name, "m": store.m, "n": store.n,
         "requests": stats["requests"], "batch": stats["batch"],
         "alpha": alpha, "unknown_frac": unknown_frac,
         "encoding": store.encoding,
-        "p50_ms": round(stats["p50_ms"], 4),
-        "p95_ms": round(stats["p95_ms"], 4),
-        "p99_ms": round(stats["p99_ms"], 4),
+        "p50_ms": round(p50, 4),
+        "p95_ms": round(p95, 4),
+        "p99_ms": round(p99, 4),
         "mean_ms": round(stats["mean_ms"], 4),
+        "timed_batches": len(lat_ms),
+        "tier_counts": tiers,
+        "stage_gather_ms": round(stats["stage_gather_ms"], 4),
+        "stage_forward_ms": round(stats["stage_forward_ms"], 4),
         # the LRU path's numbers are workload-shaped (cold-miss heavy on
         # short replays), so they are reported here, not gated
         "cached_qps": round(stats_cached["qps"], 2),
@@ -147,11 +184,16 @@ def bench_replay(csv=print, *, scenario=BENCH_SCENARIO, requests=1024,
 
 def smoke() -> list:
     """CI guard: 2x3x16 topology for 2 rounds, a short replay through
-    both serve paths, and one tiny decode loop — then the marker."""
+    both serve paths, and one tiny decode loop — then the marker.
+
+    512 requests at batch 8 give 64 timed batches, enough that the p95
+    and p99 nearest-rank percentiles land on different batches (ranks 61
+    and 64) — the old 8-batch smoke replay collapsed them onto the same
+    sample, so the marker's two tail rates were always equal."""
     scenario = BENCH_SCENARIO.scaled(m_teams=2, n_devices=3,
                                      samples_per_device=16, rounds=2)
     failures, rates, detail = bench_replay(
-        print, scenario=scenario, requests=128, batch=16)
+        print, scenario=scenario, requests=512, batch=8)
     tput = bench_arch("phi3-mini-3.8b", print, batch=2, prompt=16, new=4)
     print(f"# bench_serving smoke: replay qps={rates['qps']:.0f}, "
           f"decode {tput:.0f} tok/s OK")

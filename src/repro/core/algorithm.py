@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.comm import CommConfig, CommLedger, CommState
 from repro.core import permfl as P
+from repro.obs.health import nonfinite_count
 from repro.obs.probes import (masked_max, masked_mean, stacked_sq_norm,
                               tree_diff_norm)
 
@@ -107,6 +108,28 @@ class FLAlgorithmBase:
         if trace.grads:
             out["update_norm"] = tree_diff_norm(prev_state, state)
         return out
+
+    def health_round(self, prev_state, state, data, *, team_mask,
+                     device_mask, trace):
+        """Traced per-round health detectors (`repro.obs.health`): called
+        by the engine's round body when ``trace.health`` is on, returning
+        ``{name: f32 scalar}`` values where > 0 means "this round is
+        bad". Same purity contract as ``probe_round`` — detectors only
+        read the states, so health-on is trajectory-bit-identical and
+        health-off is program-byte-identical.
+
+        Default: counts of non-finite entries in the post-round state
+        and in the round's update (delta vs ``prev_state``) — the delta
+        catches an inf-minus-inf that cancels back to a finite state.
+        Algorithms with a cheap loss at hand override to add an
+        explosion flag against ``trace.health_loss_max``.
+        """
+        delta = jax.tree.map(
+            lambda a, b: jnp.asarray(b) - jnp.asarray(a)
+            if jnp.issubdtype(jnp.asarray(a).dtype, jnp.inexact) else a,
+            prev_state, state)
+        return {"nonfinite_params": nonfinite_count(state),
+                "nonfinite_update": nonfinite_count(delta)}
 
     def serving_params(self, state, team=None, device=None):
         """The model this algorithm serves to one principal — the export
@@ -275,6 +298,22 @@ class PerMFL(FLAlgorithmBase):
         if trace.loss:
             losses = jax.vmap(jax.vmap(self.loss_fn))(state.theta, data)
             out["part_loss"] = masked_mean(losses, gated)
+        return out
+
+    def health_round(self, prev_state, state, data, *, team_mask,
+                     device_mask, trace):
+        """Generic nonfinite detectors plus a loss-explosion flag: the
+        participation-weighted personalized train loss trips when it
+        goes non-finite or exceeds ``trace.health_loss_max``."""
+        out = super().health_round(prev_state, state, data,
+                                   team_mask=team_mask,
+                                   device_mask=device_mask, trace=trace)
+        gated = device_mask * team_mask[:, None]
+        losses = jax.vmap(jax.vmap(self.loss_fn))(state.theta, data)
+        ploss = masked_mean(losses, gated)
+        out["loss_exploded"] = (
+            (~jnp.isfinite(ploss))
+            | (ploss > trace.health_loss_max)).astype(jnp.float32)
         return out
 
     def serving_params(self, state, team=None, device=None):

@@ -1,22 +1,29 @@
 """CLI for the run-telemetry layer.
 
     PYTHONPATH=src python -m repro.obs summarize PATH [PATH2]
+    PYTHONPATH=src python -m repro.obs report DIR
     PYTHONPATH=src python -m repro.obs regress BASELINE CURRENT [--tol T]
 
 ``summarize PATH`` reads a JSONL trace (one file, or every ``*.jsonl``
 in a directory) and renders each run: header identity, the eval-point
 table joining metrics x bytes x simulated seconds x probe summaries, and
-the footer cost split. With two paths it also diffs the final runs of
-each (metric deltas, wall/bytes deltas). ``regress`` is the CI perf
-gate (see `repro.obs.regress`).
+the footer cost split — plus, when the directory holds span trace
+files, the wall-clock span breakdown. With two paths it also diffs the
+final runs of each (metric deltas, wall/bytes deltas). ``report DIR``
+renders the full joined picture — events × spans × metrics × health
+(see `repro.obs.report`). ``regress`` is the CI perf gate (see
+`repro.obs.regress`).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 
 from repro.obs import events as E
 from repro.obs import regress as R
+from repro.obs import report as REP
 
 
 def _fmt_run(run: list) -> None:
@@ -52,15 +59,35 @@ def _fmt_run(run: list) -> None:
           f"{s.get('dispatches')} dispatch(es){cost}")
 
 
+def _print_spans(path) -> None:
+    p = pathlib.Path(path)
+    if not p.is_dir():
+        return
+    traces = []
+    for f in sorted(p.glob("spans-*.trace.json")):
+        try:
+            traces.append(json.loads(f.read_text()))
+        except (json.JSONDecodeError, OSError):
+            continue
+    lines = REP.format_spans(traces)
+    if lines:
+        print(f"spans ({len(traces)} trace file(s)):")
+        for line in lines:
+            print(line)
+
+
 def _cmd_summarize(args) -> int:
-    runs = E.split_runs(E.read_jsonl(args.path))
+    records = E.read_jsonl(args.path)
+    runs = E.split_runs([r for r in records if "event" in r])
     if not runs:
         print(f"no run events under {args.path}")
         return 1
     for run in runs:
         _fmt_run(run)
+    _print_spans(args.path)
     if args.path2:
-        other = E.split_runs(E.read_jsonl(args.path2))
+        other = E.split_runs([r for r in E.read_jsonl(args.path2)
+                              if "event" in r])
         if not other:
             print(f"no run events under {args.path2}")
             return 1
@@ -72,6 +99,15 @@ def _cmd_summarize(args) -> int:
             print("  no shared numeric fields")
         for k, v in sorted(delta.items()):
             print(f"  {k:>24}: {v:+.6g}")
+    return 0
+
+
+def _cmd_report(args) -> int:
+    print(REP.report_text(args.path), end="")
+    art = REP.load_artifacts(args.path)
+    if not (art["runs"] or art["spans"] or art["metrics"]):
+        print(f"no observability artifacts under {args.path}")
+        return 1
     return 0
 
 
@@ -87,6 +123,10 @@ def main(argv=None) -> int:
     p.add_argument("path2", nargs="?", default=None,
                    help="second trace to diff against")
     p.set_defaults(fn=_cmd_summarize)
+    p = sub.add_parser("report",
+                       help="joined events x spans x metrics x health")
+    p.add_argument("path", help="trace directory")
+    p.set_defaults(fn=_cmd_report)
     p = sub.add_parser("regress",
                        help="gate BENCH_engine.json against a baseline")
     p.add_argument("baseline")

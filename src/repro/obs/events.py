@@ -12,8 +12,10 @@ Each run is a short stream of JSON objects, one per line:
                  summaries (RunTrace).
   run_footer   — outcome + cost: final metrics, wall-clock split
                  (compile/run seconds), dispatch count, byte and
-                 timeline totals, probe summaries, and the compiled
-                 program's flops/bytes when cost analysis was on.
+                 timeline totals, probe summaries, the health-detector
+                 verdict (``HealthReport.summary()``) when monitors ran,
+                 and the compiled program's flops/bytes when cost
+                 analysis was on.
 
 A sweep writes one file: a ``sweep_header`` followed by each
 configuration's header/eval/footer section (run ids ``<base>/c<i>``).
@@ -34,9 +36,9 @@ from typing import Any, Optional
 
 from repro.obs.trace import eval_points
 
-__all__ = ["diff_summaries", "read_jsonl", "run_events", "split_runs",
-           "summarize_run", "sweep_events", "write_jsonl", "write_run",
-           "write_sweep"]
+__all__ = ["diff_summaries", "new_run_id", "read_jsonl", "run_events",
+           "split_runs", "summarize_run", "sweep_events", "write_jsonl",
+           "write_run", "write_sweep"]
 
 SCHEMA = 1
 
@@ -45,8 +47,14 @@ _HIST = {"pm": "pm_acc", "tm": "tm_acc", "gm": "gm_acc",
          "train_loss": "train_loss"}
 
 
-def _new_run_id(tag: str = "run") -> str:
+def new_run_id(tag: str = "run") -> str:
+    """Fresh run id ``<tag>-<8 hex>`` — public so callers that emit
+    several artifacts for one run (events + spans + metrics) can mint
+    the id once and thread it through."""
     return f"{tag}-{uuid.uuid4().hex[:8]}"
+
+
+_new_run_id = new_run_id
 
 
 def _metric_hists(res) -> dict:
@@ -121,6 +129,9 @@ def run_events(res, *, run_id: Optional[str] = None, algo: Any = None,
         footer["probes"] = trace.summary()
         if trace.cost is not None:
             footer["cost"] = trace.cost
+    health = getattr(res, "health", None)
+    if health is not None:
+        footer["health"] = health.summary()
     events.append(footer)
     return events
 

@@ -65,9 +65,11 @@ def load_rates(payload: dict) -> dict:
                payload.get("cohort", {}).get("rounds_per_sec"), "cohort")
 
     # BENCH_serving section: every entry is a higher-is-better rate by
-    # construction (qps + inverted-latency rates; raw ms latencies live
-    # in the ungated serving_detail section), so the generic flatten is
-    # the whole gate
+    # construction (qps, inverted-latency rates, the LRU hit rate, and
+    # the per-tier resolution rates; raw ms latencies and counts live in
+    # the ungated serving_detail section), so the generic flatten is the
+    # whole gate — serving.cache_hit_rate / serving.tier_*_rate gate a
+    # broken cache or fallback ladder, not just throughput
     rate_group("serving", payload.get("serving"), "qps")
 
     # BENCH_engine comm section: fused/unfused compressed-round rates

@@ -56,6 +56,18 @@ class TraceConfig:
     loss: participation-weighted train loss of the personalized models
         (only devices whose team also participated contribute).
 
+    Health monitors (`repro.obs.health` — same off-⇒-byte-identical
+    contract as the probe groups):
+
+    health: emit the algorithm's ``health_round`` detectors (nonfinite
+        param/update counts, loss-explosion flag) as extra scan outputs,
+        assembled into ``FLResult.health``.
+    fail_fast: raise `repro.obs.health.HealthError` host-side naming the
+        first bad round as soon as a dispatched chunk's detectors fire
+        (requires ``health``; no effect on the compiled program).
+    health_loss_max: participation-weighted train loss above this
+        threshold trips the loss-explosion detector.
+
     Host-side hooks (no effect on the compiled round program):
 
     cost_analysis: capture XLA's ``Compiled.cost_analysis()`` (flops /
@@ -67,6 +79,9 @@ class TraceConfig:
     grads: bool = True
     residuals: bool = True
     loss: bool = True
+    health: bool = True
+    fail_fast: bool = False
+    health_loss_max: float = 1e6
     cost_analysis: bool = False
     profile_dir: Optional[str] = None
 

@@ -7,11 +7,11 @@
     PYTHONPATH=src python -m repro.scenarios run NAME [--rounds R]
         [--seed S] [--eval-every E] [--system PROFILE]
         [--deadline SECONDS] [--smoke] [--cohort C] [--trace-dir DIR]
-        [--json]
+        [--profile-dir DIR] [--fail-fast] [--hparam NAME=VALUE] [--json]
     PYTHONPATH=src python -m repro.scenarios serve NAME [--rounds R]
         [--seed S] [--smoke] [--encoding delta|int8|raw] [--store PATH]
         [--requests Q] [--batch B] [--alpha A] [--unknown-frac F]
-        [--cached] [--json]
+        [--cached] [--trace-dir DIR] [--json]
 
 ``list`` prints one line per registered scenario (name, topology,
 partitioner, algorithm, default rounds, spec hash); ``describe`` shows
@@ -29,10 +29,17 @@ profile (simulated time-to-accuracy, optional ``--deadline`` straggler
 drops). ``--smoke`` shrinks the scenario to 2 teams x 3 devices x 16
 samples for 2 rounds — the CI liveness check (pair with
 FORCE_PALLAS_INTERPRET=1 on CPU). ``--trace-dir DIR`` turns on the
-run-telemetry probes (`repro.obs`) and writes the JSONL event log there
-(read it back with ``python -m repro.obs summarize DIR``); ``--json``
-prints the run-footer event as one JSON object on stdout — the
-machine-readable outcome line for CI and scripts.
+run-telemetry probes + health monitors (`repro.obs`) and writes the
+JSONL event log, a Chrome-trace span file, and — for ``serve`` — the
+serving metrics snapshot (JSONL + Prometheus text) there (read it all
+back joined with ``python -m repro.obs report DIR``); ``--profile-dir
+DIR`` additionally wraps the dispatches in a ``jax.profiler`` trace
+(`repro.obs.profiling.profile_ctx`); ``--fail-fast`` raises on the
+first unhealthy round (exit code 3, naming the round); ``--hparam
+NAME=VALUE`` (repeatable) overrides one of the algorithm's sweepable
+hyperparameters; ``--json`` prints the run-footer event as one JSON
+object on stdout — the machine-readable outcome line for CI and
+scripts.
 """
 from __future__ import annotations
 
@@ -112,6 +119,7 @@ def _cmd_profiles(args) -> int:
 
 
 def _cmd_run(args) -> int:
+    from repro.obs import HealthError, TraceConfig
     from repro.scenarios import get_scenario, run_scenario
 
     s = get_scenario(args.name)
@@ -130,10 +138,40 @@ def _cmd_run(args) -> int:
                   "PROFILE, or run a scenario whose spec carries one)")
             return 2
         s = s.with_system(s.system.with_deadline(args.deadline))
-    res = run_scenario(s, rounds=args.rounds, seed=args.seed,
-                       eval_every=args.eval_every,
-                       trace=True if args.trace_dir else None,
-                       trace_dir=args.trace_dir)
+    if args.hparam:
+        import dataclasses
+
+        overrides = dict(s.algo.overrides)
+        for item in args.hparam:
+            name, sep, val = item.partition("=")
+            if not sep:
+                print(f"error: --hparam wants NAME=VALUE, got {item!r}")
+                return 2
+            try:
+                overrides[name] = float(val)
+            except ValueError:
+                print(f"error: --hparam value {val!r} is not a number")
+                return 2
+        try:
+            s = dataclasses.replace(s, algo=dataclasses.replace(
+                s.algo, overrides=tuple(sorted(overrides.items()))))
+        except ValueError as e:
+            print(f"error: {e}")
+            return 2
+    trace = None
+    if args.trace_dir or args.profile_dir or args.fail_fast:
+        # cost_analysis rides trace_dir so the saved compile span carries
+        # the program's flops/bytes next to its measured wall time
+        trace = TraceConfig(cost_analysis=bool(args.trace_dir),
+                            profile_dir=args.profile_dir,
+                            fail_fast=args.fail_fast)
+    try:
+        res = run_scenario(s, rounds=args.rounds, seed=args.seed,
+                           eval_every=args.eval_every, trace=trace,
+                           trace_dir=args.trace_dir)
+    except HealthError as e:
+        print(f"error: {e}")
+        return 3
     if args.json:
         from repro.obs.events import run_events
 
@@ -165,18 +203,25 @@ def _cmd_run(args) -> int:
               f"simulated s over {tl['rounds']} rounds "
               f"(mean {tl['mean_round_seconds']:.3f}s/round, "
               f"{tl['dropped_devices']} device straggler drops)")
+    if res.health is not None:
+        h = res.health.summary()
+        print("  health: ok" if h["ok"] else
+              f"  health: FAILED at round {h['first_bad_round']}")
     if res.events_path:
         print(f"  events: {res.events_path} "
-              f"(python -m repro.obs summarize {args.trace_dir})")
+              f"(python -m repro.obs report {args.trace_dir})")
     for metric, acc in s.paper_ref:
         print(f"  paper {metric}: {acc}% (A100, full rounds)")
     return 0
 
 
 def _cmd_serve(args) -> int:
+    import contextlib
+
     import numpy as np
 
     from repro.models import paper_models as pm
+    from repro.obs import MetricsRegistry, SpanLog
     from repro.scenarios import build_scenario, get_scenario, run_scenario
     from repro.serve import ModelStore, PersonalizedServer, replay_traffic
 
@@ -184,28 +229,45 @@ def _cmd_serve(args) -> int:
     if args.smoke:
         s = s.scaled(m_teams=2, n_devices=3, samples_per_device=16,
                      rounds=2)
-    res = run_scenario(s, rounds=args.rounds, seed=args.seed)
-    b = build_scenario(s, seed=args.seed)
-    store = ModelStore.from_result(b.algo, res, m=b.m, n=b.n,
-                                   encoding=args.encoding)
-    if args.store:
-        store.save(args.store)
-        store = ModelStore.load(args.store)
-        print(f"# store: {args.store} ({store.encoding}, "
-              f"{store.m}x{store.n}, device tier "
-              f"{store.device_tier_nbytes() / 1e6:.2f} MB)")
-    cfg = b.config
-    xv = np.asarray(b.val["x"], np.float32)
-    pool = xv.reshape((-1,) + xv.shape[3:])
-    server = PersonalizedServer(
-        store, lambda p, x: pm.apply(p, cfg, x[None])[0])
-    stats = replay_traffic(server, pool, requests=args.requests,
-                           batch=args.batch, alpha=args.alpha,
-                           unknown_frac=args.unknown_frac,
-                           seed=args.seed, cached=args.cached)
+    # with --trace-dir the CLI owns one span log across the whole
+    # train -> export -> replay loop, so training spans and serving
+    # spans land in a single Chrome trace; metrics ride next to it
+    log = metrics = None
+    if args.trace_dir:
+        log = SpanLog(meta={"kind": "serve", "scenario": s.name})
+        metrics = MetricsRegistry()
+    with log.activate() if log is not None else contextlib.nullcontext():
+        res = run_scenario(s, rounds=args.rounds, seed=args.seed,
+                           trace=True if args.trace_dir else None,
+                           trace_dir=args.trace_dir)
+        b = build_scenario(s, seed=args.seed)
+        store = ModelStore.from_result(b.algo, res, m=b.m, n=b.n,
+                                       encoding=args.encoding)
+        if args.store:
+            store.save(args.store)
+            store = ModelStore.load(args.store)
+            print(f"# store: {args.store} ({store.encoding}, "
+                  f"{store.m}x{store.n}, device tier "
+                  f"{store.device_tier_nbytes() / 1e6:.2f} MB)")
+        cfg = b.config
+        xv = np.asarray(b.val["x"], np.float32)
+        pool = xv.reshape((-1,) + xv.shape[3:])
+        server = PersonalizedServer(
+            store, lambda p, x: pm.apply(p, cfg, x[None])[0])
+        stats = replay_traffic(server, pool, requests=args.requests,
+                               batch=args.batch, alpha=args.alpha,
+                               unknown_frac=args.unknown_frac,
+                               seed=args.seed, cached=args.cached,
+                               metrics=metrics)
     stats["scenario"] = s.name
+    if args.trace_dir:
+        log.save(args.trace_dir, tag=f"serve-{s.name}")
+        metrics.write_jsonl(f"{args.trace_dir}/metrics-serve.jsonl")
+        metrics.write_prom(f"{args.trace_dir}/metrics-serve.prom")
     if args.json:
-        print(json.dumps(stats, sort_keys=True))
+        print(json.dumps(
+            {k: v for k, v in stats.items() if k != "lat_ms"},
+            sort_keys=True))
         return 0
     print(f"{s.name}: served {stats['requests']} requests "
           f"(batch {stats['batch']}, Zipf a={stats['alpha']:g}, "
@@ -215,8 +277,17 @@ def _cmd_serve(args) -> int:
     print(f"  qps={stats['qps']:.1f} p50={stats['p50_ms']:.3f}ms "
           f"p95={stats['p95_ms']:.3f}ms p99={stats['p99_ms']:.3f}ms "
           f"mean={stats['mean_ms']:.3f}ms")
+    tiers = stats.get("tier_counts")
+    if tiers:
+        print(f"  tiers: device={tiers['device']} team={tiers['team']} "
+              f"global={tiers['global']}"
+              + (f"  cache_hit_rate={stats['cache_hit_rate']:.2%}"
+                 if "cache_hit_rate" in stats else ""))
     print(f"  device tier: {stats['device_tier_bytes'] / 1e6:.2f} MB "
           f"({stats['m']}x{stats['n']} devices)")
+    if args.trace_dir:
+        print(f"  telemetry: {args.trace_dir} "
+              f"(python -m repro.obs report {args.trace_dir})")
     return 0
 
 
@@ -253,7 +324,18 @@ def main(argv=None) -> int:
                    help="override cohort_size (devices materialized per "
                         "team per round); 0 disables cohort sampling")
     p.add_argument("--trace-dir", default=None,
-                   help="enable probes + write the JSONL event log here")
+                   help="enable probes + health monitors and write the "
+                        "JSONL event log + Chrome-trace spans here")
+    p.add_argument("--profile-dir", default=None,
+                   help="wrap dispatches in a jax.profiler trace "
+                        "writing here (TensorBoard-loadable)")
+    p.add_argument("--fail-fast", action="store_true",
+                   help="raise on the first unhealthy round "
+                        "(nonfinite state / exploded loss); exit code 3")
+    p.add_argument("--hparam", action="append", default=None,
+                   metavar="NAME=VALUE",
+                   help="override one sweepable hyperparameter "
+                        "(repeatable)")
     p.add_argument("--json", action="store_true",
                    help="print the run-footer event as JSON on stdout")
     p.set_defaults(fn=_cmd_run)
@@ -281,6 +363,9 @@ def main(argv=None) -> int:
                         "principals (exercises tier fallback)")
     p.add_argument("--cached", action="store_true",
                    help="serve through the LRU unique-principal path")
+    p.add_argument("--trace-dir", default=None,
+                   help="write spans + serving metrics (JSONL and "
+                        "Prometheus text) + training events here")
     p.add_argument("--json", action="store_true",
                    help="print the replay stats as JSON on stdout")
     p.set_defaults(fn=_cmd_serve)

@@ -15,11 +15,13 @@ instead of retracing (DESIGN.md §7).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
+from repro.obs.spans import SpanLog, current_log, span
 from repro.scenarios.registry import get_scenario
 from repro.scenarios.spec import FLScenario, fns_for, init_model, to_jax
 from repro.train.engine import FLResult, run_experiment
@@ -66,8 +68,11 @@ def _data(data_spec, data_seed: int):
     seed) — scenarios differing only in algorithm/comm/rounds (e.g. the
     seven Table-1 cells of one row) share it instead of re-partitioning
     and holding duplicate stacked arrays."""
-    fd = data_spec.build(data_seed)
-    train, val = to_jax(fd)
+    # the span only fires on a cache miss — exactly when data-build work
+    # actually happens; memoized rebuilds show as scenario_build hits
+    with span("data_build", seed=data_seed):
+        fd = data_spec.build(data_seed)
+        train, val = to_jax(fd)
     return fd, train, val
 
 
@@ -110,10 +115,14 @@ def build_scenario(name_or_spec, seed: int = 0) -> ScenarioBuild:
     # built, so strip it from the cache key: every profile of one
     # scenario shares data, closures, and the algorithm template
     canon = dataclasses.replace(s.canonical(), system=None)
-    fd, cfg, train, val, loss, metric, algo = _materialize(canon)
+    hits0 = _materialize.cache_info().hits
+    with span("scenario_build", scenario=s.name, seed=seed) as sp:
+        fd, cfg, train, val, loss, metric, algo = _materialize(canon)
+        sp.set(memoized=_materialize.cache_info().hits > hits0)
+        params0 = _params0(cfg, seed)
     return ScenarioBuild(scenario=s, fd=fd, config=cfg, train=train,
                          val=val, loss_fn=loss, metric_fn=metric,
-                         algo=algo, params0=_params0(cfg, seed))
+                         algo=algo, params0=params0)
 
 
 def run_scenario(name_or_spec, *, rounds: Optional[int] = None,
@@ -133,21 +142,32 @@ def run_scenario(name_or_spec, *, rounds: Optional[int] = None,
         disable simulation on a system-bearing spec. Unpassed, the
         spec's own model (if any) applies.
     trace / trace_dir: run-telemetry (`repro.obs`) — probe streams on
-        ``FLResult.trace`` and a JSONL event log whose header carries
-        the scenario identity (name, family, spec_hash).
+        ``FLResult.trace`` (health detectors on ``FLResult.health``), a
+        JSONL event log whose header carries the scenario identity
+        (name, family, spec_hash), and one Chrome-trace span file
+        covering the scenario build plus the engine's
+        build/compile/dispatch/eval phases.
     Remaining arguments match ``train.engine.run_experiment``.
     """
     s = get_scenario(name_or_spec)
-    b = build_scenario(s, seed if init_seed is None else init_seed)
-    return run_experiment(
-        b.algo, b.params0, b.train, b.val, metric_fn=b.metric_fn,
-        rounds=s.rounds if rounds is None else rounds, m=b.m, n=b.n,
-        team_frac=s.team_frac, device_frac=s.device_frac, seed=seed,
-        eval_every=eval_every, scan=scan, cohort=s.cohort_size,
-        system=s.system if system is _KEEP_SPEC_SYSTEM else system,
-        trace=trace, trace_dir=trace_dir,
-        event_meta={"scenario": s.name, "family": s.family,
-                    "spec_hash": s.spec_hash()})
+    # span-log ownership: run_scenario is the outermost layer here, so
+    # the scenario-build spans and the engine's spans share one file
+    own_log = SpanLog(meta={"kind": "scenario", "scenario": s.name}) \
+        if trace_dir is not None and current_log() is None else None
+    with contextlib.ExitStack() as stack:
+        if own_log is not None:
+            stack.enter_context(own_log.activate())
+            stack.callback(own_log.save, trace_dir, s.name)
+        b = build_scenario(s, seed if init_seed is None else init_seed)
+        return run_experiment(
+            b.algo, b.params0, b.train, b.val, metric_fn=b.metric_fn,
+            rounds=s.rounds if rounds is None else rounds, m=b.m, n=b.n,
+            team_frac=s.team_frac, device_frac=s.device_frac, seed=seed,
+            eval_every=eval_every, scan=scan, cohort=s.cohort_size,
+            system=s.system if system is _KEEP_SPEC_SYSTEM else system,
+            trace=trace, trace_dir=trace_dir,
+            event_meta={"scenario": s.name, "family": s.family,
+                        "spec_hash": s.spec_hash()})
 
 
 def sweep_scenario(name_or_spec, grid=({},), seeds=(0,), *,
@@ -174,14 +194,21 @@ def sweep_scenario(name_or_spec, grid=({},), seeds=(0,), *,
     if isinstance(seeds, int):
         seeds = (seeds,)
     seeds = tuple(int(x) for x in seeds)
-    b = build_scenario(s, seeds[0] if seeds else 0)
-    return run_sweep(
-        b.algo, grid, seeds, lambda sd: _params0(b.config, int(sd)),
-        b.train, b.val, metric_fn=b.metric_fn,
-        rounds=s.rounds if rounds is None else rounds, m=b.m, n=b.n,
-        team_frac=s.team_frac, device_frac=s.device_frac,
-        eval_every=eval_every, mesh=mesh, cohort=s.cohort_size,
-        system=s.system if system is _KEEP_SPEC_SYSTEM else system,
-        trace=trace, trace_dir=trace_dir,
-        event_meta={"scenario": s.name, "family": s.family,
-                    "spec_hash": s.spec_hash()})
+    own_log = SpanLog(meta={"kind": "scenario_sweep",
+                            "scenario": s.name}) \
+        if trace_dir is not None and current_log() is None else None
+    with contextlib.ExitStack() as stack:
+        if own_log is not None:
+            stack.enter_context(own_log.activate())
+            stack.callback(own_log.save, trace_dir, f"sweep-{s.name}")
+        b = build_scenario(s, seeds[0] if seeds else 0)
+        return run_sweep(
+            b.algo, grid, seeds, lambda sd: _params0(b.config, int(sd)),
+            b.train, b.val, metric_fn=b.metric_fn,
+            rounds=s.rounds if rounds is None else rounds, m=b.m, n=b.n,
+            team_frac=s.team_frac, device_frac=s.device_frac,
+            eval_every=eval_every, mesh=mesh, cohort=s.cohort_size,
+            system=s.system if system is _KEEP_SPEC_SYSTEM else system,
+            trace=trace, trace_dir=trace_dir,
+            event_meta={"scenario": s.name, "family": s.family,
+                        "spec_hash": s.spec_hash()})

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.kernels.quantize.ops import dequantize_int8, quantize_int8
 from repro.kernels.quantize.ref import LANES
+from repro.obs.spans import span
 from repro.train.checkpoint import load_checkpoint_arrays, save_checkpoint
 
 __all__ = ["ENCODINGS", "ModelStore"]
@@ -118,6 +119,8 @@ class ModelStore:
         self.n = int(n)
         self.cache_size = int(cache_size)
         self._cache: OrderedDict = OrderedDict()
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     def tree_flatten(self):
         """Pytree protocol: the three tiers are leaves; layout is aux.
@@ -145,15 +148,16 @@ class ModelStore:
         if encoding not in ENCODINGS:
             raise ValueError(
                 f"unknown encoding {encoding!r}; want one of {ENCODINGS}")
-        g = jax.tree.map(jnp.asarray, algo.serving_params(state))
-        team = jax.vmap(lambda t: algo.serving_params(state, t))(
-            jnp.arange(m))
-        dev = jax.vmap(lambda t: jax.vmap(
-            lambda d: algo.serving_params(state, t, d))(jnp.arange(n)))(
-            jnp.arange(m))
-        payload = _encode_device_tier(dev, team, encoding)
-        return cls(g, team, payload, encoding=encoding, m=m, n=n,
-                   cache_size=cache_size)
+        with span("store_export", encoding=encoding, m=m, n=n):
+            g = jax.tree.map(jnp.asarray, algo.serving_params(state))
+            team = jax.vmap(lambda t: algo.serving_params(state, t))(
+                jnp.arange(m))
+            dev = jax.vmap(lambda t: jax.vmap(
+                lambda d: algo.serving_params(state, t, d))(
+                jnp.arange(n)))(jnp.arange(m))
+            payload = _encode_device_tier(dev, team, encoding)
+            return cls(g, team, payload, encoding=encoding, m=m, n=n,
+                       cache_size=cache_size)
 
     @classmethod
     def from_result(cls, algo, result, *, m: int, n: int,
@@ -217,6 +221,37 @@ class ModelStore:
                                        jnp.broadcast_to(g, tm.shape)))
         return jax.tree.map(pick, self.global_params, team_rows, dev_rows)
 
+    def resolve_tiers(self, team, device):
+        """Per-batch tier-resolution counts, fully in-graph.
+
+        Returns ``{"device", "team", "global"}`` int32 scalars counting
+        how many requests in the batch resolved at each tier under the
+        same masks :meth:`gather` uses (XLA CSEs the shared subgraph
+        when both ride one jitted step), so the three always sum to the
+        batch size.
+        """
+        team = jnp.asarray(team, jnp.int32)
+        device = jnp.asarray(device, jnp.int32)
+        ok_t = (team >= 0) & (team < self.m)
+        ok_d = ok_t & (device >= 0) & (device < self.n)
+        return {"device": jnp.sum(ok_d.astype(jnp.int32)),
+                "team": jnp.sum((ok_t & ~ok_d).astype(jnp.int32)),
+                "global": jnp.sum((~ok_t).astype(jnp.int32))}
+
+    def cache_stats(self) -> dict:
+        """Host-side LRU telemetry: ``{hits, misses, hit_rate, size}``.
+        ``hit_rate`` is hits / (hits + misses), 0.0 before any lookup."""
+        total = self.cache_hits + self.cache_misses
+        return {"hits": self.cache_hits, "misses": self.cache_misses,
+                "hit_rate": self.cache_hits / total if total else 0.0,
+                "size": len(self._cache)}
+
+    def reset_cache_stats(self) -> None:
+        """Zero the hit/miss counters (cached entries stay). Call after
+        warm-up so timed traffic reports a clean hit rate."""
+        self.cache_hits = 0
+        self.cache_misses = 0
+
     def params_for(self, team=None, device=None):
         """Single-principal lookup with the host-side LRU in front.
 
@@ -231,8 +266,10 @@ class ModelStore:
         key = (int(team), None if device is None else int(device))
         hit = self._cache.get(key)
         if hit is not None:
+            self.cache_hits += 1
             self._cache.move_to_end(key)
             return hit
+        self.cache_misses += 1
         t = jnp.asarray([key[0]], jnp.int32)
         d = jnp.asarray([-1 if device is None else key[1]], jnp.int32)
         val = jax.tree.map(lambda l: l[0], self.gather(t, d))
@@ -253,9 +290,10 @@ class ModelStore:
         (`repro.train.checkpoint` zip-of-npy format)."""
         tree = {"global": self.global_params, "team": self.team_params,
                 "device": self.device_payload}
-        save_checkpoint(path, tree, metadata={
-            "kind": "model_store", "encoding": self.encoding,
-            "m": self.m, "n": self.n, "cache_size": self.cache_size})
+        with span("store_save", encoding=self.encoding):
+            save_checkpoint(path, tree, metadata={
+                "kind": "model_store", "encoding": self.encoding,
+                "m": self.m, "n": self.n, "cache_size": self.cache_size})
 
     @classmethod
     def load(cls, path: str, *, cache_size: int | None = None):
@@ -263,18 +301,19 @@ class ModelStore:
         needed; the nested layout is recovered from the manifest's key
         paths (stores are nested string-keyed mappings by construction).
         """
-        arrays, meta = load_checkpoint_arrays(path)
-        if meta.get("kind") != "model_store":
-            raise ValueError(f"{path!r} is not a saved ModelStore "
-                             f"(metadata kind={meta.get('kind')!r})")
-        root: dict = {}
-        for key, arr in arrays.items():
-            parts = key.split("/")
-            d = root
-            for p in parts[:-1]:
-                d = d.setdefault(p, {})
-            d[parts[-1]] = jnp.asarray(arr)
-        return cls(root["global"], root["team"], root["device"],
-                   encoding=meta["encoding"], m=meta["m"], n=meta["n"],
-                   cache_size=(meta.get("cache_size", 64)
-                               if cache_size is None else cache_size))
+        with span("store_load"):
+            arrays, meta = load_checkpoint_arrays(path)
+            if meta.get("kind") != "model_store":
+                raise ValueError(f"{path!r} is not a saved ModelStore "
+                                 f"(metadata kind={meta.get('kind')!r})")
+            root: dict = {}
+            for key, arr in arrays.items():
+                parts = key.split("/")
+                d = root
+                for p in parts[:-1]:
+                    d = d.setdefault(p, {})
+                d[parts[-1]] = jnp.asarray(arr)
+            return cls(root["global"], root["team"], root["device"],
+                       encoding=meta["encoding"], m=meta["m"], n=meta["n"],
+                       cache_size=(meta.get("cache_size", 64)
+                                   if cache_size is None else cache_size))

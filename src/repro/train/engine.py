@@ -61,7 +61,9 @@ from repro.comm import CommLedger
 from repro.core.participation import sample_cohort, sample_masks
 from repro.kernels.interface import dispatch_key
 from repro.obs.events import write_run
+from repro.obs.health import HealthReport
 from repro.obs.profiling import compiled_cost, profile_ctx
+from repro.obs.spans import SpanLog, current_log, span
 from repro.obs.trace import RunTrace, TraceConfig, eval_points
 from repro.system import (Timeline, get_profile, simulate_round,
                           workload_for)
@@ -99,6 +101,7 @@ class FLResult:
     timeline: Optional[Timeline] = None  # per-round simulated clock
     sim_seconds: list = field(default_factory=list)  # cum sim time @ evals
     trace: Optional[RunTrace] = None     # per-round probe streams (obs)
+    health: Optional[HealthReport] = None  # per-round detector streams
     rounds: int = 0                      # round budget this result ran
     eval_every: int = 1                  # eval cadence (aligns histories)
     dispatches: int = 0                  # jitted calls that executed it
@@ -152,7 +155,8 @@ def _round_body(algo, m, n, team_frac, device_frac, system=None,
     algorithm round, and a dict of realized per-round outputs — gated
     participation counts, plus simulated time and straggler counts when
     a system model is active, plus ``probe:``-prefixed scalar
-    diagnostics when a `TraceConfig` is.
+    diagnostics when a `TraceConfig` is (and ``health:``-prefixed
+    detector values when its ``health`` flag is on too).
 
     system: None, or a static ``(SystemSpec skeleton, RoundWorkload)``
     pair; the spec's float values arrive as the traced ``sleaves``
@@ -226,6 +230,12 @@ def _round_body(algo, m, n, team_frac, device_frac, system=None,
                                       device_mask=dm, trace=trace)
             out.update({f"probe:{k}": jnp.asarray(v, jnp.float32)
                         for k, v in probes.items()})
+            if trace.health:
+                checks = algo.health_round(prev, state, data,
+                                           team_mask=tm, device_mask=dm,
+                                           trace=trace)
+                out.update({f"health:{k}": jnp.asarray(v, jnp.float32)
+                            for k, v in checks.items()})
         if cohort is None:
             return (state, key), out
         cdev, crest, _ = split_device_state(algo, state, m, cohort)
@@ -358,12 +368,19 @@ def run_experiment(algo, params0, train_data, val_data, *,
     in deadline mode — drop stragglers from the participation masks;
     the result grows a `Timeline` and `sim_seconds` history.
     trace: optional `repro.obs.TraceConfig` (or True for the default
-    one): emit per-round probe scalars as extra scan outputs, assembled
-    into ``FLResult.trace``; also gates the cost-analysis capture and
-    the ``jax.profiler`` context. None (default) leaves the compiled
-    program — and the trajectory — untouched.
+    one): emit per-round probe scalars — and, under ``trace.health``,
+    the algorithm's health detectors — as extra scan outputs, assembled
+    into ``FLResult.trace`` / ``FLResult.health``; also gates the
+    cost-analysis capture, the ``jax.profiler`` context, and
+    ``trace.fail_fast`` (raise `repro.obs.health.HealthError` naming
+    the first bad round as soon as a dispatched chunk's detectors
+    fire). None (default) leaves the compiled program — and the
+    trajectory — untouched.
     trace_dir: when set, write the run's JSONL event log (header / eval
-    points / footer, `repro.obs.events`) into this directory;
+    points / footer, `repro.obs.events`) into this directory, plus a
+    Chrome-trace span file (`repro.obs.spans`) covering
+    build/compile/dispatch/eval — unless a caller already activated a
+    `SpanLog`, in which case our spans land there and the caller saves;
     ``event_meta`` is merged into the header (scenario identity etc.).
     cohort: optional cohort width for the virtualized engine (module
     docstring / DESIGN.md §11): only a sampled (M, cohort) slice of the
@@ -372,6 +389,31 @@ def run_experiment(algo, params0, train_data, val_data, *,
     cover cohort devices only. ``team_frac``/``device_frac`` then
     sample within the cohort.
     """
+    kw = dict(metric_fn=metric_fn, rounds=rounds, m=m, n=n,
+              team_frac=team_frac, device_frac=device_frac, seed=seed,
+              eval_every=eval_every, scan=scan, system=system,
+              trace=trace, trace_dir=trace_dir, event_meta=event_meta,
+              cohort=cohort)
+    # span-log ownership (repro.obs.spans): the outermost layer with a
+    # trace_dir creates, activates, and saves one; when a caller
+    # (run_scenario, the scenarios CLI) already activated a log, our
+    # spans land there and the caller saves
+    if trace_dir is None or current_log() is not None:
+        return _run_experiment(algo, params0, train_data, val_data, **kw)
+    tag = getattr(algo, "name", None) or "run"
+    log = SpanLog(meta={"kind": "experiment", "algo": tag})
+    with log.activate():
+        try:
+            return _run_experiment(algo, params0, train_data, val_data,
+                                   **kw)
+        finally:
+            log.save(trace_dir, tag=tag)
+
+
+def _run_experiment(algo, params0, train_data, val_data, *, metric_fn,
+                    rounds, m, n, team_frac, device_frac, seed,
+                    eval_every, scan, system, trace, trace_dir,
+                    event_meta, cohort) -> FLResult:
     check_participation(algo, team_frac, device_frac)
     if cohort is not None:
         cohort = int(cohort)
@@ -380,21 +422,24 @@ def run_experiment(algo, params0, train_data, val_data, *,
                 f"cohort must be in [1, n_devices={n}], got {cohort}")
     if trace is True:
         trace = TraceConfig()
-    state = algo.init_state(params0, m, n)
-    key = jax.random.PRNGKey(seed)
-    n_chunks, rem = divmod(rounds, eval_every)
+    with span("build", algo=getattr(algo, "name", "?"), m=m, n=n,
+              rounds=rounds):
+        state = algo.init_state(params0, m, n)
+        key = jax.random.PRNGKey(seed)
+        n_chunks, rem = divmod(rounds, eval_every)
 
-    sys_key = sleaves = None
-    if system is not None:
-        system = get_profile(system)
-        sys_key = (system.skeleton(), workload_for(algo, params0))
-        sleaves, _ = system.tree_floats()
+        sys_key = sleaves = None
+        if system is not None:
+            system = get_profile(system)
+            sys_key = (system.skeleton(), workload_for(algo, params0))
+            sleaves, _ = system.tree_floats()
 
-    skel, hleaves = hparam_skeleton(algo)
-    kdisp = dispatch_key()
-    scanned = _scan_program(skel, metric_fn, m, n, team_frac, device_frac,
-                            sys_key, trace, kdisp, cohort)
-    eval_jit = _eval_program(skel, metric_fn, kdisp)
+        skel, hleaves = hparam_skeleton(algo)
+        kdisp = dispatch_key()
+        scanned = _scan_program(skel, metric_fn, m, n, team_frac,
+                                device_frac, sys_key, trace, kdisp,
+                                cohort)
+        eval_jit = _eval_program(skel, metric_fn, kdisp)
 
     res = FLResult(rounds=rounds, eval_every=eval_every, cohort=cohort,
                    population=n if cohort is not None else None)
@@ -420,19 +465,38 @@ def run_experiment(algo, params0, train_data, val_data, *,
             outs_flat.setdefault(k, []).extend(
                 np.asarray(v).reshape(-1).tolist())
 
+    fail_ctx = (event_meta or {}).get("scenario") \
+        or getattr(algo, "name", None) or "run"
+
+    def check_health():
+        """Fail fast on the detector streams accumulated so far —
+        outs_flat spans chunks, so indices are global 1-based rounds."""
+        if trace is None or not (trace.health and trace.fail_fast):
+            return
+        HealthReport(series={
+            k.split(":", 1)[1]: v for k, v in outs_flat.items()
+            if k.startswith("health:")}).check(fail_ctx)
+
+    compile_span = None
     with profile_ctx(trace):
         if scan:
             for length, n_steps in ((eval_every, n_chunks), (rem, 1)):
                 if length == 0 or n_steps == 0:
                     continue
-                (state, key), (metrics, outs) = scanned(
-                    hleaves, state, key, train_data, val_data,
-                    sleaves=sleaves, length=length, n_steps=n_steps)
-                res.dispatches += 1
-                if t_first is None:
-                    jax.block_until_ready(state)
-                    t_first = time.time()
-                record(metrics, outs)
+                first = t_first is None
+                with span("compile" if first else "dispatch",
+                          chunks=n_steps, rounds_per_chunk=length) as sp:
+                    (state, key), (metrics, outs) = scanned(
+                        hleaves, state, key, train_data, val_data,
+                        sleaves=sleaves, length=length, n_steps=n_steps)
+                    res.dispatches += 1
+                    if first:
+                        jax.block_until_ready(state)
+                        t_first = time.time()
+                        compile_span = sp
+                with span("eval", chunks=n_steps):
+                    record(metrics, outs)
+                check_health()
         else:
             if cohort is None:
                 round_body = _round_body(algo, m, n, team_frac,
@@ -445,11 +509,16 @@ def run_experiment(algo, params0, train_data, val_data, *,
                                          cohort=cohort, merge=mrg)
                 carry, unpack = (dev, rest, key), lambda c: mrg(c[0], c[1])
             for t in range(rounds):
-                carry, outs = round_body(carry, None, train_data, sleaves)
-                res.dispatches += 1
-                if t_first is None:
-                    jax.block_until_ready(carry)
-                    t_first = time.time()
+                first = t_first is None
+                with span("compile" if first else "dispatch",
+                          round=t + 1) as sp:
+                    carry, outs = round_body(carry, None, train_data,
+                                             sleaves)
+                    res.dispatches += 1
+                    if first:
+                        jax.block_until_ready(carry)
+                        t_first = time.time()
+                        compile_span = sp
                 for k, v in outs.items():
                     if k == "cohort_idx":
                         res.cohort_indices.append(
@@ -457,13 +526,16 @@ def run_experiment(algo, params0, train_data, val_data, *,
                         continue
                     outs_flat.setdefault(k, []).append(
                         float(v) if k == "t_round"
-                        or k.startswith("probe:") else int(v))
+                        or k.startswith(("probe:", "health:")) else int(v))
+                check_health()
                 if (t + 1) % eval_every == 0 or t == rounds - 1:
-                    metrics = eval_jit(hleaves, unpack(carry), train_data,
-                                       val_data)
-                    res.dispatches += 1
-                    for k, v in metrics.items():
-                        getattr(res, _METRIC_FIELDS[k]).append(float(v))
+                    with span("eval", round=t + 1):
+                        metrics = eval_jit(hleaves, unpack(carry),
+                                           train_data, val_data)
+                        res.dispatches += 1
+                        for k, v in metrics.items():
+                            getattr(res, _METRIC_FIELDS[k]).append(
+                                float(v))
             state, key = unpack(carry), carry[-1]
 
     t_end = time.time()
@@ -474,6 +546,9 @@ def run_experiment(algo, params0, train_data, val_data, *,
 
     probe_series = {k.split(":", 1)[1]: outs_flat.pop(k)
                     for k in sorted(outs_flat) if k.startswith("probe:")}
+    health_series = {k.split(":", 1)[1]: outs_flat.pop(k)
+                     for k in sorted(outs_flat)
+                     if k.startswith("health:")}
     if trace is not None:
         cost = None
         if trace.cost_analysis and scan and n_chunks:
@@ -481,7 +556,13 @@ def run_experiment(algo, params0, train_data, val_data, *,
             cost = compiled_cost(scanned, hleaves, state, key, train_data,
                                  val_data, sleaves=sleaves,
                                  length=eval_every, n_steps=n_chunks)
+            if cost and compile_span is not None:
+                # late-stamp the static cost next to the measured compile
+                # time — Span.set works after close, the log saves later
+                compile_span.set(**cost)
         res.trace = RunTrace(config=trace, series=probe_series, cost=cost)
+        if trace.health:
+            res.health = HealthReport(series=health_series)
 
     res.participation = list(zip(
         [int(x) for x in outs_flat.get("teams", [])],

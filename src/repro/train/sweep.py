@@ -52,6 +52,8 @@ import numpy as np
 
 from repro.kernels.interface import dispatch_key
 from repro.obs.events import write_sweep
+from repro.obs.health import HealthReport
+from repro.obs.spans import SpanLog, current_log, span
 from repro.obs.trace import RunTrace, TraceConfig
 from repro.system import get_profile
 from repro.train.engine import (_METRIC_FIELDS, FLResult,
@@ -258,7 +260,9 @@ def _collect(prep: _Prepared, states, metric_hist, outs_hist, *,
     metric_hist: field -> list of (S, n_steps) arrays; outs_hist: list of
     per-segment dicts of (S, n_steps, length) per-round output arrays.
     trace: the sweep's TraceConfig — when set, each config's ``probe:``
-    output streams become a per-config `RunTrace`.
+    output streams become a per-config `RunTrace` (and its ``health:``
+    streams a per-config `HealthReport`, checked immediately per config
+    under ``trace.fail_fast``).
     cohort/population: the sweep's virtualized-engine dims, recorded on
     each FLResult; per-config ``cohort_idx`` streams land in
     ``FLResult.cohort_indices``.
@@ -290,6 +294,12 @@ def _collect(prep: _Prepared, states, metric_hist, outs_hist, *,
             res.trace = RunTrace(config=trace, series={
                 k.split(":", 1)[1]: flat.pop(k)
                 for k in sorted(flat) if k.startswith("probe:")})
+            if trace.health:
+                res.health = HealthReport(series={
+                    k.split(":", 1)[1]: flat.pop(k)
+                    for k in sorted(flat) if k.startswith("health:")})
+                if trace.fail_fast:
+                    res.health.check(f"config {i}")
         res.participation = list(zip([int(x) for x in flat["teams"]],
                                      [int(x) for x in flat["devices"]]))
         if "t_round" in flat:
@@ -349,6 +359,31 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
     ``[run_experiment(rebuild(cfg), ...) for cfg in configs]`` is pinned
     by tests/test_sweep.py.
     """
+    kw = dict(metric_fn=metric_fn, rounds=rounds, m=m, n=n,
+              team_frac=team_frac, device_frac=device_frac,
+              eval_every=eval_every, mesh=mesh, system=system,
+              trace=trace, trace_dir=trace_dir, event_meta=event_meta,
+              cohort=cohort)
+    # span-log ownership mirrors run_experiment: outermost trace_dir
+    # caller creates and saves; an already-active log absorbs our spans
+    if trace_dir is None or current_log() is not None:
+        return _run_sweep(algo, grid, seeds, params0, train_data,
+                          val_data, **kw)
+    tag = f"sweep-{getattr(algo, 'name', None) or 'run'}"
+    log = SpanLog(meta={"kind": "sweep", "algo": getattr(algo, "name",
+                                                         None)})
+    with log.activate():
+        try:
+            return _run_sweep(algo, grid, seeds, params0, train_data,
+                              val_data, **kw)
+        finally:
+            log.save(trace_dir, tag=tag)
+
+
+def _run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
+               metric_fn, rounds, m, n, team_frac, device_frac,
+               eval_every, mesh, system, trace, trace_dir, event_meta,
+               cohort) -> FLSweepResult:
     if trace is True:
         trace = TraceConfig()
     if cohort is not None:
@@ -356,8 +391,10 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
         if not 1 <= cohort <= n:
             raise ValueError(
                 f"cohort must be in [1, n_devices={n}], got {cohort}")
-    prep = _prepare(algo, grid, seeds, params0, m, n, team_frac,
-                    device_frac, system)
+    with span("build", algo=getattr(algo, "name", "?"), m=m, n=n,
+              rounds=rounds):
+        prep = _prepare(algo, grid, seeds, params0, m, n, team_frac,
+                        device_frac, system)
     states, keys, hstack, sstack = (prep.states, prep.keys, prep.hstack,
                                     prep.sstack)
 
@@ -396,12 +433,15 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
     for length, n_steps in ((eval_every, n_chunks), (rem, 1)):
         if length == 0 or n_steps == 0:
             continue
-        (states, keys), (metrics, outs) = swept(
-            hstack, states, keys, sstack, train_data, val_data,
-            length=length, n_steps=n_steps)
-        if t_first is None:
-            jax.block_until_ready(states)
-            t_first = time.time()
+        first = t_first is None
+        with span("compile" if first else "dispatch",
+                  configs=len(prep.configs), chunks=n_steps):
+            (states, keys), (metrics, outs) = swept(
+                hstack, states, keys, sstack, train_data, val_data,
+                length=length, n_steps=n_steps)
+            if first:
+                jax.block_until_ready(states)
+                t_first = time.time()
         dispatches += 1
         for k, v in metrics.items():
             metric_hist.setdefault(k, []).append(np.asarray(v))
@@ -409,12 +449,13 @@ def run_sweep(algo, grid, seeds, params0, train_data, val_data, *,
     t_end = time.time()
     t_first = t_first if t_first is not None else t_end
 
-    out = _collect(prep, states, metric_hist, outs_hist,
-                   seconds=t_end - t0, compile_seconds=t_first - t0,
-                   run_seconds=t_end - t_first, dispatches=dispatches,
-                   rounds=rounds, eval_every=eval_every, trace=trace,
-                   cohort=cohort,
-                   population=n if cohort is not None else None)
+    with span("collect", configs=len(prep.configs)):
+        out = _collect(prep, states, metric_hist, outs_hist,
+                       seconds=t_end - t0, compile_seconds=t_first - t0,
+                       run_seconds=t_end - t_first, dispatches=dispatches,
+                       rounds=rounds, eval_every=eval_every, trace=trace,
+                       cohort=cohort,
+                       population=n if cohort is not None else None)
     if trace_dir is not None:
         out.events_path = str(write_sweep(
             trace_dir, out, algo=algo,

@@ -35,6 +35,10 @@ PUBLIC_MODULES = (
     "repro.obs.events",
     "repro.obs.profiling",
     "repro.obs.regress",
+    "repro.obs.spans",
+    "repro.obs.metrics",
+    "repro.obs.health",
+    "repro.obs.report",
     "repro.train.metrics",
     "repro.serve",
     "repro.serve.store",

@@ -1,0 +1,179 @@
+"""In-graph health monitors (repro.obs.health): off ⇒ identical
+trajectories, scan ≡ dispatch detector streams, fail-fast round naming,
+and per-config health on sweeps."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PerMFL
+from repro.core.permfl import PerMFLHParams
+from repro.obs import TraceConfig
+from repro.obs.health import (HealthError, HealthReport, first_bad_round,
+                              nonfinite_count)
+from repro.train.engine import run_experiment
+from repro.train.sweep import run_sweep
+
+M, N, D = 3, 4, 5
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum((params - batch["c"]) ** 2)
+
+
+def neg_loss(params, batch):
+    return -quad_loss(params, batch)
+
+
+@pytest.fixture(scope="module")
+def quad_data():
+    rng = np.random.default_rng(0)
+    return {"c": jnp.asarray(rng.normal(size=(M, N, D)).astype(np.float32))}
+
+
+HP = PerMFLHParams(alpha=0.05, eta=0.04, beta=0.3, lam=0.8, gamma=2.0,
+                   k_team=3, l_local=4)
+BAD_HP = dataclasses.replace(HP, eta=1e30)  # overflows at round 1
+KW = dict(metric_fn=neg_loss, rounds=6, m=M, n=N, seed=3, eval_every=2,
+          team_frac=0.5, device_frac=0.75)
+
+
+def _run(data, *, hp=HP, trace=None, scan=True, rounds=6):
+    algo = PerMFL(quad_loss, hp)
+    kw = dict(KW, rounds=rounds)
+    return run_experiment(algo, jnp.zeros(D), data, data, scan=scan,
+                          trace=trace, **kw)
+
+
+# ---------------------------------------------------------------------------
+# unit: the detector primitives
+# ---------------------------------------------------------------------------
+
+def test_nonfinite_count_counts_only_inexact_leaves():
+    tree = {"w": jnp.array([1.0, jnp.nan, jnp.inf]),
+            "steps": jnp.array([1, 2, 3]),      # int leaf: never counted
+            "b": jnp.array([[0.0, -jnp.inf]])}
+    assert float(nonfinite_count(tree)) == 3.0
+
+
+def test_first_bad_round_is_one_based():
+    assert first_bad_round({"d": [0.0, 0.0, 2.0, 0.0]}) == 3
+    assert first_bad_round({"d": [0.0, 0.0]}) is None
+    # nonfinite detector value = bad (the reduction itself saw garbage)
+    assert first_bad_round({"d": [float("nan"), 0.0]}) == 1
+    assert first_bad_round({}) is None
+    # earliest round across streams wins
+    assert first_bad_round({"a": [0.0, 1.0], "b": [3.0, 0.0]}) == 1
+
+
+def test_health_report_check_raises_with_round_and_detectors():
+    rep = HealthReport(series={"nonfinite_params": [0.0, 5.0],
+                               "loss_exploded": [0.0, 0.0]})
+    assert not rep.ok()
+    assert rep.first_bad_round() == 2
+    with pytest.raises(HealthError) as ei:
+        rep.check("unit-test")
+    assert ei.value.round_index == 2
+    assert "round 2" in str(ei.value) and "unit-test" in str(ei.value)
+    assert "nonfinite_params" in ei.value.detectors
+    assert "loss_exploded" not in ei.value.detectors
+
+    ok = HealthReport(series={"nonfinite_params": [0.0, 0.0]})
+    ok.check("never-raises")
+    assert ok.summary()["ok"] is True
+
+
+# ---------------------------------------------------------------------------
+# identity: monitors on vs off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scan", (True, False))
+def test_health_on_off_trajectories_and_state_identical(quad_data, scan):
+    off = _run(quad_data, trace=TraceConfig(health=False), scan=scan)
+    on = _run(quad_data, trace=TraceConfig(health=True), scan=scan)
+    bare = _run(quad_data, trace=None, scan=scan)
+    for a in (on, bare):
+        np.testing.assert_array_equal(np.asarray(off.pm_acc),
+                                      np.asarray(a.pm_acc))
+        np.testing.assert_array_equal(np.asarray(off.train_loss),
+                                      np.asarray(a.train_loss))
+        for lo, la in zip(jax.tree.leaves(off.state),
+                          jax.tree.leaves(a.state)):
+            np.testing.assert_array_equal(np.asarray(lo), np.asarray(la))
+    assert off.health is None and bare.health is None
+    assert on.health is not None and on.health.ok()
+
+
+def test_health_series_scan_matches_dispatch(quad_data):
+    tc = TraceConfig(health=True)
+    rs = _run(quad_data, trace=tc, scan=True)
+    rd = _run(quad_data, trace=tc, scan=False)
+    assert set(rs.health.series) == set(rd.health.series)
+    assert {"nonfinite_params", "nonfinite_update",
+            "loss_exploded"} <= set(rs.health.series)
+    for k in rs.health.series:
+        np.testing.assert_allclose(np.asarray(rs.health.series[k]),
+                                   np.asarray(rd.health.series[k]))
+        assert len(rs.health.series[k]) == KW["rounds"]
+
+
+# ---------------------------------------------------------------------------
+# fail-fast
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scan", (True, False))
+def test_fail_fast_names_first_bad_round(quad_data, scan):
+    with pytest.raises(HealthError) as ei:
+        _run(quad_data, hp=BAD_HP, scan=scan,
+             trace=TraceConfig(health=True, fail_fast=True))
+    assert ei.value.round_index == 1
+    assert "round 1" in str(ei.value)
+
+
+def test_no_fail_fast_still_reports(quad_data):
+    res = _run(quad_data, hp=BAD_HP,
+               trace=TraceConfig(health=True, fail_fast=False))
+    assert not res.health.ok()
+    assert res.health.first_bad_round() == 1
+    s = res.health.summary()
+    assert s["ok"] is False and s["first_bad_round"] == 1
+
+
+def test_health_off_never_raises_on_divergence(quad_data):
+    res = _run(quad_data, hp=BAD_HP,
+               trace=TraceConfig(health=False, fail_fast=True))
+    assert res.health is None  # detectors never ran
+
+
+# ---------------------------------------------------------------------------
+# sweep: per-config health
+# ---------------------------------------------------------------------------
+
+SWEEP_KW = {k: v for k, v in KW.items() if k != "seed"}
+
+
+def test_sweep_attaches_per_config_health(quad_data):
+    algo = PerMFL(quad_loss, HP)
+    grid = [{"eta": 0.04}, {"eta": 1e30}]
+    sweep = run_sweep(algo, grid, (0,), lambda s: jnp.zeros(D),
+                      quad_data, quad_data,
+                      trace=TraceConfig(health=True), **SWEEP_KW)
+    assert len(sweep.results) == 2
+    healthy, sick = sweep.results
+    assert healthy.health is not None and healthy.health.ok()
+    assert not sick.health.ok()
+    assert sick.health.first_bad_round() == 1
+
+
+def test_sweep_fail_fast_names_config(quad_data):
+    algo = PerMFL(quad_loss, HP)
+    grid = [{"eta": 0.04}, {"eta": 1e30}]
+    with pytest.raises(HealthError) as ei:
+        run_sweep(algo, grid, (0,), lambda s: jnp.zeros(D),
+                  quad_data, quad_data,
+                  trace=TraceConfig(health=True, fail_fast=True),
+                  **SWEEP_KW)
+    assert "config 1" in str(ei.value)
+    assert ei.value.round_index == 1

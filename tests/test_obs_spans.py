@@ -1,0 +1,183 @@
+"""Span log, metrics registry, and the joined `obs report` front door
+(repro.obs.spans / .metrics / .report)."""
+import json
+
+import pytest
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               percentile)
+from repro.obs.report import load_artifacts, report_text
+from repro.obs.spans import Span, SpanLog, current_log, span
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_depth_and_durations():
+    log = SpanLog(meta={"kind": "test"})
+    with log.activate():
+        with span("outer", tag="a"):
+            with span("inner"):
+                pass
+        with span("sibling"):
+            pass
+    names = [s.name for s in log.spans]
+    assert names == ["outer", "inner", "sibling"]  # recorded at open
+    depths = {s.name: s.depth for s in log.spans}
+    assert depths["outer"] == 0 and depths["inner"] == 1
+    assert depths["sibling"] == 0
+    assert all(s.dur >= 0 for s in log.spans)
+
+
+def test_span_is_noop_without_active_log():
+    assert current_log() is None
+    with span("orphan") as sp:
+        sp.set(x=1)  # must not raise on the null span
+    assert current_log() is None
+
+
+def test_span_set_after_close_lands_in_chrome_args():
+    log = SpanLog()
+    with log.activate():
+        with span("compile") as sp:
+            pass
+        sp.set(flops=123.0, skipme=[1, 2])  # late stamp, post-close
+    ev = [e for e in log.to_chrome()["traceEvents"]
+          if e.get("name") == "compile"]
+    assert len(ev) == 1 and ev[0]["ph"] == "X"
+    assert ev[0]["args"]["flops"] == 123.0
+    # non-scalar args are filtered out of the Chrome export
+    assert "skipme" not in ev[0]["args"]
+    assert ev[0]["dur"] >= 0 and isinstance(ev[0]["ts"], (int, float))
+
+
+def test_span_log_save_writes_perfetto_loadable_json(tmp_path):
+    log = SpanLog(meta={"kind": "test"})
+    with log.activate():
+        with span("a"):
+            with span("b"):
+                pass
+    path = log.save(tmp_path, tag="unit/run")
+    assert path.name.startswith("spans-unit_run-")
+    doc = json.loads(path.read_text())
+    assert {e["name"] for e in doc["traceEvents"]} == {"a", "b"}
+    tids = {e["name"]: e["tid"] for e in doc["traceEvents"]}
+    assert tids["b"] == tids["a"] + 1  # nesting depth as track
+
+
+def test_span_summary_aggregates_by_name():
+    log = SpanLog()
+    with log.activate():
+        for _ in range(3):
+            with span("dispatch"):
+                pass
+        with span("eval"):
+            pass
+    s = log.summary()
+    assert s["dispatch"]["count"] == 3 and s["eval"]["count"] == 1
+    assert s["dispatch"]["total_ms"] >= 0
+
+
+def test_nested_activation_is_rejected_but_outer_log_collects():
+    outer = SpanLog()
+    inner = SpanLog()
+    with outer.activate():
+        # a second layer trying to own a log just contributes spans to
+        # the active one instead (the ownership rule engine/runner use)
+        assert current_log() is outer
+        with span("from-inner-layer"):
+            pass
+        with pytest.raises(RuntimeError):
+            with inner.activate():
+                pass
+    assert [s.name for s in outer.spans] == ["from-inner-layer"]
+    assert inner.spans == []
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_percentile_nearest_rank():
+    vals = list(range(1, 101))  # 1..100
+    assert percentile(vals, 50) == 50
+    assert percentile(vals, 95) == 95
+    assert percentile(vals, 99) == 99
+    assert percentile(vals, 100) == 100
+    assert percentile([7.0], 99) == 7.0
+    # 64 samples: p95 and p99 land on different ranks (the smoke-replay
+    # sizing fix relies on exactly this)
+    v64 = list(range(64))
+    assert percentile(v64, 95) != percentile(v64, 99)
+
+
+def test_counter_gauge_histogram_basics():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = Gauge()
+    g.set(2.5)
+    assert g.value == 2.5
+    h = Histogram()
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4 and s["sum"] == 10.0 and s["max"] == 4.0
+    assert s["p50"] == 2.0
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    reg = MetricsRegistry()
+    assert reg.counter("requests") is reg.counter("requests")
+    assert reg.counter("requests", path="a") is not reg.counter("requests")
+    with pytest.raises(TypeError):
+        reg.gauge("requests")
+
+
+def test_registry_jsonl_and_prometheus_export(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("serving.requests").inc(64)
+    reg.gauge("serving.cache_hit_rate").set(0.75)
+    h = reg.histogram("serving.replay.latency_ms", path="gather")
+    for v in (1.0, 2.0):
+        h.observe(v)
+    p = reg.write_jsonl(tmp_path / "m.jsonl")
+    recs = [json.loads(l) for l in p.read_text().splitlines()]
+    assert {r["metric"] for r in recs} == {
+        "serving.requests", "serving.cache_hit_rate",
+        "serving.replay.latency_ms"}
+    prom = reg.to_prometheus()
+    assert "serving_requests 64" in prom
+    assert "serving_cache_hit_rate 0.75" in prom
+    assert 'serving_replay_latency_ms{path="gather",quantile="0.50"}' \
+        in prom
+    assert "serving_replay_latency_ms_count" in prom
+
+
+# ---------------------------------------------------------------------------
+# the joined report
+# ---------------------------------------------------------------------------
+
+def test_report_joins_spans_and_metrics(tmp_path):
+    log = SpanLog(meta={"kind": "test"})
+    with log.activate():
+        with span("compile") as sp:
+            pass
+        sp.set(flops=10.0)
+    log.save(tmp_path, tag="unit")
+    reg = MetricsRegistry()
+    reg.counter("serving.requests").inc(8)
+    reg.write_jsonl(tmp_path / "metrics-unit.jsonl")
+    art = load_artifacts(tmp_path)
+    assert len(art["spans"]) == 1 and len(art["metrics"]) == 1
+    txt = report_text(tmp_path)
+    assert "compile" in txt and "serving.requests" in txt
+
+
+def test_report_empty_dir(tmp_path):
+    art = load_artifacts(tmp_path)
+    assert not any(art.values())

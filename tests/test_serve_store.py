@@ -237,3 +237,133 @@ def test_replay_traffic_stats_shape():
     assert stats["qps"] > 0
     assert stats["p50_ms"] <= stats["p95_ms"] <= stats["p99_ms"]
     assert stats["device_tier_bytes"] == store.device_tier_nbytes()
+
+
+# ---------------------------------------------------------------------------
+# serving telemetry (tier counts, LRU stats, metrics)
+# ---------------------------------------------------------------------------
+
+def test_tier_counts_sum_to_request_count_and_match_tags():
+    b, state, apply1, pool = _trained("permfl")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n)
+    server = PersonalizedServer(store, apply1)
+    # hand-built batch: 2 personal, 1 unknown device, 1 unknown team
+    ts = np.array([0, 1, 0, b.m + 3])
+    ds = np.array([0, 2, b.n + 5, 0])
+    server.serve(ts, ds, pool[:4])
+    assert server.tier_counts == {"device": 2, "team": 1, "global": 1}
+    # the cached path counts the same ladder host-side
+    server.reset_tier_counts()
+    server.serve_cached(ts, ds, pool[:4])
+    assert server.tier_counts == {"device": 2, "team": 1, "global": 1}
+    assert sum(server.tier_counts.values()) == len(ts)
+
+
+@pytest.mark.parametrize("cached", (False, True))
+def test_replay_tier_counts_sum_to_requests(cached):
+    b, state, apply1, pool = _trained("permfl")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n)
+    server = PersonalizedServer(store, apply1)
+    stats = replay_traffic(server, np.asarray(pool), requests=64,
+                           batch=16, unknown_frac=0.2, seed=1,
+                           cached=cached)
+    tiers = stats["tier_counts"]
+    assert set(tiers) == {"device", "team", "global"}
+    # the warm-up batch's contribution was reset: counts cover exactly
+    # the timed requests
+    assert sum(tiers.values()) == stats["requests"] == 64
+    assert tiers["team"] + tiers["global"] > 0  # unknown_frac fired
+
+
+def test_replay_reports_live_lru_hit_rate():
+    b, state, apply1, pool = _trained("permfl")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n)
+    server = PersonalizedServer(store, apply1)
+    stats = replay_traffic(server, np.asarray(pool), requests=64,
+                           batch=16, seed=1, cached=True)
+    # warm-up populated the hot principals and the counters were reset,
+    # so the timed traffic's hit rate is the steady-state one
+    assert 0.0 < stats["cache_hit_rate"] <= 1.0
+    cs = store.cache_stats()
+    assert cs["hits"] + cs["misses"] > 0
+    assert cs["hit_rate"] == stats["cache_hit_rate"]
+
+
+def test_store_cache_stats_count_and_reset():
+    b, state, apply1, pool = _trained("permfl")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n)
+    store.params_for(0, 0)
+    store.params_for(0, 0)
+    store.params_for(1, 1)
+    assert store.cache_stats()["hits"] == 1
+    assert store.cache_stats()["misses"] == 2
+    assert store.cache_stats()["hit_rate"] == pytest.approx(1 / 3)
+    store.reset_cache_stats()
+    cs = store.cache_stats()
+    assert cs["hits"] == 0 and cs["misses"] == 0 and cs["hit_rate"] == 0.0
+    # cached entries survive the counter reset
+    store.params_for(0, 0)
+    assert store.cache_stats()["hits"] == 1
+
+
+def test_replay_publishes_metrics_and_raw_latencies():
+    from repro.obs.metrics import MetricsRegistry
+
+    b, state, apply1, pool = _trained("permfl")
+    store = ModelStore.from_state(b.algo, state, m=b.m, n=b.n)
+    server = PersonalizedServer(store, apply1)
+    metrics = MetricsRegistry()
+    stats = replay_traffic(server, np.asarray(pool), requests=64,
+                           batch=16, unknown_frac=0.1, seed=1,
+                           cached=True, metrics=metrics)
+    assert len(stats["lat_ms"]) == 64 // 16
+    assert stats["stage_gather_ms"] > 0 and stats["stage_forward_ms"] > 0
+    snap = {(e["metric"], e["type"]): e for e in metrics.snapshot()}
+    assert snap[("serving.requests", "counter")]["value"] == 64
+    tier_total = sum(
+        snap[(f"serving.tier.{t}", "counter")]["value"]
+        for t in ("device", "team", "global"))
+    assert tier_total == 64
+    lat = snap[("serving.replay.latency_ms", "histogram")]
+    assert lat["count"] == 64 // 16
+    assert ("serving.cache_hit_rate", "gauge") in snap
+
+
+# ---------------------------------------------------------------------------
+# zipf_requests workload properties
+# ---------------------------------------------------------------------------
+
+def test_zipf_requests_deterministic_under_fixed_seed():
+    a = zipf_requests(4, 10, 500, alpha=1.3, unknown_frac=0.2, seed=7)
+    b = zipf_requests(4, 10, 500, alpha=1.3, unknown_frac=0.2, seed=7)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    c = zipf_requests(4, 10, 500, alpha=1.3, unknown_frac=0.2, seed=8)
+    assert not (np.array_equal(a[0], c[0]) and np.array_equal(a[1], c[1]))
+
+
+def test_zipf_requests_unknown_split_device_vs_team():
+    m, n, count = 4, 10, 4000
+    teams, devices = zipf_requests(m, n, count, alpha=1.3,
+                                   unknown_frac=0.3, seed=5)
+    bad_dev = devices >= n
+    bad_team = teams >= m
+    # every unknown-team row is also unknown-device (team badness is a
+    # coin flip *within* the bad-device rows), and the split is roughly
+    # half/half of a ~unknown_frac share
+    assert (bad_team <= bad_dev).all()
+    assert 0.2 < bad_dev.mean() < 0.4
+    assert 0.3 < bad_team.sum() / bad_dev.sum() < 0.7
+    # out-of-range tags are exactly the sentinel values
+    assert set(np.unique(devices[bad_dev])) == {n + 1}
+    assert set(np.unique(teams[bad_team])) == {m + 1}
+
+
+def test_zipf_requests_permutation_scatters_hot_set_across_teams():
+    m, n = 8, 8
+    teams, devices = zipf_requests(m, n, 20000, alpha=1.5, seed=11)
+    flat = teams * n + devices
+    top8 = np.argsort(np.bincount(flat, minlength=m * n))[-8:]
+    # without the permutation the 8 hottest principals would be ranks
+    # 0..7 = all of team 0; with it they spread over several teams
+    assert len(set(int(p) // n for p in top8)) >= 3
